@@ -1,0 +1,72 @@
+"""Heuristic ablations: how much each immune mechanism contributes.
+
+Variants:
+  full             — everything on (the paper's configuration)
+  no_damping       — ancestor-transition damping off (limit cycles allowed)
+  no_suppression   — multi-stage delayed suppression of layer finders off
+  no_exploration   — epsilon-random walk off (greedy-only movement)
+
+Metric: completion steps on the NAND layout (mean over seeds; max_steps on
+non-termination — the honest cost of a heuristic's absence).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from repro.core import agent_model
+from repro.core.vlsi import extractor, layout
+
+VARIANTS = {
+    "full": {},
+    "no_damping": {"ancestor_damp": 1.0},
+    "no_suppression": {"finder_suppression": False},
+    "no_exploration": {"walk_eps": 0.0},
+}
+
+
+def _run(lay, n_agents, seed, max_steps, **knobs):
+    grid = extractor.make_grid(lay)
+    model = extractor.make_extractor(n_agents, (grid.shape[1], grid.shape[2]),
+                                     **knobs)
+    key = jax.random.PRNGKey(seed)
+    ka, kr = jax.random.split(key)
+    agents = agent_model.uniform_random_agents(
+        ka, n_agents, grid.shape[1], grid.shape[2], extractor.STATE_SIZE,
+        init_type=extractor.FINDER)
+    _, _, steps = model.run_while(grid, agents, kr, max_steps, extractor.done_fn)
+    return int(steps)
+
+
+def run(n_agents: int = 96, seeds=(0, 1, 2), max_steps: int = 8000,
+        out: str = "benchmarks/results/ablations.csv"):
+    lay = layout.nand_layout()
+    rows = []
+    for name, knobs in VARIANTS.items():
+        steps = [_run(lay, n_agents, s, max_steps, **knobs) for s in seeds]
+        rows.append((name, float(np.mean(steps)), max(steps),
+                     sum(s >= max_steps for s in steps)))
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write("variant,mean_steps,max_steps,timeouts\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--agents", type=int, default=96)
+    args = ap.parse_args()
+    rows = run(n_agents=args.agents)
+    base = rows[0][1]
+    for name, mean, worst, timeouts in rows:
+        print(f"  {name:16s} mean={mean:7.1f} steps  worst={worst}  "
+              f"timeouts={timeouts}  ({mean / base:+.2f}x of full)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Kernel microbenches (interpret-mode timings are indicative only on CPU; the
+structural contract — correctness vs oracle and blocked VMEM tiling — is the
+deliverable; see EXPERIMENTS.md §Methodology)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.grid_step import grid_step, grid_step_ref
+from repro.kernels.moe_gmm import gmm_ref, moe_gmm
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                                    # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    b, h, hk, s, d = 1, 4, 2, 512, 64
+    q = jax.random.normal(key, (b, h, s, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, hk, s, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, hk, s, d))
+    rows.append(("flash_attention_interp", _time(
+        lambda *a: flash_attention(*a, interpret=True), q, k, v),
+        f"b{b}h{h}s{s}d{d}"))
+    rows.append(("flash_attention_ref", _time(attention_ref, q, k, v),
+                 f"b{b}h{h}s{s}d{d}"))
+
+    e, c, dd, f = 8, 128, 64, 128
+    x = jax.random.normal(key, (e, c, dd))
+    w = jax.random.normal(key, (e, dd, f))
+    sizes = jnp.full((e,), c, jnp.int32)
+    rows.append(("moe_gmm_interp", _time(
+        lambda *a: moe_gmm(*a, interpret=True), x, w, sizes), f"e{e}c{c}d{dd}f{f}"))
+    rows.append(("moe_gmm_ref", _time(gmm_ref, x, w, sizes), f"e{e}c{c}d{dd}f{f}"))
+
+    lab = jax.random.randint(key, (80, 128), 0, 99, jnp.int32)
+    cond = (jax.random.uniform(key, (80, 128)) < 0.5).astype(jnp.int32)
+    rows.append(("grid_step_interp", _time(
+        lambda *a: grid_step(*a, interpret=True), lab * cond, cond), "80x128"))
+    rows.append(("grid_step_ref", _time(grid_step_ref, lab * cond, cond),
+                 "80x128"))
+    return rows
+
+
+def main():
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Render the dry-run JSONL into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def load(path="benchmarks/results/dryrun.jsonl"):
+    recs = {}
+    for line in open(path):
+        r = json.loads(line)
+        # last record per cell+pcfg wins (later sweeps overwrite baselines)
+        key = (r["arch"], r["shape"], r["mesh"],
+               json.dumps(r.get("pcfg", {}), sort_keys=True))
+        recs[key] = r
+    return list(recs.values())
+
+
+def table(recs, mesh="16x16"):
+    rows = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | — |")
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"{r['dominant']} | {r['roofline_frac']:.2f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |")
+    head = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+            "dominant | roofline | fits HBM |\n|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="benchmarks/results/dryrun.jsonl")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    print(table(load(args.path), args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus the summary lines of each
+sub-benchmark). Heavier variants live in the individual modules:
+
+    python -m benchmarks.fig3_population       # paper Fig. 3
+    python -m benchmarks.fig4_speedup          # paper Fig. 4
+    python -m benchmarks.ablations             # heuristic ablations
+    python -m benchmarks.router_balance        # MoE balance: immune vs baselines
+    python -m benchmarks.scheduler_bench       # straggler mitigation
+    python -m benchmarks.kernel_bench          # Pallas kernel microbenches
+    python -m benchmarks.roofline_report       # dry-run roofline tables
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def main() -> None:
+    rows = []
+
+    from benchmarks import fig4_speedup
+    res, us = _timed(fig4_speedup.run, agent_counts=(64, 128, 256), seeds=(0, 1))
+    rows.append(("fig4_speedup_exponent", us,
+                 f"saturated_slope={res['slope_saturated']:+.3f};paper=-0.30"))
+
+    from benchmarks import fig3_population
+    res, us = _timed(fig3_population.run, n_agents=175)
+    ok = all(res["checks"].values())
+    rows.append(("fig3_population_dynamics", us,
+                 f"steps={res['steps']};checks={'PASS' if ok else 'FAIL'}"))
+
+    from benchmarks import ablations
+    res, us = _timed(ablations.run, n_agents=96, seeds=(0, 1))
+    base = res[0][1]
+    worst = max(r[1] for r in res)
+    rows.append(("heuristic_ablations", us,
+                 f"full={base:.0f}steps;worst_ablation={worst / base:.2f}x"))
+
+    from benchmarks import router_balance
+    res, us = _timed(router_balance.run, steps=400, drift_at=200)
+    rows.append(("moe_balance_immune", us,
+                 f"tail_cv={res['immune']['tail_cv']:.3f};"
+                 f"none={res['none']['tail_cv']:.3f}"))
+
+    from benchmarks import scheduler_bench
+    res, us = _timed(scheduler_bench.run)
+    sp = np.mean([r[3] for r in res])
+    rows.append(("straggler_scheduler", us, f"mean_speedup_vs_static={sp:.2f}x"))
+
+    from benchmarks import kernel_bench
+    kres, us = _timed(kernel_bench.run)
+    for name, kus, derived in kres:
+        rows.append((name, kus, derived))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""ImmunoBalance: immune-system load balancing for MIMD-scale JAX systems.
+
+Reproduction + extension of Clark, "Immunological Approaches to Load Balancing in
+MIMD Systems" (CS.DC 2022). See DESIGN.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,64 @@
+"""Architecture registry: ``get_config(arch_id)`` + input_specs per (arch, shape).
+
+The 10 assigned architectures (each cell of the 40 (arch x shape) dry-run grid is
+well-defined by pairing an arch with its shape set — all four LM shapes here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import (gemma_7b, granite_moe_3b, kimi_k2, mamba2_130m, minicpm_2b,
+               musicgen_medium, paligemma_3b, qwen3_4b, recurrentgemma_9b,
+               smollm_360m)
+from .base import SHAPES, ModelConfig, ParallelConfig, ShapeConfig, TrainConfig
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (minicpm_2b, smollm_360m, gemma_7b, qwen3_4b, paligemma_3b,
+              granite_moe_3b, kimi_k2, recurrentgemma_9b, mamba2_130m,
+              musicgen_medium)
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def get_shape(shape: str) -> ShapeConfig:
+    if shape not in SHAPES:
+        raise KeyError(f"unknown shape {shape!r}; available: {sorted(SHAPES)}")
+    return SHAPES[shape]
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether the (arch, shape) cell runs. long_500k needs a sub-quadratic path
+    (assignment: skip for pure full-attention archs, run for SSM/hybrid)."""
+    if shape.name == "long_500k" and not cfg.has_subquadratic_path:
+        return False, ("skipped: full-attention arch has no sub-quadratic path for "
+                       "a 512k-token context (see DESIGN.md §6)")
+    return True, "ok"
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell — weak-type
+    correct, shardable, no device allocation. Used by the dry-run and the roofline
+    harness."""
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": sds((b, s), i32)}
+        if cfg.family == "vlm":
+            batch["patches"] = sds((b, cfg.frontend_tokens, cfg.frontend_dim), f32)
+        if cfg.family == "audio":
+            batch["frames"] = sds((b, s, cfg.frontend_dim), f32)
+        return batch
+    # decode: one new token against a cache of seq_len
+    batch = {"token": sds((b, 1), i32)}
+    if cfg.family == "audio":
+        batch["frame"] = sds((b, 1, cfg.frontend_dim), f32)
+    return batch

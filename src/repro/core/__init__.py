@@ -1,0 +1,3 @@
+"""The paper's contribution: immune load-balancing primitives, the agent MIMD model,
+the VLSI extraction reproduction, and the ML-layer integrations (router, scheduler)."""
+from . import agent_model, immune, router, scheduler  # noqa: F401

@@ -1,0 +1,210 @@
+"""The Hewes mobile-agent / shared-environment MIMD model (paper §2), vectorized for TPU.
+
+The paper constrains MIMD programs to a finite set of *agent characteristics*, each a
+five-subprogram cycle over a shared blackboard memory:
+
+    Pr (read receptive field) -> Pu (state update) -> Pw (write) -> Pa (alter type)
+    -> Pm (move)
+
+TPU adaptation (see DESIGN.md §3): agents step *synchronously* (as in Swarm's default
+schedule); per-agent MIMD behaviour is realized with ``lax.switch`` under ``vmap`` —
+every characteristic is evaluated and the agent's type selects the result. Write
+conflicts are resolved with scatter-max (the paper's dominance rule). The blackboard is
+an ``(C, H, W)`` int32 array; receptive fields are 3x3 windows.
+
+The framework is generic; ``repro.core.vlsi.extractor`` instantiates it with the paper's
+seven agent types.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class Agents(NamedTuple):
+    """SoA agent population. ``state`` layout is defined by the instantiating program."""
+
+    type_id: Array    # (N,)   int32
+    prev_type: Array  # (N,)   int32 -- ancestor type (for limit-cycle damping)
+    pos: Array        # (N, 2) int32 -- (row, col), kept in the grid interior
+    state: Array      # (N, S) int32
+
+
+class AgentCtx(NamedTuple):
+    """Everything one agent may condition on during a cycle (its receptive field)."""
+
+    agent_id: Array   # ()     int32
+    n_agents: int
+    pos: Array        # (2,)   int32
+    state: Array      # (S,)   int32
+    prev_type: Array  # ()     int32
+    patch: Array      # (C,3,3) int32 -- receptive field, centered on pos
+    key: Array        # PRNG key
+    step: Array       # ()     int32
+
+
+class AgentUpdate(NamedTuple):
+    """Result of one Pr->Pu->Pw->Pa->Pm cycle for one agent."""
+
+    writes: Array      # (K, 4) int32 -- (channel, row, col, value); max-combined;
+                       #                value 0 is a no-op (blackboard values are >= 0)
+    state: Array       # (S,)   int32
+    new_type: Array    # ()     int32 -- proposed characteristic
+    trans_prob: Array  # ()     f32   -- probability the Pa change commits
+    pos: Array         # (2,)   int32 -- new receptive-field position
+
+
+def no_writes(k: int) -> Array:
+    return jnp.zeros((k, 4), jnp.int32)
+
+
+Behavior = Callable[[AgentCtx], AgentUpdate]
+
+
+class AgentModel:
+    """A MIMD program: a finite characteristic set + the shared-environment semantics."""
+
+    def __init__(
+        self,
+        behaviors: Sequence[Behavior],
+        num_channels: int,
+        state_size: int,
+        writes_cap: int,
+        presence_channel: int | None = None,
+    ):
+        self.behaviors = tuple(behaviors)
+        self.num_types = len(behaviors)
+        self.num_channels = num_channels
+        self.state_size = state_size
+        self.writes_cap = writes_cap
+        # presence channels [presence_channel, presence_channel + num_types) are rebuilt
+        # every cycle with per-type agent counts -- the "cytokine" by which agents sense
+        # neighbouring populations (suppression / co-stimulation heuristics).
+        self.presence_channel = presence_channel
+
+    # -- Pr ---------------------------------------------------------------
+    def _read_patch(self, grid: Array, pos: Array) -> Array:
+        """3x3 receptive field. Positions are kept in [1, H-2] x [1, W-2] so the
+        window never leaves the grid (layouts carry an empty margin)."""
+        return jax.lax.dynamic_slice(grid, (0, pos[0] - 1, pos[1] - 1),
+                                     (grid.shape[0], 3, 3))
+
+    def _presence(self, grid: Array, agents: Agents) -> Array:
+        if self.presence_channel is None:
+            return grid
+        base = self.presence_channel
+        cleared = jax.lax.dynamic_update_slice(
+            grid, jnp.zeros((self.num_types,) + grid.shape[1:], grid.dtype), (base, 0, 0))
+        ch = base + agents.type_id
+        return cleared.at[ch, agents.pos[:, 0], agents.pos[:, 1]].add(1)
+
+    # -- one full cycle for the whole population --------------------------
+    @functools.partial(jax.jit, static_argnums=0)
+    def step(self, grid: Array, agents: Agents, key: Array, t: Array):
+        n = agents.type_id.shape[0]
+        grid = self._presence(grid, agents)
+        patches = jax.vmap(lambda p: self._read_patch(grid, p))(agents.pos)  # (N,C,3,3)
+
+        ids = jnp.arange(n, dtype=jnp.int32)
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+
+        def one(i, pos, state, prev, patch, k):
+            ctx = AgentCtx(agent_id=i, n_agents=n, pos=pos, state=state, prev_type=prev,
+                           patch=patch, key=k, step=t)
+            return jax.lax.switch(agents.type_id[i], self.behaviors, ctx)
+
+        upd: AgentUpdate = jax.vmap(one)(ids, agents.pos, agents.state,
+                                         agents.prev_type, patches, keys)
+
+        # -- Pw: dominance semantics — scatter-max, value 0 is the identity.
+        w = upd.writes.reshape(-1, 4)
+        ch = jnp.clip(w[:, 0], 0, grid.shape[0] - 1)
+        r = jnp.clip(w[:, 1], 0, grid.shape[1] - 1)
+        c = jnp.clip(w[:, 2], 0, grid.shape[2] - 1)
+        v = jnp.maximum(w[:, 3], 0)
+        grid = grid.at[ch, r, c].max(v)
+
+        # -- Pa: probabilistic commit (facilitation/inhibition already folded into
+        # trans_prob by the behaviours, incl. ancestor damping).
+        u = jax.vmap(lambda k: jax.random.uniform(k))(
+            jax.vmap(lambda k: jax.random.fold_in(k, 7))(keys))
+        commit = (u < upd.trans_prob) & (upd.new_type != agents.type_id)
+        new_type = jnp.where(commit, upd.new_type, agents.type_id)
+        prev_type = jnp.where(commit, agents.type_id, agents.prev_type)
+
+        # -- Pm: clip receptive fields to the interior.
+        pos = jnp.stack([jnp.clip(upd.pos[:, 0], 1, grid.shape[1] - 2),
+                         jnp.clip(upd.pos[:, 1], 1, grid.shape[2] - 2)], axis=1)
+
+        return grid, Agents(new_type.astype(jnp.int32), prev_type.astype(jnp.int32),
+                            pos.astype(jnp.int32), upd.state.astype(jnp.int32))
+
+    # -- drivers -----------------------------------------------------------
+    def population(self, agents: Agents) -> Array:
+        return jnp.sum(jax.nn.one_hot(agents.type_id, self.num_types, dtype=jnp.int32),
+                       axis=0)
+
+    @functools.partial(jax.jit, static_argnums=(0, 4),
+                       static_argnames=("done_fn", "record"))
+    def run_scan(self, grid: Array, agents: Agents, key: Array, steps: int,
+                 done_fn: Callable[[Array], Array] | None = None, record: bool = True):
+        """Fixed-length scan; freezes once ``done_fn(grid)`` holds. Records population
+        traces (the paper's Fig. 3) and the completion step."""
+
+        def body(carry, t):
+            grid, agents, key, done_at = carry
+            key, sub = jax.random.split(key)
+            done = done_fn(grid) if done_fn is not None else jnp.array(False)
+            done_at = jnp.where((done_at < 0) & done, t, done_at)
+            frozen = done_at >= 0
+
+            g2, a2 = self.step(grid, agents, sub, t)
+            grid = jax.tree.map(lambda a, b: jnp.where(frozen, a, b), grid, g2)
+            agents = jax.tree.map(lambda a, b: jnp.where(frozen, a, b), agents, a2)
+            out = self.population(agents) if record else jnp.zeros((), jnp.int32)
+            return (grid, agents, key, done_at), out
+
+        init = (grid, agents, key, jnp.array(-1, jnp.int32))
+        (grid, agents, key, done_at), pops = jax.lax.scan(
+            body, init, jnp.arange(steps, dtype=jnp.int32))
+        done_at = jnp.where(done_at < 0, steps, done_at)
+        return grid, agents, done_at, pops
+
+    @functools.partial(jax.jit, static_argnums=(0, 4, 5))
+    def run_while(self, grid: Array, agents: Agents, key: Array, max_steps: int,
+                  done_fn: Callable[[Array], Array]):
+        """Early-exit driver for completion-time measurements (the paper's Fig. 4)."""
+
+        def cond(carry):
+            grid, agents, key, t = carry
+            return (t < max_steps) & ~done_fn(grid)
+
+        def body(carry):
+            grid, agents, key, t = carry
+            key, sub = jax.random.split(key)
+            grid, agents = self.step(grid, agents, sub, t)
+            return grid, agents, key, t + 1
+
+        grid, agents, key, t = jax.lax.while_loop(
+            cond, body, (grid, agents, key, jnp.array(0, jnp.int32)))
+        return grid, agents, t
+
+
+def uniform_random_agents(key: Array, n: int, h: int, w: int, state_size: int,
+                          init_type: int = 0) -> Agents:
+    """The paper's initial condition: agents uniformly distributed over the environment,
+    all of the initial (layer-finder) type."""
+    kr, kc = jax.random.split(key)
+    rows = jax.random.randint(kr, (n,), 1, h - 1, jnp.int32)
+    cols = jax.random.randint(kc, (n,), 1, w - 1, jnp.int32)
+    return Agents(
+        type_id=jnp.full((n,), init_type, jnp.int32),
+        prev_type=jnp.full((n,), -1, jnp.int32),
+        pos=jnp.stack([rows, cols], axis=1),
+        state=jnp.zeros((n, state_size), jnp.int32),
+    )

@@ -1,0 +1,194 @@
+"""Immune-system load-balancing primitives (Clark 2022), as composable JAX state machines.
+
+The paper abstracts four mechanisms from the mammalian immune system and argues they are
+general load-balancing strategies for MIMD systems:
+
+  * immunological memory      -> ``ImmuneMemory``      (EMA of observed signals)
+  * two-stage delayed
+    suppression (T4/T8,
+    Th1/Th2 regulation)       -> ``TwoStageRegulator`` (fast positive response, delayed
+                                                        negative feedback via a second
+                                                        population)
+  * tolerance / anergy
+    (+ IL-2 reactivation)     -> ``AnergyGate``        (suppress responses lacking
+                                                        co-stimulation; reversible)
+  * dominance                 -> ``dominance_scatter_max`` / ``dominance_resolve``
+                                 (contested-resource resolution via max-combining IDs)
+
+All primitives are pure functions over small NamedTuple states so they can live inside
+``jax.jit``/``lax.scan`` bodies, be checkpointed as pytrees, and be sharded like any
+other training state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Immunological memory
+# ---------------------------------------------------------------------------
+class ImmuneMemory(NamedTuple):
+    """EMA memory of a signal. ``decay`` plays the role of cytokine half-life."""
+
+    value: Array
+    decay: Array  # scalar in [0, 1)
+
+    @staticmethod
+    def create(shape, decay: float = 0.99, dtype=jnp.float32) -> "ImmuneMemory":
+        return ImmuneMemory(value=jnp.zeros(shape, dtype), decay=jnp.asarray(decay, dtype))
+
+    def update(self, observation: Array) -> "ImmuneMemory":
+        new = self.decay * self.value + (1.0 - self.decay) * observation
+        return self._replace(value=new)
+
+
+# ---------------------------------------------------------------------------
+# Two-stage delayed regulation (T4 helper / T8 suppressor)
+# ---------------------------------------------------------------------------
+class RegulatorState(NamedTuple):
+    """State of the two-population regulator.
+
+    ``response``   -- the T4-like fast population (what we want to spike quickly).
+    ``suppressor`` -- the T8-like population; grows *in response to* ``response`` and
+                      only then suppresses it, giving the paper's delayed negative
+                      feedback: fast rise, bounded steady state, no simple cancellation.
+    """
+
+    response: Array
+    suppressor: Array
+
+
+class TwoStageRegulator(NamedTuple):
+    """dr/dt = gain*stimulus + self_excite*r - suppression*s*r - leak_r*r
+    ds/dt = couple*r - leak_s*s
+
+    Discretized with explicit Euler (dt folded into the rates). All rates are scalars
+    (or broadcastable arrays) so one regulator instance can manage a whole population
+    vector (e.g. one response value per MoE expert / per worker).
+    """
+
+    gain: Array
+    self_excite: Array
+    suppression: Array
+    couple: Array
+    leak_r: Array
+    leak_s: Array
+
+    @staticmethod
+    def create(
+        gain: float = 1.0,
+        self_excite: float = 0.15,
+        suppression: float = 0.9,
+        couple: float = 0.25,
+        leak_r: float = 0.05,
+        leak_s: float = 0.1,
+        dtype=jnp.float32,
+    ) -> "TwoStageRegulator":
+        a = lambda x: jnp.asarray(x, dtype)
+        return TwoStageRegulator(
+            gain=a(gain), self_excite=a(self_excite), suppression=a(suppression),
+            couple=a(couple), leak_r=a(leak_r), leak_s=a(leak_s),
+        )
+
+    def init(self, shape, dtype=jnp.float32) -> RegulatorState:
+        return RegulatorState(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+    def step(self, state: RegulatorState, stimulus: Array) -> RegulatorState:
+        r, s = state.response, state.suppressor
+        dr = self.gain * stimulus + self.self_excite * r - self.suppression * s * r - self.leak_r * r
+        ds = self.couple * r - self.leak_s * s
+        r_new = jnp.maximum(r + dr, 0.0)
+        s_new = jnp.maximum(s + ds, 0.0)
+        return RegulatorState(r_new, s_new)
+
+
+# ---------------------------------------------------------------------------
+# Tolerance / anergy
+# ---------------------------------------------------------------------------
+class AnergyState(NamedTuple):
+    """Per-unit anergy level in [0, 1]; 1 == fully anergic (tolerated / inactive)."""
+
+    level: Array
+
+
+class AnergyGate(NamedTuple):
+    """Tolerance: units whose stimulus arrives *without co-stimulation* become anergic
+    (their response is gated off). Anergy is reversible through an IL-2-like revival
+    signal, exactly as in peripheral T-cell tolerance.
+    """
+
+    onset: Array   # rate anergy builds when stimulus lacks co-stimulation
+    revival: Array  # rate anergy decays under the IL-2 revival signal
+    floor: Array   # gating at full anergy (0 = hard off)
+
+    @staticmethod
+    def create(onset: float = 0.2, revival: float = 0.5, floor: float = 0.0, dtype=jnp.float32):
+        a = lambda x: jnp.asarray(x, dtype)
+        return AnergyGate(a(onset), a(revival), a(floor))
+
+    def init(self, shape, dtype=jnp.float32) -> AnergyState:
+        return AnergyState(jnp.zeros(shape, dtype))
+
+    def step(self, state: AnergyState, stimulus: Array, costimulus: Array,
+             il2: Array | float = 0.0) -> AnergyState:
+        # Anergy builds where stimulus is present but co-stimulation is absent.
+        uncostimulated = jnp.clip(stimulus, 0.0, 1.0) * (1.0 - jnp.clip(costimulus, 0.0, 1.0))
+        lvl = state.level + self.onset * uncostimulated * (1.0 - state.level)
+        lvl = lvl - self.revival * jnp.asarray(il2) * lvl
+        return AnergyState(jnp.clip(lvl, 0.0, 1.0))
+
+    def gate(self, state: AnergyState, response: Array) -> Array:
+        scale = 1.0 - (1.0 - self.floor) * state.level
+        return response * scale
+
+
+# ---------------------------------------------------------------------------
+# Dominance
+# ---------------------------------------------------------------------------
+def dominance_scatter_max(grid: Array, rows: Array, cols: Array, values: Array) -> Array:
+    """The paper's conflict-resolution rule: ``cell := max(cell, agent_value)``.
+
+    Multiple agents may write the same cell in one cycle; scatter-max makes the highest
+    value (e.g. highest agent ID) dominant, deterministically. This is TPU-native (XLA
+    scatter with max combiner) — the central heuristic costs one scatter.
+    """
+    return grid.at[rows, cols].max(values)
+
+
+def dominance_resolve(ids: Array, claims: Array) -> Array:
+    """Resolve ``claims`` (bool, per agent) on a shared scalar resource: only the agent
+    with the highest ID among claimants wins. Returns a bool mask of winners (<=1 True).
+    """
+    claim_ids = jnp.where(claims, ids, -1)
+    winner = jnp.max(claim_ids)
+    return (claim_ids == winner) & (winner >= 0)
+
+
+# ---------------------------------------------------------------------------
+# Limit-cycle damping
+# ---------------------------------------------------------------------------
+def damp_ancestor_transition(p: Array, proposed: Array, ancestor: Array,
+                             damping: float = 0.1) -> Array:
+    """Suppress (but do not disallow) transitions back to an agent's ancestor type.
+
+    The paper notes redundancy-then-irrelevancy corrections can produce limit cycles
+    (A->B->A->...); damping the probability of returning to the parent type dampens
+    incipient cycles without forbidding legitimate returns.
+    """
+    is_cycle = proposed == ancestor
+    return jnp.where(is_cycle, p * damping, p)
+
+
+def hysteresis(current: Array, target: Array, up_rate: float, down_rate: float) -> Array:
+    """Asymmetric first-order tracking — move quickly toward larger targets, slowly back.
+
+    Used by the straggler scheduler so shard reassignments don't oscillate (the
+    scheduling analogue of limit-cycle damping).
+    """
+    rate = jnp.where(target > current, up_rate, down_rate)
+    return current + rate * (target - current)

@@ -1,0 +1,115 @@
+"""Immune straggler / shard scheduler — the paper's regulation at the cluster level.
+
+At thousand-node scale the data-parallel step time is the max over workers; a single
+straggler drags the fleet. The paper's loop maps directly:
+
+  * immunological memory   — per-worker EMA of observed throughput
+  * two-stage regulation   — shard-fraction targets track *memory*, not instantaneous
+                             speed (the delay), so transient hiccups don't trigger
+                             rebalancing storms
+  * hysteresis             — asymmetric up/down tracking damps limit cycles (the
+                             oscillation the paper warns redundancy/irrelevancy
+                             corrections can produce)
+  * anergy / clonal deletion — workers whose memory falls below a floor are marked
+                             anergic (excluded: presumed failed / preempted) and
+                             revived when throughput returns (elastic membership)
+
+The scheduler is pure JAX state -> state; the trainer consults it for per-worker
+microbatch fractions, and the benchmark drives it against simulated heterogeneous
+fleets (vs. a static scheduler baseline).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .immune import hysteresis
+
+Array = jax.Array
+
+
+class SchedulerConfig(NamedTuple):
+    mem_decay: float = 0.9        # throughput EMA decay
+    up_rate: float = 0.3          # hysteresis: fast to give work back
+    down_rate: float = 0.1        # slow to take work away (damps cycles)
+    anergy_floor: float = 0.05    # fraction of median speed below which a worker
+                                  # is considered failed (anergic)
+    revival_steps: int = 3        # consecutive healthy observations to revive
+    min_frac: float = 0.0         # floor on a live worker's share
+
+
+class SchedulerState(NamedTuple):
+    mem: Array           # (W,) throughput EMA (tokens/sec units, arbitrary scale)
+    frac: Array          # (W,) current shard fractions (sums to 1 over live workers)
+    anergic: Array       # (W,) bool — excluded workers
+    healthy_count: Array  # (W,) consecutive healthy observations while anergic
+
+
+def init_scheduler(num_workers: int) -> SchedulerState:
+    w = num_workers
+    return SchedulerState(
+        mem=jnp.ones((w,), jnp.float32),
+        frac=jnp.full((w,), 1.0 / w, jnp.float32),
+        anergic=jnp.zeros((w,), bool),
+        healthy_count=jnp.zeros((w,), jnp.int32),
+    )
+
+
+def observe(state: SchedulerState, throughput: Array,
+            cfg: SchedulerConfig = SchedulerConfig()) -> SchedulerState:
+    """Update with one step's observed per-worker throughput (0 = no heartbeat)."""
+    mem = cfg.mem_decay * state.mem + (1.0 - cfg.mem_decay) * throughput
+    live_mem = jnp.where(state.anergic, jnp.nan, mem)
+    median = jnp.nan_to_num(jnp.nanmedian(live_mem), nan=1.0)
+    # the median alone fails when a *majority* dies (the median is then itself a
+    # dead worker) — anchor the health reference to the fastest live worker too
+    median = jnp.maximum(median, 0.5 * jnp.nan_to_num(jnp.nanmax(live_mem), nan=1.0))
+
+    # anergy (failure detection) and revival
+    looks_dead = mem < cfg.anergy_floor * median
+    healthy_now = throughput > 0.5 * median
+    healthy_count = jnp.where(state.anergic & healthy_now,
+                              state.healthy_count + 1, 0)
+    revived = healthy_count >= cfg.revival_steps
+    anergic = (state.anergic | looks_dead) & ~revived
+    # revive with a fresh (median) memory so they are not instantly re-anergized
+    mem = jnp.where(revived, median, mem)
+
+    # regulation: target share proportional to *memory* (delayed), with hysteresis
+    live = ~anergic
+    weights = jnp.where(live, jnp.maximum(mem, 1e-6), 0.0)
+    target = weights / jnp.maximum(jnp.sum(weights), 1e-9)
+    target = jnp.where(live, jnp.maximum(target, cfg.min_frac), 0.0)
+    target = target / jnp.maximum(jnp.sum(target), 1e-9)
+    frac = hysteresis(state.frac, target, cfg.up_rate, cfg.down_rate)
+    frac = jnp.where(live, frac, 0.0)
+    frac = frac / jnp.maximum(jnp.sum(frac), 1e-9)
+    return SchedulerState(mem=mem, frac=frac, anergic=anergic,
+                          healthy_count=healthy_count)
+
+
+def step_time(state: SchedulerState, speeds: Array, work: float = 1.0) -> Array:
+    """Simulated wall-time of one DP step: max over live workers of share/speed."""
+    live = ~state.anergic
+    t = jnp.where(live, state.frac * work / jnp.maximum(speeds, 1e-9), 0.0)
+    return jnp.max(t)
+
+
+def simulate(speeds_trace: Array, cfg: SchedulerConfig = SchedulerConfig(),
+             static: bool = False):
+    """Run the scheduler over a (T, W) per-step speed trace; returns per-step times.
+
+    ``static=True`` freezes the uniform assignment — the baseline the immune
+    scheduler is compared against."""
+    t_steps, w = speeds_trace.shape
+    state = init_scheduler(w)
+
+    def body(state, speeds):
+        t = step_time(state, speeds)
+        new_state = state if static else observe(state, speeds, cfg)
+        return new_state, t
+
+    _, times = jax.lax.scan(body, state, speeds_trace)
+    return times

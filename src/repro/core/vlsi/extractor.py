@@ -1,0 +1,720 @@
+"""The paper's MIMD layout extractor: seven agent characteristics + immune load balancing.
+
+Agent types (paper §3.1-3.2) and their load-balancing behaviours:
+
+  0 LAYER_FINDER   raster-scans for unlabelled wire cells. Redundancy: suppressed into a
+                   node propagator only by *multi-stage delayed suppression* — when both
+                   a node-director mark (2 generations downstream) and propagator
+                   presence appear in its receptive field.
+  1 NODE_LABELLER  walks its wire writing ``label := max(label, own)`` (dominance by
+                   scatter-max). Dominated (reads a higher label) -> layer finder.
+                   Complete (no lower-labelled wire cells seen for PATIENCE cycles) ->
+                   node director (or fet labeller on DIFF). Labels are never reused:
+                   ``label = episode * N + id + 1`` (the paper's uniqueness rule — a
+                   completing labeller and its descendants cannot relabel with the
+                   same ID).
+  2 FET_LABELLER   traces DIFF wires marking poly∩diff gate regions (claim by
+                   scatter-max of its ID). Dominated -> layer finder (the paper's
+                   "second generation" rebound).
+  3 FET_OUTPUT     waits at a marked gate until the poly + both diff-side labels are
+                   *stable* (the paper's synchronization-by-signal: emit only once the
+                   observed labels stop changing), then emits the FET record and flushes
+                   done-flags.
+  4 CONTACT_FINDER sits on a contact area until both overlapping layers are labelled and
+                   stable, emits the equivalence record. Redundancy: losing a contact
+                   claim -> node propagator.
+  5 NODE_DIRECTOR  retraces a completed wire writing director marks — the delayed
+                   third-stage signal that suppresses layer finders and guides
+                   propagators.
+  6 NODE_PROPAGATOR helper/communication type (APC analogue): max-diffuses labels into
+                   wire interiors, converts to contact finder / fet output on demand,
+                   and *heals* records that a later dominance wave made stale (all record
+                   channels are monotone under max-combining, so healing converges).
+                   Anti-crowding movement + epsilon-random walk damp limit cycles and
+                   keep exploration ergodic.
+
+All writes are non-negative and max-combined (dominance). The observer-side ``done_fn``
+plays Swarm's observer role: termination when every conductor cell is labelled, labels
+are a max-diffusion fixpoint, every gate/contact region carries a record, and every
+record agrees with the fixpoint labels (exact, vectorized consistency check).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..agent_model import AgentCtx, AgentModel, Agents, AgentUpdate, uniform_random_agents
+from ..immune import damp_ancestor_transition
+from . import reference
+from .layout import CONTACT, DIFF, M1, M2, POLY, PSEL
+
+# ---------------------------------------------------------------------------
+# blackboard channels
+# ---------------------------------------------------------------------------
+LAB0 = 6                     # 6..9: labels for M1, M2, POLY, DIFF
+DIRECTOR_MARK = 10
+FET_MARK, FET_DONE, FET_S, FET_D, FET_G = 11, 12, 13, 14, 15
+# gate bounding-box record, encoded so every corner is monotone under max-combining:
+# IR0 = BIG - min_row, IC0 = BIG - min_col, R1 = max_row, C1 = max_col
+FET_IR0, FET_IC0, FET_R1, FET_C1 = 16, 17, 18, 19
+CON_CLAIM, CON_DONE, CON_A, CON_B = 20, 21, 22, 23
+PRESENCE = 24                # 24..30: per-type agent presence ("cytokines")
+NUM_CHANNELS = 31
+BIG = 1 << 20
+
+# agent types
+FINDER, LABELLER, FET_LABELLER, FET_OUTPUT, CONTACT_FINDER, DIRECTOR, PROPAGATOR = range(7)
+TYPE_NAMES = ("layer_finder", "node_labeller", "fet_labeller", "fet_output",
+              "contact_finder", "node_director", "node_propagator")
+
+# state slots
+S_LABEL, S_LAYER, S_TIMER, S_EPISODE, S_HOME_R, S_HOME_C = 0, 1, 2, 3, 4, 5
+S_WLAB, S_ELAB, S_MINR, S_MINC, S_MAXR, S_MAXC = 6, 7, 8, 9, 10, 11
+S_FLUSH, S_GLAB, S_NLAB, S_SLAB = 12, 13, 14, 15
+STATE_SIZE = 16
+
+K_WRITES = 36
+PATIENCE_LAB = 10
+PATIENCE_FET = 10
+DIRECTOR_STEPS = 14
+STABLE_WAIT = 8              # cycles the observed labels must hold before emitting
+FET_TIMEOUT = 150
+CONTACT_TIMEOUT = 150        # starved contact finders anergize back to propagators
+ANCESTOR_DAMP = 0.25
+
+# 3x3 window offsets; 4-neighbourhood indices into the flattened window
+_WIN = np.stack(np.meshgrid(np.arange(-1, 2), np.arange(-1, 2), indexing="ij"),
+                -1).reshape(9, 2)
+WIN_OFF = jnp.asarray(_WIN, jnp.int32)                       # (9, 2)
+NEIGH = jnp.asarray([1, 3, 5, 7], jnp.int32)                 # N, W, E, S in the window
+IDX_N, IDX_W, IDX_E, IDX_S = 1, 3, 5, 7
+CENTER = 4
+
+
+def _flat(patch):
+    return patch.reshape(patch.shape[0], 9)                   # (C,3,3) -> (C,9)
+
+
+def _conductors(p):
+    """(C,9) -> (4,9) conductor masks for M1, M2, POLY, DIFF (diff & ~poly)."""
+    poly = p[POLY] > 0
+    return jnp.stack([p[M1] > 0, p[M2] > 0, poly, (p[DIFF] > 0) & ~poly])
+
+
+def _labels(p):
+    return p[LAB0:LAB0 + 4]                                   # (4,9)
+
+
+def _gate(p):
+    return (p[POLY] > 0) & (p[DIFF] > 0)                      # (9,)
+
+
+def _win_coords(pos):
+    return pos[None, :] + WIN_OFF                             # (9,2)
+
+
+def _first_idx(mask):
+    return mask.any(), jnp.argmax(mask)
+
+
+def _other_layer_label(cond, labs):
+    """Label of the non-m1 conductor under a contact cell (window-flat arrays)."""
+    return jnp.max(jnp.where(cond[1:4], labs[1:4], 0), axis=0)  # (9,)
+
+
+class _W:
+    """Accumulates up to K_WRITES (channel, row, col, value) writes; value 0 = no-op."""
+
+    def __init__(self):
+        self.items = []
+
+    def put(self, ch, r, c, v):
+        self.items.append(jnp.stack([jnp.asarray(ch, jnp.int32),
+                                     jnp.asarray(r, jnp.int32),
+                                     jnp.asarray(c, jnp.int32),
+                                     jnp.asarray(v, jnp.int32)]))
+
+    def put_window(self, ch, coords, vals):
+        for i in range(9):
+            self.put(ch, coords[i, 0], coords[i, 1], vals[i])
+
+    def pack(self):
+        assert len(self.items) <= K_WRITES, len(self.items)
+        pad = K_WRITES - len(self.items)
+        w = jnp.stack(self.items) if self.items else jnp.zeros((0, 4), jnp.int32)
+        if pad:
+            w = jnp.concatenate([w, jnp.zeros((pad, 4), jnp.int32)], 0)
+        return w
+
+
+def _walk(ctx: AgentCtx, scores, eps: float = 0.0) -> jax.Array:
+    """Pm for walkers: move to the best-scoring 4-neighbour (plus noise); stay if all
+    scores are <= 0. With probability ``eps`` take a uniformly random step instead —
+    the paper's propagators move randomly when there is nothing to propagate toward,
+    and ergodic exploration is what lets them correct stale (dominated) labels."""
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(ctx.key, 3), 3)
+    noise = jax.random.uniform(k1, (4,))
+    total = scores + 0.5 * noise
+    best = jnp.argmax(total)
+    stay = jnp.max(scores) <= 0.0
+    step = jnp.where(stay, ctx.pos, ctx.pos + WIN_OFF[NEIGH[best]])
+    if eps > 0.0:
+        rnd = ctx.pos + WIN_OFF[NEIGH[jax.random.randint(k2, (), 0, 4)]]
+        step = jnp.where(jax.random.uniform(k3) < eps, rnd, step)
+    return step
+
+
+@functools.lru_cache(maxsize=64)
+def make_extractor(n_agents: int, grid_hw: tuple[int, int] | None = None,
+                   ancestor_damp: float = ANCESTOR_DAMP,
+                   finder_suppression: bool = True,
+                   walk_eps: float = 0.35):
+    """Build the AgentModel implementing the paper's extraction program.
+
+    ``grid_hw`` fixes the raster-scan wrap limits for the layer finders. Memoized so
+    repeated runs (speedup sweeps) reuse compiled steps. The keyword knobs exist for
+    the heuristic ablations (benchmarks/ablations): ``ancestor_damp=1.0`` disables
+    limit-cycle damping, ``finder_suppression=False`` removes the multi-stage
+    delayed suppression of layer finders, ``walk_eps=0.0`` removes ergodic
+    exploration.
+    """
+    raster_lim = (grid_hw[0] - 2, grid_hw[1] - 2) if grid_hw else (10 ** 6, 10 ** 6)
+    damp = ancestor_damp
+
+    def finder(ctx: AgentCtx) -> AgentUpdate:
+        p = _flat(ctx.patch)
+        cond, labs = _conductors(p), _labels(p)
+        unlab = cond & (labs == 0)
+        found, idx = _first_idx(unlab.reshape(-1))
+        layer, cell = idx // 9, idx % 9
+        coords = _win_coords(ctx.pos)
+
+        # multi-stage delayed suppression: director mark + propagator presence
+        suppressed = (p[DIRECTOR_MARK] > 0).any() & (p[PRESENCE + PROPAGATOR].sum() > 0)
+        suppressed = suppressed & finder_suppression
+
+        st = ctx.state
+        episode = st[S_EPISODE]
+        new_label = episode * n_agents + ctx.agent_id + 1
+        st_lab = st.at[S_LABEL].set(new_label).at[S_LAYER].set(layer) \
+                   .at[S_TIMER].set(0).at[S_EPISODE].set(episode + 1)
+
+        new_type = jnp.where(found, LABELLER, jnp.where(suppressed, PROPAGATOR, FINDER))
+        prob = jnp.where(found, 1.0, 0.5)
+        prob = damp_ancestor_transition(prob, new_type, ctx.prev_type, damp)
+        state = jnp.where(found, st_lab, st)
+
+        # raster scan, stride 3 (window width); labellers start on the found cell
+        nc = ctx.pos[1] + 3
+        over_c = nc > raster_lim[1]
+        nr = jnp.where(over_c, ctx.pos[0] + 3, ctx.pos[0])
+        nc = jnp.where(over_c, 1, nc)
+        nr = jnp.where(nr > raster_lim[0], 1, nr)
+        raster = jnp.stack([nr, nc])
+        pos = jnp.where(found, coords[cell], raster)
+        return AgentUpdate(_W().pack(), state, new_type, prob, pos)
+
+    def labeller(ctx: AgentCtx) -> AgentUpdate:
+        p = _flat(ctx.patch)
+        cond, labs = _conductors(p), _labels(p)
+        lyr = ctx.state[S_LAYER]
+        own = ctx.state[S_LABEL]
+        my_cond, my_labs = cond[lyr], labs[lyr]
+        coords = _win_coords(ctx.pos)
+
+        dominated = my_cond[CENTER] & (my_labs[CENTER] > own)
+
+        w = _W()
+        w.put(LAB0 + lyr, ctx.pos[0], ctx.pos[1], jnp.where(my_cond[CENTER], own, 0))
+        # diff labellers mark gate regions as they trace (fet-labelling duty is shared
+        # with the dedicated FET_LABELLER type for liveness; see DESIGN.md §8)
+        gate_unmarked = _gate(p) & (p[FET_MARK] == 0) & (lyr == DIFF)
+        w.put_window(FET_MARK, coords, jnp.where(gate_unmarked, ctx.agent_id + 1, 0))
+
+        work_left = (my_cond & (my_labs < own)).any()
+        timer = jnp.where(work_left, 0, ctx.state[S_TIMER] + 1)
+        complete = timer > PATIENCE_LAB
+
+        done_type = jnp.where(lyr == DIFF, FET_LABELLER, DIRECTOR)
+        new_type = jnp.where(dominated, FINDER, jnp.where(complete, done_type, LABELLER))
+        st = ctx.state.at[S_TIMER].set(jnp.where(complete, 0, timer)) \
+                      .at[S_FLUSH].set(jnp.where(complete, DIRECTOR_STEPS, 0))
+        prob = damp_ancestor_transition(jnp.float32(1.0), new_type, ctx.prev_type,
+                                        damp)
+        prob = jnp.where(dominated, 1.0, prob)   # dominance losses always convert
+
+        n_cond, n_labs = my_cond[NEIGH], my_labs[NEIGH]
+        scores = jnp.where(n_cond, 1.0, -1.0) + 2.0 * (n_cond & (n_labs == 0)) \
+            + 1.0 * (n_cond & (n_labs < own))
+        return AgentUpdate(w.pack(), st, new_type, prob, _walk(ctx, scores))
+
+    def fet_labeller(ctx: AgentCtx) -> AgentUpdate:
+        p = _flat(ctx.patch)
+        cond, labs = _conductors(p), _labels(p)
+        own = ctx.state[S_LABEL]
+        my_cond, my_labs = cond[DIFF], labs[DIFF]
+        coords = _win_coords(ctx.pos)
+
+        dominated = my_cond[CENTER] & (my_labs[CENTER] > own)
+
+        w = _W()
+        w.put(LAB0 + DIFF, ctx.pos[0], ctx.pos[1], jnp.where(my_cond[CENTER], own, 0))
+        gate_unmarked = _gate(p) & (p[FET_MARK] == 0)
+        w.put_window(FET_MARK, coords, jnp.where(gate_unmarked, ctx.agent_id + 1, 0))
+
+        timer = jnp.where(gate_unmarked.any(), 0, ctx.state[S_TIMER] + 1)
+        complete = timer > PATIENCE_FET
+        new_type = jnp.where(dominated, FINDER,
+                             jnp.where(complete, PROPAGATOR, FET_LABELLER))
+        prob = damp_ancestor_transition(jnp.float32(1.0), new_type, ctx.prev_type,
+                                        damp)
+        prob = jnp.where(dominated, 0.9, prob)   # paper: *most* dominated ones rebound
+        st = ctx.state.at[S_TIMER].set(jnp.where(complete, 0, timer))
+
+        scores = jnp.where(my_cond[NEIGH], 1.0, -1.0)
+        return AgentUpdate(w.pack(), st, new_type, prob, _walk(ctx, scores))
+
+    def director(ctx: AgentCtx) -> AgentUpdate:
+        p = _flat(ctx.patch)
+        cond = _conductors(p)
+        lyr = ctx.state[S_LAYER]
+        my_cond = cond[lyr]
+
+        w = _W()
+        w.put(DIRECTOR_MARK, ctx.pos[0], ctx.pos[1], jnp.where(my_cond[CENTER], 1, 0))
+
+        flush = ctx.state[S_FLUSH] - 1
+        done = flush <= 0
+        st = ctx.state.at[S_FLUSH].set(jnp.maximum(flush, 0))
+        new_type = jnp.where(done, PROPAGATOR, DIRECTOR)
+
+        unmarked = my_cond[NEIGH] & (p[DIRECTOR_MARK][NEIGH] == 0)
+        scores = jnp.where(my_cond[NEIGH], 1.0, -1.0) + 2.0 * unmarked
+        return AgentUpdate(w.pack(), st, new_type, jnp.float32(1.0), _walk(ctx, scores))
+
+    def propagator(ctx: AgentCtx) -> AgentUpdate:
+        p = _flat(ctx.patch)
+        cond, labs = _conductors(p), _labels(p)
+        coords = _win_coords(ctx.pos)
+        gate = _gate(p)
+
+        # Pw: local max-diffusion of all four label planes (respects the diff/gate
+        # barrier because diff conductor excludes gate cells).
+        w = _W()
+        for lyr in range(4):
+            both = cond[lyr, CENTER] & cond[lyr][NEIGH]
+            for k in range(4):
+                ni = NEIGH[k]
+                w.put(LAB0 + lyr, coords[ni, 0], coords[ni, 1],
+                      jnp.where(both[k], labs[lyr, CENTER], 0))
+            pull = jnp.max(jnp.where(both, labs[lyr][NEIGH], 0))
+            w.put(LAB0 + lyr, ctx.pos[0], ctx.pos[1], pull)
+
+        # --- staleness detection (healing): records are monotone max-combined, so a
+        # record lagging the dominance wave is re-opened and re-emitted.
+        other_lab = _other_layer_label(cond, labs)
+        con_stale = (p[CON_A] > 0) & ((p[CON_A] < labs[M1]) | (p[CON_B] < other_lab))
+        g_stale_cells = (p[FET_S] > 0) & (p[FET_G] < labs[POLY])
+        rec_s, rec_d = jnp.max(p[FET_S]), jnp.max(p[FET_D])
+        side = jnp.where(cond[DIFF][NEIGH], labs[DIFF][NEIGH], 0)
+        side_stale = gate[CENTER] & (p[FET_DONE][CENTER] > 0) & (rec_s > 0) \
+            & ((side > 0) & (side != rec_s) & (side != rec_d)).any()
+        # bbox staleness: a gate cell visible outside the bbox implied by a visible
+        # record (regions are small enough that record + extreme cell co-occur in
+        # some window — see DESIGN.md §8)
+        brec = p[FET_R1] > 0
+        r1w, c1w = jnp.max(p[FET_R1]), jnp.max(p[FET_C1])
+        r0w, c0w = BIG - jnp.max(p[FET_IR0]), BIG - jnp.max(p[FET_IC0])
+        outside = gate & ((coords[:, 0] > r1w) | (coords[:, 0] < r0w)
+                          | (coords[:, 1] > c1w) | (coords[:, 1] < c0w))
+        bbox_stale = brec & (outside.any() & brec.any())
+
+        # Pa: convert on demand (contact finder / fet output / healing / relabelling).
+        # Contact claims are honoured only while a contact finder is actually present
+        # (presence = the paper's cytokine signal) — a departed claimant cannot
+        # deadlock the region.
+        cf_present = p[PRESENCE + CONTACT_FINDER][CENTER] > 0
+        on_contact = (p[CONTACT][CENTER] > 0) \
+            & (((p[CON_DONE][CENTER] == 0)
+                & ((p[CON_CLAIM][CENTER] == 0) | ~cf_present))
+               | con_stale[CENTER])
+        gate_spawn = (gate & (p[FET_MARK] > 0) & (p[FET_DONE] == 0)) \
+            | g_stale_cells | bbox_stale
+        gate_spawn = gate_spawn.at[CENTER].set(gate_spawn[CENTER] | side_stale)
+        has_gate, gidx = _first_idx(gate_spawn)
+        has_gate = has_gate & ~on_contact
+        seed = coords[gidx]
+
+        # irrelevancy correction: an unlabelled conductor cell whose window holds no
+        # same-layer label cannot be fixed by diffusion — become a labeller for it.
+        need_label = cond[:, CENTER] & (labs[:, CENTER] == 0) \
+            & ~(cond & (labs > 0)).any(axis=1)
+        relabel, rl_layer = _first_idx(need_label)
+        relabel = relabel & ~on_contact & ~has_gate
+
+        w.put(CON_CLAIM, ctx.pos[0], ctx.pos[1],
+              jnp.where(on_contact, ctx.agent_id + 1, 0))
+
+        st = ctx.state
+        st_con = st.at[S_HOME_R].set(ctx.pos[0]).at[S_HOME_C].set(ctx.pos[1]) \
+                   .at[S_TIMER].set(0).at[S_WLAB].set(0).at[S_ELAB].set(0)
+        st_fet = st.at[S_HOME_R].set(seed[0]).at[S_HOME_C].set(seed[1]) \
+                   .at[S_WLAB].set(0).at[S_ELAB].set(0).at[S_NLAB].set(0) \
+                   .at[S_SLAB].set(0).at[S_GLAB].set(0) \
+                   .at[S_MINR].set(seed[0]).at[S_MINC].set(seed[1]) \
+                   .at[S_MAXR].set(seed[0]).at[S_MAXC].set(seed[1]) \
+                   .at[S_TIMER].set(0).at[S_FLUSH].set(0)
+        episode = st[S_EPISODE]
+        st_lab = st.at[S_LABEL].set(episode * ctx.n_agents + ctx.agent_id + 1) \
+                   .at[S_LAYER].set(rl_layer).at[S_TIMER].set(0) \
+                   .at[S_EPISODE].set(episode + 1)
+        state = jnp.where(on_contact, st_con,
+                          jnp.where(has_gate, st_fet,
+                                    jnp.where(relabel, st_lab, st)))
+        new_type = jnp.where(on_contact, CONTACT_FINDER,
+                             jnp.where(has_gate, FET_OUTPUT,
+                                       jnp.where(relabel, LABELLER, PROPAGATOR)))
+        prob = damp_ancestor_transition(jnp.float32(1.0), new_type, ctx.prev_type,
+                                        damp)
+        # Work conversions stay damped when they would return the agent to its
+        # ancestor type: undamped respawn loops (fet_output -> propagator ->
+        # fet_output on a gate whose side is not yet labelled) were observed to
+        # absorb the whole population — the limit-cycle the paper warns about.
+        # Presence-gated contact claims make an uncommitted claim harmless.
+        prob = jnp.where(relabel, 1.0, prob)
+
+        # Pm: toward work; anti-crowding (diffusion) on own type damps limit cycles
+        any_cond = cond.any(0)
+        any_unlab = (cond & (labs == 0)).any(0)
+        contact_todo = (p[CONTACT] > 0) & (p[CON_DONE] == 0)
+        crowd = p[PRESENCE + PROPAGATOR][NEIGH].astype(jnp.float32)
+        scores = 0.2 + 1.0 * any_cond[NEIGH] + 2.0 * any_unlab[NEIGH] \
+            + 0.3 * (p[DIRECTOR_MARK][NEIGH] > 0) + 2.0 * contact_todo[NEIGH] \
+            + 2.0 * gate_spawn[NEIGH] - 0.5 * crowd
+        pos = _walk(ctx, scores, eps=walk_eps)
+        pos = jnp.where(has_gate, seed, pos)
+        pos = jnp.where(on_contact | relabel, ctx.pos, pos)
+        return AgentUpdate(w.pack(), state, new_type, prob, pos)
+
+    def contact_finder(ctx: AgentCtx) -> AgentUpdate:
+        p = _flat(ctx.patch)
+        cond, labs = _conductors(p), _labels(p)
+        coords = _win_coords(ctx.pos)
+
+        claim = p[CON_CLAIM][CENTER]
+        # a stale claim from a departed finder must not block us: dominance applies
+        # only while another claimant is actually co-located (presence cytokine)
+        lost = (claim > ctx.agent_id + 1) \
+            & (p[PRESENCE + CONTACT_FINDER][CENTER] > 1)
+
+        # pull labels into the contact cell for all layers (it sits on m1 ∩ other)
+        w = _W()
+        for lyr in range(4):
+            both = cond[lyr, CENTER] & cond[lyr][NEIGH]
+            pull = jnp.max(jnp.where(both, labs[lyr][NEIGH], 0))
+            w.put(LAB0 + lyr, ctx.pos[0], ctx.pos[1], pull)
+
+        m1lab = labs[M1, CENTER]
+        olab = _other_layer_label(cond, labs)[CENTER]
+
+        # synchronization: emit only after the pair has been stable for STABLE_WAIT
+        changed = (m1lab != ctx.state[S_WLAB]) | (olab != ctx.state[S_ELAB])
+        timer = jnp.where(changed, 0, ctx.state[S_TIMER] + 1)
+        stale_rec = (p[CON_A][CENTER] > 0) & ((p[CON_A][CENTER] < m1lab)
+                                              | (p[CON_B][CENTER] < olab))
+        fresh_done = (p[CON_DONE][CENTER] > 0) & ~stale_rec
+        # a healing re-emit (stale record) ignores the claim — claims arbitrate only
+        # the *first* emission; healing writes are monotone and idempotent
+        ready = (m1lab > 0) & (olab > 0) & (timer >= STABLE_WAIT) \
+            & (~lost | stale_rec) & ~fresh_done
+
+        w.put(CON_A, ctx.pos[0], ctx.pos[1], jnp.where(ready, m1lab, 0))
+        w.put(CON_B, ctx.pos[0], ctx.pos[1], jnp.where(ready, olab, 0))
+        con_cells = p[CONTACT] > 0
+        w.put_window(CON_DONE, coords, jnp.where(ready & con_cells, 1, 0))
+
+        st = ctx.state.at[S_WLAB].set(m1lab).at[S_ELAB].set(olab).at[S_TIMER].set(timer)
+        # anergy: a finder starved of labels for CONTACT_TIMEOUT cycles is doing
+        # irrelevant work — revert to propagator (presence-gated claims make the
+        # contact re-claimable once the wires are labelled)
+        starved = (timer > CONTACT_TIMEOUT) & ~ready
+        leave = ready | (lost & ~stale_rec) | fresh_done | starved
+        new_type = jnp.where(leave, PROPAGATOR, CONTACT_FINDER)
+        return AgentUpdate(w.pack(), st, new_type, jnp.float32(1.0), ctx.pos)
+
+    def fet_output(ctx: AgentCtx) -> AgentUpdate:
+        p = _flat(ctx.patch)
+        cond, labs = _conductors(p), _labels(p)
+        coords = _win_coords(ctx.pos)
+        gate = _gate(p)
+        st = ctx.state
+
+        # grow the gate-region bounding box from window gate cells
+        big = jnp.int32(10 ** 6)
+        minr = jnp.minimum(st[S_MINR], jnp.min(jnp.where(gate, coords[:, 0], big)))
+        minc = jnp.minimum(st[S_MINC], jnp.min(jnp.where(gate, coords[:, 1], big)))
+        maxr = jnp.maximum(st[S_MAXR], jnp.max(jnp.where(gate, coords[:, 0], -1)))
+        maxc = jnp.maximum(st[S_MAXC], jnp.max(jnp.where(gate, coords[:, 1], -1)))
+
+        # geometric side-canonical S/D collection: track the max diff label seen on
+        # each side (N/W/E/S) of gate cells; the record uses whichever opposite pair
+        # is fully labelled. This keeps records consistent across competing emitters
+        # and makes staleness locally checkable.
+        on_gate = gate[CENTER]
+        sides = jnp.where(cond[DIFF][NEIGH] & on_gate, labs[DIFF][NEIGH], 0)  # N,W,E,S
+        nlab = jnp.maximum(st[S_NLAB], sides[0])
+        wlab = jnp.maximum(st[S_WLAB], sides[1])
+        elab = jnp.maximum(st[S_ELAB], sides[2])
+        slab = jnp.maximum(st[S_SLAB], sides[3])
+        glab = jnp.maximum(st[S_GLAB], jnp.where(on_gate, labs[POLY, CENTER], 0))
+
+        changed = (nlab != st[S_NLAB]) | (wlab != st[S_WLAB]) | (elab != st[S_ELAB]) \
+            | (slab != st[S_SLAB]) | (glab != st[S_GLAB]) \
+            | (minr != st[S_MINR]) | (minc != st[S_MINC]) \
+            | (maxr != st[S_MAXR]) | (maxc != st[S_MAXC])
+        timer = jnp.where(changed, 0, st[S_TIMER] + 1)
+
+        we_ok = (wlab > 0) & (elab > 0)
+        ns_ok = (nlab > 0) & (slab > 0)
+        s_val = jnp.where(we_ok, wlab, nlab)
+        d_val = jnp.where(we_ok, elab, slab)
+
+        flush = st[S_FLUSH]
+        collecting = flush == 0
+        complete = collecting & (we_ok | ns_ok) & (glab > 0) & (timer >= STABLE_WAIT)
+
+        w = _W()
+        hr, hc = st[S_HOME_R], st[S_HOME_C]
+        w.put(FET_S, hr, hc, jnp.where(complete, s_val, 0))
+        w.put(FET_D, hr, hc, jnp.where(complete, d_val, 0))
+        w.put(FET_G, hr, hc, jnp.where(complete, glab, 0))
+        w.put(FET_IR0, hr, hc, jnp.where(complete, BIG - minr, 0))
+        w.put(FET_IC0, hr, hc, jnp.where(complete, BIG - minc, 0))
+        w.put(FET_R1, hr, hc, jnp.where(complete, maxr, 0))
+        w.put(FET_C1, hr, hc, jnp.where(complete, maxc, 0))
+        flushing = complete | (flush > 0)
+        w.put_window(FET_DONE, coords, jnp.where(flushing & gate, 1, 0))
+
+        new_flush = jnp.where(complete, 3, jnp.maximum(flush - 1, 0))
+        give_up = collecting & (timer > FET_TIMEOUT)
+        done = (flush > 0) & (new_flush == 0)
+
+        # a starved fet output usually means an *unlabelled* diff side — convert
+        # straight to a labeller for it (irrelevancy correction doing useful work)
+        unlab = cond & (labs == 0)
+        can_relabel, uidx = _first_idx(unlab.reshape(-1))
+        rl_layer, rl_cell = uidx // 9, uidx % 9
+        relabel = give_up & can_relabel
+        episode = st[S_EPISODE]
+        new_type = jnp.where(done | give_up,
+                             jnp.where(relabel, LABELLER, PROPAGATOR), FET_OUTPUT)
+
+        st = st.at[S_MINR].set(minr).at[S_MINC].set(minc) \
+               .at[S_MAXR].set(maxr).at[S_MAXC].set(maxc) \
+               .at[S_NLAB].set(nlab).at[S_WLAB].set(wlab).at[S_ELAB].set(elab) \
+               .at[S_SLAB].set(slab).at[S_GLAB].set(glab) \
+               .at[S_FLUSH].set(new_flush).at[S_TIMER].set(timer)
+        st_lab = st.at[S_LABEL].set(episode * ctx.n_agents + ctx.agent_id + 1) \
+                   .at[S_LAYER].set(rl_layer).at[S_TIMER].set(0) \
+                   .at[S_EPISODE].set(episode + 1)
+        st = jnp.where(relabel, st_lab, st)
+
+        scores = jnp.where(gate[NEIGH], 2.0, -1.0)
+        pos = _walk(ctx, scores)
+        pos = jnp.where(relabel, coords[rl_cell], pos)
+        return AgentUpdate(w.pack(), st, new_type, jnp.float32(1.0), pos)
+
+    behaviors = [finder, labeller, fet_labeller, fet_output, contact_finder,
+                 director, propagator]
+    return AgentModel(behaviors, NUM_CHANNELS, STATE_SIZE, K_WRITES,
+                      presence_channel=PRESENCE)
+
+
+# ---------------------------------------------------------------------------
+# observer: grid construction, termination, harvesting
+# ---------------------------------------------------------------------------
+def make_grid(layout: np.ndarray) -> jnp.ndarray:
+    """(6,H,W) layout -> (NUM_CHANNELS,H,W) blackboard."""
+    _, h, w = layout.shape
+    grid = np.zeros((NUM_CHANNELS, h, w), np.int32)
+    grid[:6] = layout
+    return jnp.asarray(grid)
+
+
+def _shift(x, dr, dc):
+    # margins keep wrap-around harmless (border cells are empty)
+    return jnp.roll(x, (dr, dc), (0, 1))
+
+
+def _shift_max(lab, cond):
+    """One synchronous max-diffusion step of a label plane within its conductor mask."""
+    out = lab
+    for dr, dc in ((-1, 0), (1, 0), (0, -1), (0, 1)):
+        out = jnp.maximum(out, jnp.where(_shift(cond, dr, dc) & cond,
+                                         _shift(lab, dr, dc), 0))
+    return out
+
+
+def _region_max(x, mask, rounds: int = 8):
+    """Max-reduce ``x`` over each connected region of ``mask`` (regions here have
+    diameter << rounds)."""
+    x = jnp.where(mask, x, 0)
+    for _ in range(rounds):
+        for dr, dc in ((-1, 0), (1, 0), (0, -1), (0, 1)):
+            x = jnp.maximum(x, jnp.where(_shift(mask, dr, dc) & mask,
+                                         _shift(x, dr, dc), 0))
+    return x
+
+
+def done_fn(grid) -> jax.Array:
+    poly = grid[POLY] > 0
+    diff_c = (grid[DIFF] > 0) & ~poly
+    conds = [grid[M1] > 0, grid[M2] > 0, poly, diff_c]
+    ok = jnp.array(True)
+    for lyr in range(4):
+        lab, cond = grid[LAB0 + lyr], conds[lyr]
+        ok &= jnp.all(~cond | (lab > 0))
+        ok &= jnp.all(_shift_max(lab, cond) == lab)
+
+    # FET records: every gate region has one, and it matches the fixpoint side labels.
+    gates = poly & (grid[DIFF] > 0)
+    dlab = jnp.where(diff_c, grid[LAB0 + DIFF], 0)
+    adj = {d: _shift(dlab, dr, dc)
+           for d, (dr, dc) in zip("NWES", ((1, 0), (0, 1), (0, -1), (-1, 0)))}
+    n_, w_, e_, s_ = (_region_max(adj[d], gates) for d in "NWES")
+    we_ok = (w_ > 0) & (e_ > 0)
+    sd_hi = jnp.where(we_ok, jnp.maximum(w_, e_), jnp.maximum(n_, s_))
+    sd_lo = jnp.where(we_ok, jnp.minimum(w_, e_), jnp.minimum(n_, s_))
+    rec = grid[FET_S] > 0
+    rec_hi = jnp.maximum(grid[FET_S], grid[FET_D])
+    rec_lo = jnp.minimum(grid[FET_S], grid[FET_D])
+    rows = jax.lax.broadcasted_iota(jnp.int32, gates.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, gates.shape, 1)
+    r1 = _region_max(rows, gates)
+    c1 = _region_max(cols, gates)
+    ir0 = _region_max(BIG - rows, gates)
+    ic0 = _region_max(BIG - cols, gates)
+    ok &= jnp.all(~rec | ((rec_hi == sd_hi) & (rec_lo == sd_lo)
+                          & (grid[FET_G] == grid[LAB0 + POLY])
+                          & (grid[FET_R1] == r1) & (grid[FET_C1] == c1)
+                          & (grid[FET_IR0] == ir0) & (grid[FET_IC0] == ic0)))
+    ok &= jnp.all(~gates | (_region_max(rec.astype(jnp.int32), gates) > 0))
+    ok &= jnp.all(~gates | (grid[FET_DONE] > 0))
+
+    # contact records: per-cell exact (record lives on the contact cell itself)
+    con = grid[CONTACT] > 0
+    crec = grid[CON_A] > 0
+    m2lab = jnp.where(conds[1], grid[LAB0 + M2], 0)
+    plab = jnp.where(poly, grid[LAB0 + POLY], 0)
+    olab = jnp.maximum(jnp.maximum(m2lab, plab), dlab)
+    ok &= jnp.all(~crec | ((grid[CON_A] == grid[LAB0 + M1]) & (grid[CON_B] == olab)))
+    ok &= jnp.all(~con | (_region_max(crec.astype(jnp.int32), con) > 0))
+    ok &= jnp.all(~con | (grid[CON_DONE] > 0))
+    return ok
+
+
+class SimNetlist(NamedTuple):
+    fets: frozenset          # Fet records with sim labels in sd/g node slots
+    equivs: frozenset
+    label_of: dict           # (layer, oracle_comp) -> set of sim labels on it
+    duplicates: int          # redundant records emitted (paper: expected for contacts)
+
+
+def harvest(grid: np.ndarray, layout: np.ndarray) -> SimNetlist:
+    """Read the records the agents wrote to the blackboard and deduplicate them by
+    oracle region (the paper's extractor emits redundant statements; the harvester is
+    the 'output file' reader)."""
+    grid = np.asarray(grid)
+    comp = {lyr: reference.label_components(reference.conductor_mask(layout, lyr))[0]
+            for lyr in reference.CONDUCTORS}
+    gate_mask = (layout[POLY] > 0) & (layout[DIFF] > 0)
+    gate_comp, _ = reference.label_components(gate_mask)
+    con_comp, _ = reference.label_components(layout[CONTACT] > 0)
+
+    dup = 0
+    fets_by_gate: dict[int, tuple] = {}
+    for r, c in np.argwhere(grid[FET_S] > 0):
+        gid = int(gate_comp[r, c])
+        l = int(grid[FET_R1, r, c]) - (BIG - int(grid[FET_IR0, r, c])) + 1
+        w = int(grid[FET_C1, r, c]) - (BIG - int(grid[FET_IC0, r, c])) + 1
+        rec = (int(grid[FET_S, r, c]), int(grid[FET_D, r, c]), int(grid[FET_G, r, c]),
+               l, w, 'p' if layout[PSEL, r, c] > 0 else 'n')
+        if gid in fets_by_gate:
+            dup += 1
+        fets_by_gate[gid] = rec
+    fets = frozenset(
+        reference.Fet(pol=pol, sd=frozenset({('sim', s), ('sim', d)}), g=('sim', g),
+                      l=min(l, w), w=max(l, w))
+        for (s, d, g, l, w, pol) in fets_by_gate.values())
+
+    equivs_by_con: dict[int, frozenset] = {}
+    for r, c in np.argwhere(grid[CON_A] > 0):
+        cid = int(con_comp[r, c])
+        pair = frozenset({('sim', int(grid[CON_A, r, c])),
+                          ('sim', int(grid[CON_B, r, c]))})
+        if cid in equivs_by_con:
+            dup += 1
+        equivs_by_con[cid] = pair
+    equivs = frozenset(reference.Equiv(nodes=p) for p in equivs_by_con.values())
+
+    # oracle-component -> sim-label map (must be consistent & injective for correctness)
+    label_of = {}
+    for lyr in reference.CONDUCTORS:
+        lab_plane = grid[LAB0 + lyr]
+        for cid in range(1, comp[lyr].max() + 1):
+            vals = set(lab_plane[comp[lyr] == cid].tolist())
+            label_of[(lyr, cid)] = vals
+    return SimNetlist(fets=fets, equivs=equivs, label_of=label_of, duplicates=dup)
+
+
+def netlists_equivalent(sim: SimNetlist, oracle: reference.Netlist) -> tuple[bool, str]:
+    """Check the agent netlist matches the oracle up to node renaming."""
+    mapping = {}
+    used = set()
+    for (lyr, cid), vals in sim.label_of.items():
+        if len(vals) != 1:
+            return False, f"component ({lyr},{cid}) has labels {vals}"
+        v = next(iter(vals))
+        if v == 0:
+            return False, f"component ({lyr},{cid}) unlabelled"
+        if v in used:
+            return False, f"sim label {v} reused across components"
+        used.add(v)
+        mapping[(lyr, cid)] = ('sim', v)
+
+    o_fets = frozenset(
+        reference.Fet(pol=f.pol, sd=frozenset(mapping[n] for n in f.sd),
+                      g=mapping[f.g], l=f.l, w=f.w)
+        for f in oracle.fets)
+    if o_fets != sim.fets:
+        return False, f"fets differ: oracle={o_fets - sim.fets} sim={sim.fets - o_fets}"
+    o_eq = frozenset(
+        reference.Equiv(nodes=frozenset(mapping[n] for n in e.nodes))
+        for e in oracle.equivs)
+    if o_eq != sim.equivs:
+        return False, f"equivs differ: oracle={o_eq - sim.equivs} sim={sim.equivs - o_eq}"
+    return True, "ok"
+
+
+# ---------------------------------------------------------------------------
+# one-call drivers
+# ---------------------------------------------------------------------------
+def run_extraction(layout: np.ndarray, n_agents: int, seed: int = 0,
+                   max_steps: int = 4000, record: bool = False):
+    """Run the full extraction. Returns (grid, steps_taken, populations|None)."""
+    grid = make_grid(layout)
+    model = make_extractor(n_agents, (grid.shape[1], grid.shape[2]))
+    key = jax.random.PRNGKey(seed)
+    ka, kr = jax.random.split(key)
+    agents = uniform_random_agents(ka, n_agents, grid.shape[1], grid.shape[2],
+                                   STATE_SIZE, init_type=FINDER)
+    if record:
+        grid, agents, steps, pops = model.run_scan(grid, agents, kr, max_steps,
+                                                   done_fn=done_fn, record=True)
+        return np.asarray(grid), int(steps), np.asarray(pops)
+    grid, agents, steps = model.run_while(grid, agents, kr, max_steps, done_fn)
+    return np.asarray(grid), int(steps), None

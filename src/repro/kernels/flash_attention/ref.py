@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D) -> (B, H, S, D), fp32 math."""
+    b, h, s, d = q.shape
+    hk = k.shape[1]
+    g = h // hk
+    qf = q.astype(jnp.float32).reshape(b, hk, g, s, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qf, kf) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jnp.exp(scores - scores.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, vf)
+    return out.reshape(b, h, s, d).astype(q.dtype)

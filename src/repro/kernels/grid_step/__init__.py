@@ -1,0 +1,1 @@
+from .ops import grid_step, grid_step_ref  # noqa: F401

@@ -1,0 +1,16 @@
+"""jit'd public wrapper for the grid stencil kernel."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import grid_step as _kernel_call
+from .ref import grid_step_ref
+
+
+def grid_step(labels, cond, *, band: int = 8, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _kernel_call(labels, cond, band=band, interpret=interpret)
+
+
+__all__ = ["grid_step", "grid_step_ref"]

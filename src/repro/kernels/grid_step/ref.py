@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the blackboard max-diffusion stencil."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def grid_step_ref(labels, cond):
+    """One synchronous step of label := max over 4-neighbours within cond."""
+    c = cond > 0
+    out = labels
+    for dr, dc in ((-1, 0), (1, 0), (0, -1), (0, 1)):
+        sh = jnp.roll(labels, (dr, dc), (0, 1))
+        sc = jnp.roll(c, (dr, dc), (0, 1))
+        # roll wrap: zero out the wrapped row/col
+        if dr == -1:
+            sh, sc = sh.at[-1].set(0), sc.at[-1].set(False)
+        if dr == 1:
+            sh, sc = sh.at[0].set(0), sc.at[0].set(False)
+        if dc == -1:
+            sh, sc = sh.at[:, -1].set(0), sc.at[:, -1].set(False)
+        if dc == 1:
+            sh, sc = sh.at[:, 0].set(0), sc.at[:, 0].set(False)
+        out = jnp.maximum(out, jnp.where(sc & c, sh, 0))
+    return jnp.where(c, out, labels)

@@ -1,0 +1,1 @@
+from .ops import gmm_ref, moe_gmm  # noqa: F401

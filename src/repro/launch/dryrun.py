@@ -1,0 +1,307 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on 512
+placeholder devices; emit memory / cost / collective roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --arch ... --shape ... --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # all 40 cells x 2 meshes
+
+Per-cell results are appended as JSON lines to --out (default
+benchmarks/results/dryrun.jsonl) — the roofline tables in EXPERIMENTS.md are built
+from that file.
+"""
+# The VERY FIRST lines, before ANY other import — jax locks the device count on
+# first init, and ONLY the dry-run may see 512 placeholder devices:
+import os  # noqa: E402
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                    # noqa: E402
+from repro.configs.base import ParallelConfig, TrainConfig  # noqa: E402
+from repro.dist import sharding as shd       # noqa: E402
+from repro.launch import roofline            # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model               # noqa: E402
+from repro.train import train_step as ts     # noqa: E402
+
+# TPU v5e hardware constants (per assignment)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+HBM_BYTES = 16 * 2 ** 30   # v5e HBM capacity
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=\n]*?"
+    r"\s(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\([^\n]*")
+
+# wire-traffic multiplier per op kind (ring algorithms, result-shape accounting)
+_COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_WHILE_RE = re.compile(r"op_name=\"[^\"]*?/while/")
+
+
+def collective_bytes(hlo_text: str, scan_trips: int = 1) -> tuple[float, dict]:
+    """Per-device wire bytes, summed over collective ops in the partitioned HLO
+    (shapes in an SPMD module are local/per-device).
+
+    A collective that lives inside a ``lax.scan`` (while) body appears ONCE in the
+    HLO text but executes once per layer — we detect loop membership from the op's
+    jax-level op_name metadata (``.../while/body/...``) and multiply those ops by
+    ``scan_trips`` (the depth of the layer scan). Without this the collective term
+    is ~L x under-counted for scanned models."""
+    total = 0.0
+    by_kind: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        trips = scan_trips if _WHILE_RE.search(m.group(0)) else 1
+        eff = nbytes * _COLL_FACTOR[kind] * trips
+        total += eff
+        by_kind[kind] = by_kind.get(kind, 0.0) + eff
+    return total, by_kind
+
+
+def _flops_bytes(compiled) -> tuple[float, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def _memory(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        out[k] = int(getattr(ma, k, 0))
+    out["total_nonaliased"] = (out["argument_size_in_bytes"]
+                               + out["output_size_in_bytes"]
+                               + out["temp_size_in_bytes"]
+                               - out["alias_size_in_bytes"])
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               pcfg: ParallelConfig = ParallelConfig(),
+               opt_dtype: str = "float32", factored: bool = False):
+    """Lower + compile one (arch, shape, mesh) cell; return the roofline record."""
+    cfg = configs.get_config(arch)
+    if pcfg.remat != "none":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat=pcfg.remat)
+    if pcfg.capacity_factor is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capacity_factor=pcfg.capacity_factor)
+    shape = configs.get_shape(shape_name)
+    okay, why = configs.cell_supported(cfg, shape)
+    if not okay:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.models import layers as _layers
+    _layers.set_mesh_axes(mesh)
+    if cfg.num_experts:
+        import dataclasses
+        dp = mesh.devices.size // mesh.shape["model"]
+        cfg = dataclasses.replace(cfg, dispatch_groups=dp)
+    tcfg = TrainConfig()
+    batch_abs = configs.input_specs(cfg, shape)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        state_abs = jax.eval_shape(
+            lambda: ts.init_train_state(jax.random.PRNGKey(0), cfg, tcfg,
+                                        state_dtype=jnp.dtype(opt_dtype),
+                                        factored=factored))
+        state_shard = shd.train_state_shardings(state_abs, cfg, mesh, pcfg)
+        batch_shard = shd.batch_shardings(batch_abs, mesh, pcfg)
+        rep = NamedSharding(mesh, P())
+        fn = partial(ts.train_step, cfg=cfg, tcfg=tcfg)
+        with mesh:
+            lowered = jax.jit(
+                fn, in_shardings=(state_shard, batch_shard),
+                out_shardings=(state_shard, rep),
+                donate_argnums=0,
+            ).lower(state_abs, batch_abs)
+            compiled = lowered.compile()
+        tokens = shape.global_batch * shape.seq_len
+    else:
+        params_abs = jax.eval_shape(
+            lambda: model.init_params(jax.random.PRNGKey(0), cfg))
+        bias_abs = (jax.ShapeDtypeStruct((cfg.num_layers, cfg.num_experts),
+                                         jnp.float32)
+                    if cfg.num_experts else None)
+        param_shard = shd.param_shardings(params_abs, cfg, mesh, pcfg)
+        batch_shard = shd.batch_shardings(batch_abs, mesh, pcfg)
+        rep = NamedSharding(mesh, P())
+        bias_shard = rep if cfg.num_experts else None
+
+        if shape.kind == "prefill":
+            cache_abs = jax.eval_shape(
+                lambda: model.init_cache(cfg, shape.global_batch, shape.seq_len))
+            cache_shard = shd.cache_shardings(cache_abs, cfg, mesh, pcfg)
+
+            def fn(params, batch, cache, bias):
+                return model.prefill(params, cfg, batch, cache, router_bias=bias)
+
+            with mesh:
+                lowered = jax.jit(
+                    fn,
+                    in_shardings=(param_shard, batch_shard, cache_shard, bias_shard),
+                    out_shardings=(rep, cache_shard),
+                    donate_argnums=2,
+                ).lower(params_abs, batch_abs, cache_abs, bias_abs)
+                compiled = lowered.compile()
+            tokens = shape.global_batch * shape.seq_len
+        else:  # decode
+            cache_abs = jax.eval_shape(
+                lambda: model.init_cache(cfg, shape.global_batch, shape.seq_len))
+            cache_shard = shd.cache_shardings(cache_abs, cfg, mesh, pcfg)
+
+            def fn(params, batch, cache, bias):
+                return model.decode_step(params, cfg, batch, cache,
+                                         router_bias=bias)
+
+            with mesh:
+                lowered = jax.jit(
+                    fn,
+                    in_shardings=(param_shard, batch_shard, cache_shard, bias_shard),
+                    out_shardings=(rep, cache_shard),
+                    donate_argnums=2,
+                ).lower(params_abs, batch_abs, cache_abs, bias_abs)
+                compiled = lowered.compile()
+            tokens = shape.global_batch
+
+    compile_s = time.time() - t0
+    xla_flops_pd, xla_bytes_pd = _flops_bytes(compiled)
+    from repro.models.transformer import segments as _segments
+    scan_trips = max(reps for _, reps in _segments(cfg))
+    coll_pd, coll_by_kind = collective_bytes(compiled.as_text(), scan_trips)
+    mem = _memory(compiled)
+
+    n_chips = mesh.devices.size
+    params_abs2 = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0), cfg))
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params_abs2))
+    n_active = model.active_param_count(params_abs2, cfg)
+    # standard accounting: 6·N_active·D for training (fwd 2ND + bwd 4ND),
+    # 2·N_active·D for inference
+    model_flops = (6.0 if shape.kind == "train" else 2.0) * n_active * tokens
+
+    terms = roofline.analytic_terms(cfg, shape, pcfg, n_params, n_active, n_chips,
+                                    opt_dtype=opt_dtype, factored=factored,
+                                    peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW)
+    t_coll = coll_pd / LINK_BW
+    dominant = max(("compute", terms.t_compute), ("memory", terms.t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    bound = max(terms.t_compute, terms.t_memory, t_coll)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "pcfg": {"fsdp": pcfg.fsdp, "seq_shard": pcfg.seq_shard,
+                 "expert_parallel": pcfg.expert_parallel, "remat": pcfg.remat,
+                 "capacity_factor": pcfg.capacity_factor,
+                 "opt_dtype": opt_dtype, "factored": factored},
+        "chips": int(n_chips),
+        "params": n_params, "active_params": n_active, "tokens_per_step": tokens,
+        # analytic roofline terms (see launch/roofline.py for the model)
+        "flops_per_device": terms.flops_per_device,
+        "hbm_bytes_per_device": terms.hbm_bytes_per_device,
+        "state_bytes_per_device": terms.state_bytes_per_device,
+        "collective_bytes_per_device": coll_pd, "collective_by_kind": coll_by_kind,
+        "t_compute_s": terms.t_compute, "t_memory_s": terms.t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_total": model_flops,
+        "useful_flops_frac": model_flops / max(terms.flops_total, 1.0),
+        "roofline_frac": (model_flops / n_chips / PEAK_FLOPS) / max(bound, 1e-12),
+        # XLA observables (CPU backend: while-body undercount / unfused upper bound —
+        # recorded as secondary signals, see EXPERIMENTS.md §Methodology)
+        "xla_flops_per_device": xla_flops_pd,
+        "xla_bytes_per_device": xla_bytes_pd,
+        "memory": mem,
+        "fits_hbm": terms.state_bytes_per_device <= 0.9 * HBM_BYTES,
+        "compile_s": compile_s,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun.jsonl")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--no-expert-parallel", action="store_true")
+    ap.add_argument("--remat", default="none", choices=["none", "dots", "full"])
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--opt-dtype", default="float32")
+    ap.add_argument("--factored", action="store_true")
+    args = ap.parse_args()
+
+    pcfg = ParallelConfig(fsdp=not args.no_fsdp, seq_shard=args.seq_shard,
+                          expert_parallel=not args.no_expert_parallel,
+                          remat=args.remat, capacity_factor=args.capacity_factor)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in sorted(configs.ARCHS):
+            for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all) required"
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    for arch, shape, mp in cells:
+        try:
+            rec = lower_cell(arch, shape, mp, pcfg,
+                             opt_dtype=args.opt_dtype, factored=args.factored)
+        except Exception as e:  # a failing cell is a bug — record it loudly
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "error", "error": f"{type(e).__name__}: {e}"[:2000]}
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        if rec["status"] == "ok":
+            print(f"{arch:24s} {shape:12s} {rec['mesh']:8s} OK "
+                  f"compute={rec['t_compute_s']:.3e}s "
+                  f"memory={rec['t_memory_s']:.3e}s "
+                  f"coll={rec['t_collective_s']:.3e}s "
+                  f"dom={rec['dominant']:10s} roof={rec['roofline_frac']:.2f} "
+                  f"fits={rec['fits_hbm']} compile={rec['compile_s']:.0f}s",
+                  flush=True)
+        else:
+            print(f"{arch:24s} {shape:12s} {rec['mesh']:8s} "
+                  f"{rec['status'].upper()}: {rec.get('reason', rec.get('error'))}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Production mesh construction. A FUNCTION, not a module constant — importing this
+module must never touch jax device state (smoke tests see 1 device; only the dry-run
+forces 512 host devices)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Whatever this host actually has — used by examples and CPU tests."""
+    n = len(jax.devices())
+    model_axis = min(model_axis, n)
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

@@ -1,0 +1,78 @@
+"""Serving entry point: batched prefill + decode on the host's devices, optionally
+restoring trained parameters from a checkpoint directory.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+        --batch 4 --steps 32 [--restore /tmp/run1]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.dist import checkpoint as ckpt
+from repro.launch.mesh import make_host_mesh
+from repro.models import layers as layers_mod
+from repro.models import model as model_lib
+from repro.serve import decode as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(configs.ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--restore", default=None,
+                    help="checkpoint dir from repro.launch.train")
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    mesh = make_host_mesh()
+    layers_mod.set_mesh_axes(mesh)
+
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    bias = (jnp.zeros((cfg.num_layers, cfg.num_experts))
+            if cfg.num_experts else None)
+    if args.restore:
+        from repro.configs.base import TrainConfig
+        from repro.train import train_step as ts
+        like = ts.init_train_state(jax.random.PRNGKey(0), cfg, TrainConfig())
+        state, step = ckpt.restore(args.restore, like)
+        assert state is not None, f"no checkpoint in {args.restore}"
+        params = state.params
+        if state.router is not None:
+            bias = state.router.bias
+        print(f"restored step {step} from {args.restore}")
+
+    key = jax.random.PRNGKey(1)
+    prompts = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len),
+                                            0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        prompts["patches"] = jax.random.normal(
+            key, (args.batch, cfg.frontend_tokens, cfg.frontend_dim))
+    if cfg.family == "audio":
+        prompts["frames"] = jax.random.normal(
+            key, (args.batch, args.prompt_len, cfg.frontend_dim))
+
+    with mesh:
+        t0 = time.perf_counter()
+        toks, _ = serve_mod.generate(
+            params, cfg, prompts, max_cache=args.prompt_len + args.steps + 8,
+            steps=args.steps, router_bias=bias)
+        toks.block_until_ready()
+    dt = time.perf_counter() - t0
+    print(f"{args.batch} x {args.steps} tokens in {dt:.1f}s (incl. compile); "
+          f"{args.batch * args.steps / dt:.1f} tok/s")
+    for i, row in enumerate(toks):
+        print(f"  seq {i}: {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Pure-JAX model zoo: dense / MoE / SSM / hybrid / VLM / audio decoder backbones."""
+from . import frontends, layers, model, moe, rglru, ssm, transformer  # noqa: F401

@@ -1,0 +1,25 @@
+"""Modality frontend stubs for the VLM / audio architectures.
+
+Per the assignment, ``[vlm]``/``[audio]`` entries specify the transformer *backbone*
+only — the modality frontend (SigLIP vision tower, EnCodec codec) is a stub whose
+``input_specs()`` provides precomputed patch/frame embeddings. Here we keep only the
+learned projection from frontend embedding space into the backbone's d_model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense_init, dtype_of
+
+Array = jax.Array
+
+
+def init_frontend(key, cfg: ModelConfig) -> dict:
+    return {"proj": dense_init(key, cfg.frontend_dim, cfg.d_model, dtype_of(cfg))}
+
+
+def project_frontend(params, emb: Array) -> Array:
+    """(B, P, frontend_dim) precomputed embeddings -> (B, P, d_model) prefix."""
+    return emb.astype(params["proj"].dtype) @ params["proj"]

@@ -1,0 +1,363 @@
+"""Building-block layers (pure JAX, no framework): norms, rotary, attention, MLPs.
+
+Conventions:
+  * params are nested dicts of jnp arrays; init_* builds them, apply is a pure fn
+  * activations follow ``cfg.dtype`` (bf16 on TPU); softmax/normalization in fp32
+  * attention supports MHA / GQA / MQA (num_kv_heads), optional qk-norm, optional
+    local (sliding-window) masking, and a KV-cache decode path
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+Array = jax.Array
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mesh-aware activation sharding constraints
+# ---------------------------------------------------------------------------
+DP = ("pod", "data")   # logical data-parallel axes (filtered to the live mesh)
+
+# Axis names/sizes the current launcher's mesh provides. Classic `with mesh:`
+# contexts do not populate jax.sharding.get_abstract_mesh(), so launchers (dryrun,
+# train, serve) declare their mesh explicitly via set_mesh_axes(); CPU unit tests
+# leave this empty and every constraint is a no-op.
+_MESH_AXES: dict[str, int] = {}
+
+
+def set_mesh_axes(axes, sizes=None) -> None:
+    global _MESH_AXES
+    if hasattr(axes, "shape") and hasattr(axes.shape, "keys"):  # a Mesh
+        _MESH_AXES = dict(axes.shape)
+    elif sizes is not None:
+        _MESH_AXES = dict(zip(tuple(axes), tuple(sizes)))
+    else:
+        _MESH_AXES = {a: 0 for a in axes}      # sizes unknown: no divisibility check
+
+
+def _current_axes() -> dict[str, int]:
+    if _MESH_AXES:
+        return _MESH_AXES
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        return dict(m.shape) if m is not None and m.axis_names else {}
+    except Exception:
+        return {}
+
+
+def constrain(x: Array, *spec) -> Array:
+    """with_sharding_constraint that no-ops outside a mesh, drops axis names the
+    current mesh doesn't have, and drops axes that don't divide their dim (an
+    8-kv-head tensor constrained over a 16-way axis forces GSPMD into involuntary
+    full rematerialization — observed, not hypothetical)."""
+    axes = _current_axes()
+    if not axes:
+        return x
+
+    def keep(s, dim):
+        if s is None:
+            return None
+        cand = tuple(a for a in (s if isinstance(s, (tuple, list)) else (s,))
+                     if a in axes)
+        if not cand:
+            return None
+        size = 1
+        for a in cand:
+            size *= max(axes[a], 1)
+        if axes.get(cand[0], 0) and dim % size != 0:
+            return None
+        return cand if isinstance(s, (tuple, list)) else cand[0]
+
+    filtered = tuple(keep(s, d) for s, d in zip(spec, x.shape))
+    if all(s is None for s in filtered):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*filtered))
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> Array:
+    scale = 1.0 / jnp.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(dim: int) -> dict:
+    return {"scale": jnp.zeros((dim,), jnp.float32)}
+
+
+def rmsnorm(params, x: Array, cfg: ModelConfig) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+    # zeros-init scale applied as (1 + g) — covers both the llama and gemma
+    # conventions (they differ only in checkpoint layout, which we do not load)
+    return (xf * (params["scale"] + 1.0)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # (..., S, 1, half): broadcast over the head dimension
+    angles = positions[..., :, None, None].astype(jnp.float32) * freq
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, hk, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(kq, d, h * hd, dt),
+        "wk": dense_init(kk, d, hk * hd, dt),
+        "wv": dense_init(kv, d, hk * hd, dt),
+        "wo": dense_init(ko, h * hd, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+def _qkv(params, x: Array, cfg: ModelConfig, positions: Array):
+    b, s, _ = x.shape
+    h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    # heads shard over 'model' (padded when h % tp != 0 — local waste, no gather);
+    # kv heads follow q heads (GQA groups stay co-located)
+    q = constrain((x @ params["wq"]).reshape(b, s, h, hd), DP, None, "model", None)
+    k = constrain((x @ params["wk"]).reshape(b, s, hk, hd), DP, None, "model", None)
+    v = constrain((x @ params["wv"]).reshape(b, s, hk, hd), DP, None, "model", None)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg)
+        k = rmsnorm(params["k_norm"], k, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Array, cfg: ModelConfig) -> Array:
+    """q: (B,Sq,H,D); k,v: (B,Skv,Hkv,D); mask: (B|1, Sq, Skv) bool (True=attend)."""
+    b, sq, h, hd = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    q = q.reshape(b, sq, hk, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, sq, h * hd)
+
+
+def _block_mask(q0, k0, cq: int, ckv: int, window: Optional[int],
+                prefix_len: Optional[Array]) -> Array:
+    """(cq, ckv) mask for a (q-chunk, kv-chunk) block at offsets (q0, k0)."""
+    qpos = q0 + jnp.arange(cq)[:, None]
+    kpos = k0 + jnp.arange(ckv)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    if prefix_len is not None:
+        m |= (qpos < prefix_len) & (kpos < prefix_len)
+    return m
+
+
+def _sdpa_chunked(q: Array, k: Array, v: Array, cfg: ModelConfig,
+                  window: Optional[int], prefix_len: Optional[Array],
+                  q_chunk: int = 1024, kv_chunk: int = 1024) -> Array:
+    """Flash-style attention on the XLA path: online softmax over KV chunks inside a
+    scan over Q chunks, with the inner pass rematerialized in the backward pass.
+    Never materializes the (S, S) score matrix — this is what keeps the 32k prefill
+    dry-run inside HBM. (On real TPU the Pallas kernel replaces this; same contract.)
+    """
+    b, s, h, hd = q.shape
+    hk = k.shape[2]
+    g = h // hk
+
+    def pick(target):
+        # largest power-of-two chunk <= target that divides s (handles odd lengths
+        # like 32768 + a 256-patch VLM prefix)
+        c = min(target, s)
+        while c > 1 and s % c:
+            c //= 2
+        return max(c, 1)
+
+    cq, ckv = pick(q_chunk), pick(kv_chunk)
+    nq, nkv = s // cq, s // ckv
+
+    # (B, K, G, S, D) / (B, K, S, D)
+    qt = q.reshape(b, s, hk, g, hd).transpose(0, 2, 3, 1, 4)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    def q_block(qi):
+        qc = jax.lax.dynamic_slice_in_dim(qt, qi * cq, cq, axis=3)
+
+        def kv_body(carry, kj):
+            m_run, l_run, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(kt, kj * ckv, ckv, axis=2)
+            vc = jax.lax.dynamic_slice_in_dim(vt, kj * ckv, ckv, axis=2)
+            s_blk = jnp.einsum("bkgqd,bktd->bkgqt", qc, kc).astype(jnp.float32)
+            s_blk = s_blk * scale
+            mask = _block_mask(qi * cq, kj * ckv, cq, ckv, window, prefix_len)
+            s_blk = jnp.where(mask, s_blk, -1e30)
+            m_new = jnp.maximum(m_run, jnp.max(s_blk, axis=-1))
+            p = jnp.exp(s_blk - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] \
+                + jnp.einsum("bkgqt,bktd->bkgqd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hk, g, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hk, g, cq, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
+                                          jnp.arange(nkv, dtype=jnp.int32))
+        return acc / jnp.maximum(l_f, 1e-30)[..., None]
+
+    # scan over q chunks; each chunk's inner pass is rematerialized in bwd
+    blocks = jax.lax.map(jax.checkpoint(q_block), jnp.arange(nq, dtype=jnp.int32))
+    # blocks: (NQ, B, K, G, CQ, D) -> (B, S, H*D)
+    out = blocks.transpose(1, 2, 3, 0, 4, 5).reshape(b, hk, g, s, hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, h * hd)
+    return out.astype(v.dtype)
+
+
+_CHUNK_THRESHOLD = 2048  # use the chunked path for sequences beyond this
+
+
+def _sdpa_dispatch(q, k, v, cfg: ModelConfig, window, prefix_len) -> Array:
+    s = q.shape[1]
+    if s > _CHUNK_THRESHOLD:
+        return _sdpa_chunked(q, k, v, cfg, window, prefix_len)
+    return _sdpa(q, k, v, causal_mask(s, s, window, prefix_len), cfg)
+
+
+def causal_mask(sq: int, skv: int, window: Optional[int] = None,
+                prefix_len: Optional[Array] = None) -> Array:
+    """(1, sq, skv) causal (optionally sliding-window) mask; sq positions are the
+    last sq of skv. ``prefix_len`` enables bidirectional attention within the first
+    ``prefix_len`` positions (prefix-LM, e.g. PaliGemma's image prefix)."""
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    kpos = jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    if prefix_len is not None:
+        m |= (qpos < prefix_len) & (kpos < prefix_len)
+    return m[None]
+
+
+def attention(params, x: Array, cfg: ModelConfig, window: Optional[int] = None,
+              prefix_len: Optional[Array] = None) -> Array:
+    """Full-sequence (train) attention."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(params, x, cfg, positions)
+    out = _sdpa_dispatch(q, k, v, cfg, window, prefix_len)
+    return out @ params["wo"]
+
+
+def attention_prefill(params, x: Array, cfg: ModelConfig, cache: dict,
+                      window: Optional[int] = None,
+                      prefix_len: Optional[Array] = None):
+    """Full-sequence pass that also fills the decode cache with k/v.
+
+    For sliding-window layers the cache is a ring buffer of size window; we store
+    the last ``window`` positions at their ring slots."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(params, x, cfg, positions)
+    out = _sdpa_dispatch(q, k, v, cfg, window, prefix_len)
+    s_max = cache["k"].shape[1]
+    if window is not None and s > s_max:
+        # keep only the last s_max positions, placed at their ring-buffer slots
+        slots = (jnp.arange(s - s_max, s)) % s_max
+        ck = cache["k"].at[:, slots].set(k[:, -s_max:])
+        cv = cache["v"].at[:, slots].set(v[:, -s_max:])
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k[:, :s_max], (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v[:, :s_max], (0, 0, 0, 0))
+    return out @ params["wo"], {"k": ck, "v": cv}
+
+
+def attention_decode(params, x: Array, cfg: ModelConfig, cache: dict, pos: Array,
+                     window: Optional[int] = None):
+    """One-token decode. cache: {'k','v': (B, S_max, Hkv, D)}; pos: () current index.
+
+    Returns (out, new_cache). The cache is a ring buffer when ``window`` is set
+    (bounded memory for sliding-window layers)."""
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos, (b, 1))
+    q, k, v = _qkv(params, x, cfg, positions)
+    s_max = cache["k"].shape[1]
+    slot = pos % s_max if window is not None else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    kpos = jnp.arange(s_max)[None, :]
+    if window is not None:
+        # ring buffer: valid slots are the last min(pos+1, s_max) written
+        age = (slot - kpos) % s_max
+        mask = age < jnp.minimum(pos + 1, s_max)
+    else:
+        mask = kpos <= pos
+    mask = jnp.broadcast_to(mask[:, None, :], (1, 1, s_max))
+    out = _sdpa(q, ck, cv, mask, cfg)
+    return out @ params["wo"], {"k": ck, "v": cv}
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, s_max: int, dtype) -> dict:
+    hk, hd = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, s_max, hk, hd), dtype),
+            "v": jnp.zeros((batch, s_max, hk, hd), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    dt = dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w_gate": dense_init(k1, d, f, dt),
+        "w_up": dense_init(k2, d, f, dt),
+        "w_down": dense_init(k3, f, d, dt),
+    }
+
+
+def mlp(params, x: Array, cfg: ModelConfig) -> Array:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = constrain(act(x @ params["w_gate"]) * (x @ params["w_up"]),
+                  DP, None, "model")
+    return h @ params["w_down"]

@@ -1,0 +1,156 @@
+"""Top-level model API: init / train loss / prefill / decode, uniform across families.
+
+Batch layouts (all fields optional per family):
+    train:   {"tokens": (B,S) i32, "patches": (B,P,Fd), "frames": (B,S,Fd)}
+    decode:  {"token": (B,1) i32, "frame": (B,1,Fd)} + cache + pos
+
+Losses are next-token cross-entropy in fp32; for VLM the loss is masked to the text
+positions (the patch prefix carries no labels).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import frontends, layers, transformer
+from .layers import dtype_of, embed_init, init_rmsnorm, rmsnorm
+
+Array = jax.Array
+
+
+class TrainOut(NamedTuple):
+    loss: Array
+    aux_loss: Array                # Switch aux loss (0 unless router_mode == 'aux')
+    load_frac: Optional[Array]     # (L, E) per-layer expert load fractions
+    drop_frac: Array
+    logits_mean_abs: Array         # cheap NaN/scale canary
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype_of(cfg)),
+        "stack": transformer.init_stack(ks[1], cfg),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = embed_init(ks[2], cfg.vocab_size, cfg.d_model, dtype_of(cfg))
+    if cfg.frontend_dim:
+        p["frontend"] = frontends.init_frontend(ks[3], cfg)
+    return p
+
+
+def _embed(params, cfg: ModelConfig, tokens: Array) -> Array:
+    # gather the (possibly fsdp-sharded) table at use, keep activations on DP
+    table = layers.constrain(params["embed"], "model", None)
+    x = table[tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.sqrt(cfg.d_model).astype(x.dtype)
+    return layers.constrain(x, layers.DP, None, None)
+
+
+def _head(params, cfg: ModelConfig, x: Array) -> Array:
+    x = rmsnorm(params["final_norm"], x, cfg)
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    table = layers.constrain(table, "model", None)
+    logits = (x @ table.T).astype(jnp.float32)
+    return layers.constrain(logits, layers.DP, None, "model")
+
+
+def _inputs_train(params, cfg: ModelConfig, batch: dict):
+    """Returns (x, prefix_len, label_mask_offset)."""
+    if cfg.family == "vlm":
+        prefix = frontends.project_frontend(params["frontend"], batch["patches"])
+        text = _embed(params, cfg, batch["tokens"])
+        x = jnp.concatenate([prefix, text], axis=1)
+        return x, prefix.shape[1]
+    if cfg.family == "audio":
+        # EnCodec frame embeddings (stub frontend) + code-token embeddings
+        x = _embed(params, cfg, batch["tokens"]) \
+            + frontends.project_frontend(params["frontend"], batch["frames"])
+        return x, 0
+    return _embed(params, cfg, batch["tokens"]), 0
+
+
+def train_loss(params, cfg: ModelConfig, batch: dict,
+               router_bias: Optional[Array] = None) -> TrainOut:
+    tokens = batch["tokens"]
+    x, plen = _inputs_train(params, cfg, batch)
+    prefix_len = jnp.asarray(plen) if plen else None
+    x, load, aux, drop = transformer.apply_stack(params["stack"], x, cfg,
+                                                 bias=router_bias,
+                                                 prefix_len=prefix_len)
+    x = x[:, plen:] if plen else x
+    logits = _head(params, cfg, x)                      # (B, S, V) fp32
+
+    targets = tokens[:, 1:]
+    lg = logits[:, :-1]
+    # vocab-sharded-friendly CE: logsumexp + one-hot contraction (no gather over the
+    # TP-sharded vocab dim — a take_along_axis would all-gather the full logits)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    correct = jnp.sum(lg * jax.nn.one_hot(targets, lg.shape[-1], dtype=lg.dtype),
+                      axis=-1)
+    loss = jnp.mean(lse - correct)
+    if cfg.router_mode == "aux" and cfg.num_experts:
+        loss = loss + cfg.aux_loss_coef * aux
+    return TrainOut(loss=loss, aux_loss=aux, load_frac=load, drop_frac=drop,
+                    logits_mean_abs=jnp.mean(jnp.abs(lg)))
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    return {
+        "layers": transformer.init_stack_cache(cfg, batch, s_max, dtype_of(cfg)),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, cache: dict,
+            router_bias: Optional[Array] = None):
+    """Batched prompt processing; fills the cache and returns last-position logits."""
+    x, plen = _inputs_train(params, cfg, batch)
+    prefix_len = jnp.asarray(plen) if plen else None
+    x, layer_caches = transformer.apply_stack_prefill(
+        params["stack"], x, cfg, cache["layers"], bias=router_bias,
+        prefix_len=prefix_len)
+    logits = _head(params, cfg, x[:, -1:])
+    new_cache = {"layers": layer_caches,
+                 "pos": jnp.asarray(x.shape[1], jnp.int32)}
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, batch: dict, cache: dict,
+                router_bias: Optional[Array] = None):
+    """One-token step for every sequence in the batch. Returns (logits, new_cache)."""
+    x = _embed(params, cfg, batch["token"])
+    if cfg.family == "audio":
+        x = x + frontends.project_frontend(params["frontend"], batch["frame"])
+    x, layer_caches = transformer.apply_stack_decode(
+        params["stack"], x, cfg, cache["layers"], cache["pos"], bias=router_bias)
+    logits = _head(params, cfg, x)
+    return logits, {"layers": layer_caches, "pos": cache["pos"] + 1}
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def active_param_count(params, cfg: ModelConfig) -> int:
+    """Per-token active parameters (MoE counts only k of E experts)."""
+    total = param_count(params)
+    if not cfg.num_experts:
+        return total
+
+    def expert_leaves(p):
+        return sum(int(x.size) for name in ("w_gate", "w_up", "w_down")
+                   for x in jax.tree.leaves(p.get(name, ())))
+
+    expert_total = 0
+    for seg in params["stack"]:
+        for pos_params in seg:
+            if isinstance(pos_params, dict) and "moe" in pos_params:
+                expert_total += expert_leaves(pos_params["moe"])
+    active_frac = cfg.experts_per_token / cfg.num_experts
+    return int(total - expert_total * (1.0 - active_frac))

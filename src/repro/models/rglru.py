@@ -1,0 +1,111 @@
+"""RecurrentGemma / Griffin recurrent block (arXiv:2402.19427): RG-LRU + conv.
+
+Train/prefill evaluates the linear recurrence with an associative scan (log-depth on
+TPU); decode carries (B, lru_width) state — O(1) per token, so the hybrid serves
+``long_500k`` with bounded memory (its attention layers are sliding-window).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense_init, dtype_of
+
+Array = jax.Array
+
+_C = 8.0  # the paper's fixed recurrence sharpness
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    w = cfg.lru_width or cfg.d_model
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # Lambda init so a = exp(-c*softplus(L)*r) lands in a useful decay range
+    lam = jax.random.uniform(k6, (w,), jnp.float32, 0.2, 0.9)
+    return {
+        "w_in": dense_init(k1, cfg.d_model, w, dt),
+        "w_gate_branch": dense_init(k2, cfg.d_model, w, dt),
+        "conv_w": (jax.random.normal(k3, (4, w), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_input_gate": dense_init(k4, w, w, dt),
+        "w_rec_gate": dense_init(k5, w, w, dt),
+        "lambda_raw": jnp.log(jnp.exp(lam) - 1.0),     # inverse softplus
+        "w_out": dense_init(jax.random.fold_in(key, 7), w, cfg.d_model, dt),
+    }
+
+
+def _conv4(params, u: Array) -> Array:
+    w = params["conv_w"]
+    out = u * w[-1]
+    for i in range(1, w.shape[0]):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :u.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out + params["conv_b"].astype(out.dtype)
+
+
+def _gates(params, u: Array):
+    """a_t (log-space) and gated input b_t for the recurrence h = a h + b."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_rec_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ params["w_input_gate"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lambda_raw"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) input normalization (the RG-LRU's variance preservation)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, b
+
+
+def rglru_scan(a: Array, b: Array) -> Array:
+    """h_t = a_t * h_{t-1} + b_t along axis 1 via associative scan."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(params, x: Array, cfg: ModelConfig) -> Array:
+    """Full-sequence Griffin recurrent block. x: (B,S,D) -> (B,S,D)."""
+    gate = jax.nn.gelu(x @ params["w_gate_branch"])
+    u = _conv4(params, x @ params["w_in"])
+    a, b = _gates(params, u)
+    h = rglru_scan(a, b).astype(x.dtype)
+    return (h * gate) @ params["w_out"]
+
+
+def rglru_block_prefill(params, x: Array, cfg: ModelConfig, cache: dict):
+    """Full-sequence pass that also produces the decode cache."""
+    gate = jax.nn.gelu(x @ params["w_gate_branch"])
+    u_pre = x @ params["w_in"]
+    u = _conv4(params, u_pre)
+    a, b = _gates(params, u)
+    h = rglru_scan(a, b)
+    y = (h.astype(x.dtype) * gate) @ params["w_out"]
+    k = 3
+    conv_tail = u_pre[:, -k:] if u_pre.shape[1] >= k else jnp.pad(
+        u_pre, ((0, 0), (k - u_pre.shape[1], 0), (0, 0)))
+    return y, {"conv": conv_tail, "h": h[:, -1]}
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, 3, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_block_decode(params, x: Array, cfg: ModelConfig, cache: dict):
+    """One-token step. x: (B,1,D)."""
+    gate = jax.nn.gelu(x @ params["w_gate_branch"])    # (B,1,W)
+    u_new = (x @ params["w_in"])                        # (B,1,W)
+    window = jnp.concatenate([cache["conv"], u_new], axis=1)   # (B,4,W)
+    u = jnp.einsum("bkw,kw->bw", window, params["conv_w"]) + params["conv_b"]
+    a, b = _gates(params, u[:, None, :])
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = (h[:, None, :].astype(x.dtype) * gate) @ params["w_out"]
+    return y, {"conv": window[:, 1:], "h": h}

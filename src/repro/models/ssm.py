@@ -1,0 +1,227 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Train/prefill uses the chunked dual form (intra-chunk quadratic + inter-chunk
+recurrence); decode carries an explicit (B, H, P, N) state — O(1) per token, which is
+what makes the ``long_500k`` shape servable. ngroups = 1 (B/C shared across heads),
+as in the published 130m config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import DP, constrain, dense_init, dtype_of, init_rmsnorm, rmsnorm
+
+Array = jax.Array
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    d_inner, h, n, _ = dims(cfg)
+    conv_dim = d_inner + 2 * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * n + h    # [z, x, B, C, dt]
+    return {
+        "in_proj": dense_init(k1, cfg.d_model, in_dim, dt),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, conv_dim), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),        # A = -exp(A_log) = -1 at init
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": init_rmsnorm(d_inner),
+        "out_proj": dense_init(k4, d_inner, cfg.d_model, dt),
+    }
+
+
+def _split(params, x: Array, cfg: ModelConfig):
+    """Project x into (z, xBC, dt). The fused in_proj weight is sliced *before* the
+    matmuls: slicing the fused activation instead cuts a 'model'-sharded tensor at
+    non-shard-aligned offsets, which GSPMD repairs with collective-permutes every
+    layer (observed ~0.5 GiB/step of slivers on mamba2-130m)."""
+    d_inner, h, n, _ = dims(cfg)
+    w = params["in_proj"]
+    conv_dim = d_inner + 2 * n
+    z = constrain(x @ w[:, :d_inner], DP, None, "model")
+    xbc = constrain(x @ w[:, d_inner:d_inner + conv_dim], DP, None, "model")
+    dt_raw = x @ w[:, -h:]                      # (B,S,H): tiny, replicated
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    return z, xbc, dt
+
+
+def _conv_train(params, xbc: Array) -> Array:
+    """Causal depthwise conv over the sequence (width cfg.ssm_conv)."""
+    w = params["conv_w"]                              # (K, C)
+    k = w.shape[0]
+    out = xbc * w[-1]
+    for i in range(1, k):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :xbc.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return jax.nn.silu(out + params["conv_b"].astype(out.dtype))
+
+
+def _segsum_decay(a: Array) -> Array:
+    """a: (..., L, H) per-step log-decay -> (..., H, L, L) lower-tri exp decays:
+    out[i, j] = exp(sum_{k=j+1..i} a_k) for j <= i else 0."""
+    acs = jnp.cumsum(a, axis=-2)                       # inclusive
+    diff = acs[..., :, None, :] - acs[..., None, :, :]  # (..., L, L, H) = acs_i - acs_j
+    l = a.shape[-2]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    diff = jnp.where(mask[..., None], diff, -jnp.inf)
+    return jnp.exp(jnp.moveaxis(diff, -1, -3))         # (..., H, L, L)
+
+
+def ssd_chunked(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
+                chunk: int, return_state: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); a_log: (H,); b, c: (B,S,N). Returns (B,S,H,P)
+    (and the final recurrence state (B,H,N,P) when ``return_state``)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    l = min(chunk, s)
+    pad = (-s) % l
+    if pad:
+        x, dt, b, c = (jnp.pad(v, ((0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 2))
+                       for v in (x, dt, b, c))
+    nc = x.shape[1] // l
+    xc = x.reshape(bsz, nc, l, h, p)
+    dtc = dt.reshape(bsz, nc, l, h)
+    bc = b.reshape(bsz, nc, l, n)
+    cc = c.reshape(bsz, nc, l, n)
+
+    a = dtc * (-jnp.exp(a_log))                        # (B,NC,L,H), negative
+    xdt = xc * dtc[..., None]
+    decay = _segsum_decay(a)                           # (B,NC,H,L,L)
+
+    # intra-chunk (the "attention-like" dual)
+    att = jnp.einsum("bcin,bcjn->bcij", cc, bc)
+    y = jnp.einsum("bcij,bchij,bcjhp->bcihp", att, decay, xdt)
+
+    # chunk-final states + inter-chunk recurrence
+    acs = jnp.cumsum(a, axis=2)
+    tail = jnp.exp(acs[:, :, -1:, :] - acs)            # (B,NC,L,H) decay to chunk end
+    states = jnp.einsum("bcln,bclh,bclhp->bchnp", bc, tail, xdt)
+    chunk_decay = jnp.exp(acs[:, :, -1, :])            # (B,NC,H)
+
+    def step(carry, inp):
+        st, dk = inp
+        new = carry * dk[..., None, None] + st
+        return new, carry                               # emit state *entering* the chunk
+
+    init = jnp.zeros((bsz, h, n, p), x.dtype)
+    final_state, entering = jax.lax.scan(step, init,
+                                         (jnp.moveaxis(states, 1, 0),
+                                          jnp.moveaxis(chunk_decay, 1, 0)))
+    entering = jnp.moveaxis(entering, 0, 1)            # (B,NC,H,N,P)
+
+    y_off = jnp.einsum("bcln,bclh,bchnp->bclhp", cc, jnp.exp(acs), entering)
+    y = (y + y_off).reshape(bsz, nc * l, h, p)[:, :s]
+    if return_state:
+        # note: with right-padding the pad steps have dt≈softplus(0)>0 but x=0, so
+        # they decay the state; callers that prefill must pass unpadded lengths
+        return y, final_state
+    return y
+
+
+def ssm_block(params, x: Array, cfg: ModelConfig) -> Array:
+    """Full-sequence mamba-2 mixer. x: (B,S,D) -> (B,S,D).
+
+    SSD sharding: heads don't divide typical TP axes (24 heads / 16-way), so the
+    state expansion is sharded on the head_dim p (always 2^k): every SSD einsum
+    then has p as a pure batch dim — no contraction over a sharded dim, hence no
+    per-layer all-reduces inside the chunk scan. B/C/dt are small and replicated."""
+    d_inner, h, n, p = dims(cfg)
+    z, xbc, dt = _split(params, x, cfg)
+    xbc = _conv_train(params, xbc)
+    xs = constrain(xbc[..., :d_inner].reshape(*x.shape[:2], h, p),
+                   DP, None, None, "model")
+    b = xbc[..., d_inner:d_inner + n]
+    c = xbc[..., d_inner + n:]
+    y = ssd_chunked(xs.astype(jnp.float32), dt, params["A_log"],
+                    b.astype(jnp.float32), c.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + params["D"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg)
+    return y @ params["out_proj"]
+
+
+def ssm_block_prefill(params, x: Array, cfg: ModelConfig, cache: dict):
+    """Full-sequence pass that also produces the decode cache (seq_len must be a
+    multiple of cfg.ssm_chunk so padded steps don't decay the state)."""
+    d_inner, h, n, p = dims(cfg)
+    z, xbc, dt = _split(params, x, cfg)
+    xbc_c = _conv_train(params, xbc)
+    xs = xbc_c[..., :d_inner].reshape(*x.shape[:2], h, p)
+    b = xbc_c[..., d_inner:d_inner + n]
+    c = xbc_c[..., d_inner + n:]
+    y, state = ssd_chunked(xs.astype(jnp.float32), dt, params["A_log"],
+                           b.astype(jnp.float32), c.astype(jnp.float32),
+                           cfg.ssm_chunk, return_state=True)
+    y = y + params["D"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg)
+    k = cfg.ssm_conv - 1
+    conv_tail = xbc[:, -k:] if xbc.shape[1] >= k else jnp.pad(
+        xbc, ((0, 0), (k - xbc.shape[1], 0), (0, 0)))
+    return y @ params["out_proj"], {"conv": conv_tail, "state": state}
+
+
+# ---------------------------------------------------------------------------
+# decode path: O(1) per token
+# ---------------------------------------------------------------------------
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_inner, h, n, p = dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, h, n, p), jnp.float32),
+    }
+
+
+def ssm_block_decode(params, x: Array, cfg: ModelConfig, cache: dict):
+    """One-token step. x: (B,1,D) -> (B,1,D), new cache."""
+    d_inner, h, n, p = dims(cfg)
+    z, xbc, dt = _split(params, x, cfg)                # (B,1,...)
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)   # (B,K,conv_dim)
+    conv = jnp.einsum("bkc,kc->bc", window, params["conv_w"])
+    xbc1 = jax.nn.silu(conv + params["conv_b"]).astype(x.dtype)
+
+    xs = xbc1[..., :d_inner].reshape(-1, h, p).astype(jnp.float32)
+    b = xbc1[..., d_inner:d_inner + n].astype(jnp.float32)
+    c = xbc1[..., d_inner + n:].astype(jnp.float32)
+    dt1 = dt[:, 0]                                     # (B,H)
+
+    decay = jnp.exp(dt1 * (-jnp.exp(params["A_log"])))  # (B,H)
+    xdt = xs * dt1[..., None]                           # (B,H,P)
+    state = cache["state"] * decay[..., None, None] \
+        + jnp.einsum("bn,bhp->bhnp", b, xdt)
+    y = jnp.einsum("bn,bhnp->bhp", c, state)
+    y = y + params["D"][:, None] * xs
+    y = y.reshape(-1, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg)
+    new_cache = {"conv": window[:, 1:], "state": state}
+    return y @ params["out_proj"], new_cache
+
+
+def ssd_reference(x: Array, dt: Array, a_log: Array, b: Array, c: Array) -> Array:
+    """Naive sequential recurrence — oracle for ssd_chunked."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    decay = jnp.exp(dt * (-jnp.exp(a_log)))            # (B,S,H)
+    xdt = x * dt[..., None]
+
+    def step(state, t):
+        state = state * decay[:, t][..., None, None] \
+            + jnp.einsum("bn,bhp->bhnp", b[:, t], xdt[:, t])
+        y = jnp.einsum("bn,bhnp->bhp", c[:, t], state)
+        return state, y
+
+    init = jnp.zeros((bsz, h, n, p), x.dtype)
+    _, ys = jax.lax.scan(step, init, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1)

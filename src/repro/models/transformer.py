@@ -1,0 +1,298 @@
+"""Decoder stack orchestration: blocks, scan-over-layers, hybrid patterns, KV caches.
+
+Layers are stacked (leading dim = depth) and applied with ``lax.scan`` — this keeps
+the HLO size O(1) in depth (compile time and program size matter at 61-layer/1T scale)
+and is the unit remat wraps around. Hybrid archs (recurrentgemma) tile their
+``block_pattern`` as scan-over-groups plus an unrolled tail.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers, moe, rglru, ssm
+from .layers import init_rmsnorm, rmsnorm
+
+Array = jax.Array
+
+MIXER_KINDS = ("attn", "local", "moe", "ssm", "rglru")
+
+
+def layer_kinds(cfg: ModelConfig) -> list[str]:
+    if cfg.family == "moe":
+        return ["moe"] * cfg.num_layers
+    if cfg.family == "ssm":
+        return ["ssm"] * cfg.num_layers
+    if cfg.family == "hybrid":
+        pat = list(cfg.block_pattern)
+        return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+    return ["attn"] * cfg.num_layers
+
+
+def segments(cfg: ModelConfig) -> list[tuple[tuple[str, ...], int]]:
+    """Decompose the depth into (pattern, repeats) scan segments."""
+    kinds = layer_kinds(cfg)
+    if cfg.family == "hybrid":
+        pat = tuple(cfg.block_pattern)
+        reps = cfg.num_layers // len(pat)
+        segs = [(pat, reps)] if reps else []
+        tail = tuple(kinds[reps * len(pat):])
+        if tail:
+            segs.append((tail, 1))
+        return segs
+    return [((kinds[0],), cfg.num_layers)]
+
+
+# ---------------------------------------------------------------------------
+# one block
+# ---------------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig, kind: str) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict[str, Any] = {"norm1": init_rmsnorm(cfg.d_model)}
+    if kind in ("attn", "local"):
+        p["mixer"] = layers.init_attention(k1, cfg)
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        p["mlp"] = layers.init_mlp(k2, cfg)
+    elif kind == "moe":
+        p["mixer"] = layers.init_attention(k1, cfg)
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        p["moe"] = moe.init_moe(k2, cfg)
+    elif kind == "ssm":
+        p["mixer"] = ssm.init_ssm(k1, cfg)
+    elif kind == "rglru":
+        p["mixer"] = rglru.init_rglru(k1, cfg)
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        p["mlp"] = layers.init_mlp(k2, cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def apply_block(p, x: Array, cfg: ModelConfig, kind: str,
+                bias: Optional[Array] = None, prefix_len: Optional[Array] = None):
+    """Full-sequence block. Returns (x, moe_stats | None)."""
+    stats = None
+    x = layers.constrain(x, layers.DP, None, None)
+    h = rmsnorm(p["norm1"], x, cfg)
+    if kind in ("attn", "moe"):
+        x = x + layers.attention(p["mixer"], h, cfg, prefix_len=prefix_len)
+    elif kind == "local":
+        x = x + layers.attention(p["mixer"], h, cfg, window=cfg.local_window,
+                                 prefix_len=prefix_len)
+    elif kind == "ssm":
+        return x + ssm.ssm_block(p["mixer"], h, cfg), None
+    elif kind == "rglru":
+        x = x + rglru.rglru_block(p["mixer"], h, cfg)
+    if kind == "moe":
+        y, stats = moe.moe_ffn(p["moe"], rmsnorm(p["norm2"], x, cfg), cfg, bias)
+        x = x + y
+    else:
+        x = x + layers.mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg), cfg)
+    return x, stats
+
+
+def apply_block_decode(p, x: Array, cfg: ModelConfig, kind: str, cache, pos,
+                       bias: Optional[Array] = None):
+    """One-token block step. Returns (x, new_cache, moe_stats | None)."""
+    stats = None
+    h = rmsnorm(p["norm1"], x, cfg)
+    if kind in ("attn", "moe"):
+        y, cache = layers.attention_decode(p["mixer"], h, cfg, cache, pos)
+        x = x + y
+    elif kind == "local":
+        y, cache = layers.attention_decode(p["mixer"], h, cfg, cache, pos,
+                                           window=cfg.local_window)
+        x = x + y
+    elif kind == "ssm":
+        y, cache = ssm.ssm_block_decode(p["mixer"], h, cfg, cache)
+        return x + y, cache, None
+    elif kind == "rglru":
+        y, cache = rglru.rglru_block_decode(p["mixer"], h, cfg, cache)
+        x = x + y
+    if kind == "moe":
+        y, stats = moe.moe_ffn(p["moe"], rmsnorm(p["norm2"], x, cfg), cfg, bias)
+        x = x + y
+    else:
+        x = x + layers.mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg), cfg)
+    return x, cache, stats
+
+
+def apply_block_prefill(p, x: Array, cfg: ModelConfig, kind: str, cache,
+                        bias: Optional[Array] = None,
+                        prefix_len: Optional[Array] = None):
+    """Full-sequence block that also fills the decode cache."""
+    stats = None
+    h = rmsnorm(p["norm1"], x, cfg)
+    if kind in ("attn", "moe"):
+        y, cache = layers.attention_prefill(p["mixer"], h, cfg, cache,
+                                            prefix_len=prefix_len)
+        x = x + y
+    elif kind == "local":
+        y, cache = layers.attention_prefill(p["mixer"], h, cfg, cache,
+                                            window=cfg.local_window,
+                                            prefix_len=prefix_len)
+        x = x + y
+    elif kind == "ssm":
+        y, cache = ssm.ssm_block_prefill(p["mixer"], h, cfg, cache)
+        return x + y, cache, None
+    elif kind == "rglru":
+        y, cache = rglru.rglru_block_prefill(p["mixer"], h, cfg, cache)
+        x = x + y
+    if kind == "moe":
+        y, stats = moe.moe_ffn(p["moe"], rmsnorm(p["norm2"], x, cfg), cfg, bias)
+        x = x + y
+    else:
+        x = x + layers.mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg), cfg)
+    return x, cache, stats
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, s_max: int, dtype):
+    if kind in ("attn", "moe"):
+        return layers.init_attention_cache(cfg, batch, s_max, dtype)
+    if kind == "local":
+        return layers.init_attention_cache(cfg, batch, min(s_max, cfg.local_window),
+                                           dtype)
+    if kind == "ssm":
+        return ssm.init_ssm_cache(cfg, batch, dtype)
+    if kind == "rglru":
+        return rglru.init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# the stack
+# ---------------------------------------------------------------------------
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def init_stack(key, cfg: ModelConfig) -> list:
+    """Returns a list (one per segment) of per-position stacked param trees."""
+    segs = segments(cfg)
+    out = []
+    for si, (pattern, reps) in enumerate(segs):
+        seg_params = []
+        for pi, kind in enumerate(pattern):
+            keys = jax.random.split(jax.random.fold_in(key, si * 97 + pi), reps)
+            seg_params.append(jax.vmap(lambda k, kd=kind: init_block(k, cfg, kd))(keys))
+        out.append(seg_params)
+    return out
+
+
+def apply_stack(stack_params: list, x: Array, cfg: ModelConfig,
+                bias: Optional[Array] = None, prefix_len: Optional[Array] = None):
+    """Full-sequence pass. ``bias``: (num_layers, E) immune router bias for MoE.
+    Returns (x, stats (num_layers, E) load fractions | None, aux_loss, drop_frac)."""
+    li = 0
+    loads, auxs, drops = [], [], []
+    for (pattern, reps), seg_params in zip(segments(cfg), stack_params):
+        npos = len(pattern)
+        seg_bias = None
+        if bias is not None:
+            seg_bias = bias[li:li + reps * npos].reshape(reps, npos, -1)
+        li += reps * npos
+
+        def body(carry, inp, pattern=pattern, npos=npos):
+            xc = carry
+            lp, b = inp
+            sts = []
+            for pi, kind in enumerate(pattern):
+                bi = None if b is None else b[pi]
+                xc, st = apply_block(lp[pi], xc, cfg, kind, bias=bi,
+                                     prefix_len=prefix_len)
+                if st is not None:
+                    sts.append(st)
+            out_st = jax.tree.map(lambda *a: jnp.stack(a), *sts) if sts else 0
+            return xc, out_st
+
+        body = _maybe_remat(body, cfg)
+        xs = (seg_params, seg_bias)
+        x, seg_stats = jax.lax.scan(body, x, xs)
+        if isinstance(seg_stats, moe.MoEStats):
+            loads.append(seg_stats.load_frac.reshape(-1, cfg.num_experts))
+            auxs.append(seg_stats.aux_loss.reshape(-1))
+            drops.append(seg_stats.drop_frac.reshape(-1))
+    if loads:
+        return (x, jnp.concatenate(loads), jnp.mean(jnp.concatenate(auxs)),
+                jnp.mean(jnp.concatenate(drops)))
+    return x, None, jnp.zeros(()), jnp.zeros(())
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, s_max: int, dtype) -> list:
+    """Stacked decode caches, mirroring the segment structure."""
+    out = []
+    for pattern, reps in segments(cfg):
+        seg = []
+        for kind in pattern:
+            one = init_block_cache(cfg, kind, batch, s_max, dtype)
+            seg.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (reps,) + a.shape).copy(), one))
+        out.append(seg)
+    return out
+
+
+def apply_stack_prefill(stack_params: list, x: Array, cfg: ModelConfig, caches: list,
+                        bias: Optional[Array] = None,
+                        prefix_len: Optional[Array] = None):
+    """Full-sequence pass that fills the decode caches. Returns (x, new_caches)."""
+    li = 0
+    new_caches = []
+    for (pattern, reps), seg_params, seg_cache in zip(segments(cfg), stack_params,
+                                                      caches):
+        npos = len(pattern)
+        seg_bias = None
+        if bias is not None:
+            seg_bias = bias[li:li + reps * npos].reshape(reps, npos, -1)
+        li += reps * npos
+
+        def body(carry, inp, pattern=pattern):
+            xc = carry
+            lp, cs, b = inp
+            new_cs = []
+            for pi, kind in enumerate(pattern):
+                bi = None if b is None else b[pi]
+                xc, c2, _ = apply_block_prefill(lp[pi], xc, cfg, kind, cs[pi],
+                                                bias=bi, prefix_len=prefix_len)
+                new_cs.append(c2)
+            return xc, new_cs
+
+        x, nc = jax.lax.scan(body, x, (seg_params, seg_cache, seg_bias))
+        new_caches.append(nc)
+    return x, new_caches
+
+
+def apply_stack_decode(stack_params: list, x: Array, cfg: ModelConfig, caches: list,
+                       pos: Array, bias: Optional[Array] = None):
+    """One-token pass. Returns (x, new_caches)."""
+    li = 0
+    new_caches = []
+    for (pattern, reps), seg_params, seg_cache in zip(segments(cfg), stack_params,
+                                                      caches):
+        npos = len(pattern)
+        seg_bias = None
+        if bias is not None:
+            seg_bias = bias[li:li + reps * npos].reshape(reps, npos, -1)
+        li += reps * npos
+
+        def body(carry, inp, pattern=pattern):
+            xc = carry
+            lp, cs, b = inp
+            new_cs = []
+            for pi, kind in enumerate(pattern):
+                bi = None if b is None else b[pi]
+                xc, c2, _ = apply_block_decode(lp[pi], xc, cfg, kind, cs[pi], pos,
+                                               bias=bi)
+                new_cs.append(c2)
+            return xc, new_cs
+
+        x, nc = jax.lax.scan(body, x, (seg_params, seg_cache, seg_bias))
+        new_caches.append(nc)
+    return x, new_caches

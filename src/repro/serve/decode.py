@@ -1,0 +1,69 @@
+"""Batched serving: prefill + greedy/sampled decode over a fixed slot batch.
+
+``serve_step`` (one token for the whole batch against the KV cache) is the function
+the decode-shape dry-runs lower; ``generate`` is the end-to-end driver used by the
+serving example (prefill once, then N decode steps under jit).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import model
+
+Array = jax.Array
+
+
+class ServeState(NamedTuple):
+    cache: dict
+    tokens: Array        # (B, T_out) generated so far
+    last: Array          # (B, 1) last emitted token
+
+
+def serve_step(params, cfg: ModelConfig, batch: dict, cache: dict,
+               router_bias: Optional[Array] = None):
+    """One new token per sequence with a KV cache — the decode dry-run target."""
+    return model.decode_step(params, cfg, batch, cache, router_bias=router_bias)
+
+
+def greedy(logits: Array) -> Array:
+    return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("cfg", "steps"))
+def _decode_loop(params, cfg: ModelConfig, first_token: Array, cache: dict,
+                 steps: int, router_bias=None, frames=None):
+    def body(carry, t):
+        tok, cache = carry
+        batch = {"token": tok}
+        if cfg.family == "audio":
+            batch["frame"] = frames[:, t][:, None]
+        logits, cache = serve_step(params, cfg, batch, cache,
+                                   router_bias=router_bias)
+        nxt = greedy(logits)
+        return (nxt, cache), nxt[:, 0]
+
+    (_, cache), toks = jax.lax.scan(body, (first_token, cache),
+                                    jnp.arange(steps))
+    return jnp.moveaxis(toks, 0, 1), cache           # (B, steps)
+
+
+def generate(params, cfg: ModelConfig, prompts: dict, max_cache: int, steps: int,
+             router_bias: Optional[Array] = None):
+    """Prefill the prompt batch, then greedily decode ``steps`` tokens."""
+    b = prompts["tokens"].shape[0]
+    cache = model.init_cache(cfg, b, max_cache)
+    logits, cache = model.prefill(params, cfg, prompts, cache,
+                                  router_bias=router_bias)
+    first = greedy(logits)
+    frames = None
+    if cfg.family == "audio":
+        frames = jnp.zeros((b, steps, cfg.frontend_dim),
+                           prompts["frames"].dtype)
+    toks, cache = _decode_loop(params, cfg, first, cache, steps,
+                               router_bias=router_bias, frames=frames)
+    return jnp.concatenate([first, toks[:, :-1]], axis=1), cache

@@ -1,0 +1,126 @@
+"""The jit-compiled training step: loss/grad, microbatch accumulation, optimizer,
+and the immune router regulation (state update outside the gradient path).
+
+``TrainState`` is one pytree — shardable, donate-able, checkpoint-able.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, TrainConfig
+from ..core import router as irouter
+from ..models import model
+from . import optimizer as opt
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: opt.AdamWState
+    router: Optional[irouter.RouterState]   # leaves (L, E); None for non-MoE
+    step: Array
+
+
+def init_router(cfg: ModelConfig) -> Optional[irouter.RouterState]:
+    if not cfg.num_experts:
+        return None
+    one = irouter.init_router_state(cfg.num_experts)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape).copy(), one)
+
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig,
+                     state_dtype=jnp.float32, factored: bool = False) -> TrainState:
+    params = model.init_params(key, cfg)
+    return TrainState(
+        params=params,
+        opt=opt.init_opt_state(params, state_dtype=state_dtype, factored=factored),
+        router=init_router(cfg),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+class Metrics(NamedTuple):
+    loss: Array
+    grad_norm: Array
+    lr: Array
+    aux_loss: Array
+    drop_frac: Array
+    load_cv: Array       # mean over layers of expert-load CV (0 for dense)
+
+
+def train_step(state: TrainState, batch: dict, cfg: ModelConfig, tcfg: TrainConfig,
+               rcfg: irouter.RouterConfig = irouter.RouterConfig()):
+    """One optimizer step (with tcfg.accum_steps microbatches via lax.scan)."""
+    bias = state.router.bias if state.router is not None else None
+
+    def loss_fn(params, mb):
+        out = model.train_loss(params, cfg, mb, router_bias=bias)
+        return out.loss, out
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if tcfg.accum_steps > 1:
+        def split(x):
+            return x.reshape((tcfg.accum_steps, x.shape[0] // tcfg.accum_steps)
+                             + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def acc_body(carry, mb):
+            g_acc, l_acc, out_acc = carry
+            (loss, out), g = grad_fn(state.params, mb)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            out_acc = jax.tree.map(jnp.add, out_acc, _stats(out, cfg))
+            return (g_acc, l_acc + loss, out_acc), None
+
+        zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               state.params)
+        zeros_o = jax.tree.map(jnp.zeros_like, _stats_spec(cfg))
+        (grads, loss_sum, stats_sum), _ = jax.lax.scan(
+            acc_body, (zeros_g, jnp.zeros(()), zeros_o), micro)
+        inv = 1.0 / tcfg.accum_steps
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        loss = loss_sum * inv
+        stats = jax.tree.map(lambda s: s * inv, stats_sum)
+    else:
+        (loss, out), grads = grad_fn(state.params, batch)
+        stats = _stats(out, cfg)
+
+    new_params, new_opt, gnorm = opt.adamw_update(grads, state.opt, state.params, tcfg)
+
+    new_router = state.router
+    load_cv = jnp.zeros(())
+    if state.router is not None:
+        load = stats["load_frac"]                       # (L, E)
+        upd = jax.vmap(lambda st, l: irouter.update_router_state(st, l, rcfg))
+        new_router = upd(state.router, load)
+        load_cv = jnp.mean(jax.vmap(irouter.load_cv)(load))
+
+    metrics = Metrics(loss=loss, grad_norm=gnorm,
+                      lr=opt.schedule(tcfg, state.step + 1),
+                      aux_loss=stats["aux"], drop_frac=stats["drop"],
+                      load_cv=load_cv)
+    new_state = TrainState(params=new_params, opt=new_opt, router=new_router,
+                           step=state.step + 1)
+    return new_state, metrics
+
+
+def _stats(out: model.TrainOut, cfg: ModelConfig) -> dict:
+    return {
+        "load_frac": (out.load_frac if out.load_frac is not None
+                      else jnp.zeros((1, 1))),
+        "aux": out.aux_loss,
+        "drop": out.drop_frac,
+    }
+
+
+def _stats_spec(cfg: ModelConfig) -> dict:
+    e = max(cfg.num_experts, 1)
+    l = cfg.num_layers if cfg.num_experts else 1
+    return {"load_frac": jnp.zeros((l, e)), "aux": jnp.zeros(()),
+            "drop": jnp.zeros(())}

@@ -1,0 +1,82 @@
+"""The generic Hewes MIMD framework: dominance writes, presence channels, drivers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import agent_model as am
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _count_model():
+    """Two characteristics: type 0 writes its id+1 at its cell and converts to type 1
+    when it reads a value above its own (dominance loss); type 1 idles."""
+
+    def writer(ctx):
+        w = jnp.zeros((2, 4), jnp.int32)
+        w = w.at[0].set(jnp.stack([jnp.int32(0), ctx.pos[0], ctx.pos[1],
+                                   ctx.agent_id + 1]))
+        dominated = ctx.patch[0, 1, 1] > ctx.agent_id + 1
+        return am.AgentUpdate(w, ctx.state,
+                              jnp.where(dominated, 1, 0).astype(jnp.int32),
+                              jnp.float32(1.0), ctx.pos)
+
+    def idler(ctx):
+        return am.AgentUpdate(jnp.zeros((2, 4), jnp.int32), ctx.state,
+                              jnp.int32(1), jnp.float32(1.0), ctx.pos)
+
+    return am.AgentModel([writer, idler], num_channels=4, state_size=2,
+                         writes_cap=2, presence_channel=2)
+
+
+def test_scatter_max_dominance_and_transitions():
+    model = _count_model()
+    grid = jnp.zeros((4, 8, 8), jnp.int32)
+    # two agents on the same cell: the higher id must win, the loser converts
+    agents = am.Agents(type_id=jnp.zeros(2, jnp.int32),
+                       prev_type=jnp.full(2, -1, jnp.int32),
+                       pos=jnp.asarray([[3, 3], [3, 3]], jnp.int32),
+                       state=jnp.zeros((2, 2), jnp.int32))
+    key = jax.random.PRNGKey(0)
+    g, a = model.step(grid, agents, key, jnp.int32(0))
+    assert int(g[0, 3, 3]) == 2              # max(id 0 + 1, id 1 + 1)
+    g, a = model.step(g, a, key, jnp.int32(1))
+    assert int(a.type_id[0]) == 1            # agent 0 read 2 > 1 -> dominated
+    assert int(a.type_id[1]) == 0            # agent 1 saw its own value
+    assert int(a.prev_type[0]) == 0          # ancestor recorded
+
+
+def test_presence_channels_rebuilt_each_step():
+    model = _count_model()
+    grid = jnp.zeros((4, 8, 8), jnp.int32)
+    agents = am.Agents(type_id=jnp.asarray([0, 1], jnp.int32),
+                       prev_type=jnp.full(2, -1, jnp.int32),
+                       pos=jnp.asarray([[2, 2], [5, 5]], jnp.int32),
+                       state=jnp.zeros((2, 2), jnp.int32))
+    g, a = model.step(grid, agents, jax.random.PRNGKey(0), jnp.int32(0))
+    assert int(g[2, 2, 2]) == 1 and int(g[3, 5, 5]) == 1
+    # after the type-1 agent stays put, presence follows the *current* population
+    g, a = model.step(g, a, jax.random.PRNGKey(1), jnp.int32(1))
+    assert int(g[2 + int(a.type_id[0]), 2, 2]) == 1
+
+
+def test_run_scan_freezes_after_done():
+    model = _count_model()
+    grid = jnp.zeros((4, 8, 8), jnp.int32)
+    agents = am.uniform_random_agents(jax.random.PRNGKey(2), 4, 8, 8, 2)
+    done_fn = lambda g: (g[0] > 0).sum() >= 1
+    g, a, steps, pops = model.run_scan(grid, agents, jax.random.PRNGKey(3), 10,
+                                       done_fn=done_fn, record=True)
+    assert int(steps) <= 2
+    assert pops.shape == (10, 2)
+
+
+def test_positions_stay_interior():
+    model = _count_model()
+    grid = jnp.zeros((4, 6, 6), jnp.int32)
+    agents = am.uniform_random_agents(jax.random.PRNGKey(4), 16, 6, 6, 2)
+    g, a = grid, agents
+    for t in range(5):
+        g, a = model.step(g, a, jax.random.fold_in(jax.random.PRNGKey(5), t),
+                          jnp.int32(t))
+    assert bool(jnp.all((a.pos >= 1) & (a.pos <= 4)))

@@ -1,0 +1,119 @@
+"""Unit + property tests for the immune load-balancing primitives."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import immune
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestImmuneMemory:
+    def test_ema_converges_to_constant_signal(self):
+        mem = immune.ImmuneMemory.create((4,), decay=0.9)
+        for _ in range(200):
+            mem = mem.update(jnp.full((4,), 3.0))
+        np.testing.assert_allclose(mem.value, 3.0, atol=1e-3)
+
+    @hypothesis.given(decay=st.floats(0.0, 0.99), x=st.floats(-10, 10))
+    @hypothesis.settings(deadline=None, max_examples=20)
+    def test_ema_bounded_by_signal_range(self, decay, x):
+        mem = immune.ImmuneMemory.create((1,), decay=decay)
+        for _ in range(50):
+            mem = mem.update(jnp.asarray([x]))
+        assert float(jnp.abs(mem.value[0])) <= abs(x) + 1e-6
+
+
+class TestTwoStageRegulator:
+    def test_fast_rise_then_delayed_suppression(self):
+        """The paper's signature: response spikes quickly, the suppressor builds
+        *later* and pulls the response down — without cancelling the initial rise."""
+        reg = immune.TwoStageRegulator.create()
+        state = reg.init(())
+        trace = []
+        for _ in range(300):
+            state = reg.step(state, jnp.asarray(1.0))
+            trace.append(float(state.response))
+        trace = np.asarray(trace)
+        peak = trace.argmax()
+        assert trace[peak] > trace[-1] * 1.2, "no overshoot-then-suppress dynamics"
+        assert peak < 150, "rise was not fast"
+        assert trace[-1] > 0.1, "suppression killed the response entirely"
+
+    def test_bounded_no_runaway(self):
+        reg = immune.TwoStageRegulator.create(self_excite=0.3)
+        state = reg.init((8,))
+        for _ in range(2000):
+            state = reg.step(state, jnp.ones((8,)))
+        assert bool(jnp.all(jnp.isfinite(state.response)))
+        assert float(jnp.max(state.response)) < 1e3
+
+    @hypothesis.given(stim=st.floats(0.0, 5.0))
+    @hypothesis.settings(deadline=None, max_examples=15)
+    def test_nonnegative_states(self, stim):
+        reg = immune.TwoStageRegulator.create()
+        state = reg.init(())
+        for _ in range(100):
+            state = reg.step(state, jnp.asarray(stim))
+        assert float(state.response) >= 0 and float(state.suppressor) >= 0
+
+
+class TestAnergy:
+    def test_uncostimulated_becomes_anergic_and_revives(self):
+        gate = immune.AnergyGate.create(onset=0.5, revival=0.5)
+        state = gate.init(())
+        for _ in range(20):
+            state = gate.step(state, stimulus=jnp.asarray(1.0),
+                              costimulus=jnp.asarray(0.0))
+        assert float(state.level) > 0.9
+        assert float(gate.gate(state, jnp.asarray(1.0))) < 0.1
+        for _ in range(20):
+            state = gate.step(state, jnp.asarray(0.0), jnp.asarray(0.0), il2=1.0)
+        assert float(state.level) < 0.1
+
+    def test_costimulated_stays_active(self):
+        gate = immune.AnergyGate.create()
+        state = gate.init(())
+        for _ in range(50):
+            state = gate.step(state, jnp.asarray(1.0), jnp.asarray(1.0))
+        assert float(state.level) < 1e-6
+
+
+class TestDominance:
+    def test_scatter_max_resolves_conflicts(self):
+        grid = jnp.zeros((4, 4), jnp.int32)
+        rows = jnp.asarray([1, 1, 2])
+        cols = jnp.asarray([1, 1, 3])
+        vals = jnp.asarray([5, 9, 2])
+        out = immune.dominance_scatter_max(grid, rows, cols, vals)
+        assert int(out[1, 1]) == 9 and int(out[2, 3]) == 2
+
+    @hypothesis.given(st.lists(st.booleans(), min_size=1, max_size=16))
+    @hypothesis.settings(deadline=None, max_examples=25)
+    def test_at_most_one_winner(self, claims):
+        ids = jnp.arange(len(claims))
+        winners = immune.dominance_resolve(ids, jnp.asarray(claims))
+        n = int(jnp.sum(winners))
+        assert n == (1 if any(claims) else 0)
+        if any(claims):
+            # dominance picks the highest claiming id
+            assert bool(winners[max(i for i, c in enumerate(claims) if c)])
+
+
+class TestLimitCycleDamping:
+    def test_ancestor_transitions_damped_others_untouched(self):
+        p = immune.damp_ancestor_transition(jnp.asarray(1.0), jnp.asarray(2),
+                                            jnp.asarray(2), damping=0.1)
+        assert float(p) == pytest.approx(0.1)
+        p = immune.damp_ancestor_transition(jnp.asarray(1.0), jnp.asarray(2),
+                                            jnp.asarray(3), damping=0.1)
+        assert float(p) == pytest.approx(1.0)
+
+    def test_hysteresis_asymmetric(self):
+        up = immune.hysteresis(jnp.asarray(0.0), jnp.asarray(1.0), 0.5, 0.1)
+        down = immune.hysteresis(jnp.asarray(1.0), jnp.asarray(0.0), 0.5, 0.1)
+        assert float(up) == pytest.approx(0.5)
+        assert float(down) == pytest.approx(0.9)

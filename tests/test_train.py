@@ -1,0 +1,165 @@
+"""Optimizer, schedules, data pipeline, trainer fault tolerance, checkpointing."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import TrainConfig
+from repro.data import pipeline
+from repro.dist import checkpoint as ckpt
+from repro.train import optimizer as opt
+from repro.train import train_step as ts
+from repro.train.trainer import Trainer
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestOptimizer:
+    def _rosenbrockish(self, factored):
+        params = {"w": jnp.asarray([[2.0, -3.0], [1.5, 0.5]])}
+        tcfg = TrainConfig(learning_rate=0.05, warmup_steps=0, decay_steps=10000,
+                           weight_decay=0.0, grad_clip=1e9)
+        state = opt.init_opt_state(params, factored=factored)
+        loss = lambda p: jnp.sum(jnp.square(p["w"] - 1.0))
+        for _ in range(300):
+            grads = jax.grad(loss)(params)
+            params, state, _ = opt.adamw_update(grads, state, params, tcfg)
+        return float(loss(params))
+
+    def test_adamw_converges(self):
+        assert self._rosenbrockish(factored=False) < 1e-3
+
+    def test_factored_adamw_converges(self):
+        assert self._rosenbrockish(factored=True) < 1e-2
+
+    def test_grad_clip(self):
+        g = {"w": jnp.full((4,), 100.0)}
+        clipped, norm = opt.clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(200.0)
+        assert float(opt.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_wsd_schedule_shape(self):
+        tcfg = TrainConfig(learning_rate=1.0, warmup_steps=10, decay_steps=100,
+                           schedule="wsd", stable_frac=0.8)
+        lr = [float(opt.schedule(tcfg, jnp.asarray(s))) for s in range(110)]
+        assert lr[0] == 0.0 and lr[10] == pytest.approx(1.0)
+        assert lr[50] == pytest.approx(1.0)            # stable plateau
+        assert lr[79] == pytest.approx(1.0)
+        assert lr[90] < 0.7 and lr[100] < 0.05          # 1-sqrt tail
+
+    def test_cosine_schedule_endpoints(self):
+        tcfg = TrainConfig(learning_rate=1.0, warmup_steps=0, decay_steps=100,
+                           schedule="cosine")
+        assert float(opt.schedule(tcfg, jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)
+
+    def test_factored_state_is_small(self):
+        params = {"w": jnp.zeros((256, 512))}
+        full = opt.init_opt_state(params, factored=False)
+        fact = opt.init_opt_state(params, factored=True)
+        full_nu = sum(x.size for x in jax.tree.leaves(full.nu))
+        fact_nu = sum(x.size for x in jax.tree.leaves(fact.nu))
+        assert fact_nu < full_nu / 100
+
+
+class TestData:
+    def test_deterministic_and_stateless(self):
+        cfg = configs.get_config("smollm-360m").smoke()
+        st = pipeline.init_data_state()
+        b1, st1 = pipeline.sample_batch(cfg, 4, 32, st)
+        b2, _ = pipeline.sample_batch(cfg, 4, 32, st)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        b3, _ = pipeline.sample_batch(cfg, 4, 32, st1)
+        assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+    def test_resume_from_step_counter(self):
+        cfg = configs.get_config("smollm-360m").smoke()
+        st = pipeline.init_data_state()
+        seen = []
+        for _ in range(3):
+            b, st = pipeline.sample_batch(cfg, 2, 16, st)
+            seen.append(np.asarray(b["tokens"]))
+        st_resumed = pipeline.DataState(step=jnp.asarray(1, jnp.int32))
+        b, _ = pipeline.sample_batch(cfg, 2, 16, st_resumed)
+        np.testing.assert_array_equal(b["tokens"], seen[1])
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        state = {"a": jnp.arange(10, dtype=jnp.float32),
+                 "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+        ckpt.save(str(tmp_path), state, step=5)
+        restored, step = ckpt.restore(str(tmp_path), state)
+        assert step == 5
+        np.testing.assert_array_equal(restored["a"], state["a"])
+        assert restored["b"]["c"].dtype == jnp.bfloat16
+
+    def test_corrupt_checkpoint_falls_back(self, tmp_path):
+        state = {"a": jnp.arange(4.0)}
+        ckpt.save(str(tmp_path), state, step=1)
+        ckpt.save(str(tmp_path), {"a": jnp.arange(4.0) * 2}, step=2)
+        # corrupt the newest
+        with open(os.path.join(str(tmp_path), "step_00000002", "leaf_00000.npy"),
+                  "wb") as f:
+            f.write(b"garbage")
+        restored, step = ckpt.restore(str(tmp_path), state)
+        assert step == 1
+        np.testing.assert_array_equal(restored["a"], jnp.arange(4.0))
+
+    def test_retention(self, tmp_path):
+        state = {"a": jnp.zeros(2)}
+        for s in range(6):
+            ckpt.save(str(tmp_path), state, step=s, keep=3)
+        assert ckpt.all_steps(str(tmp_path)) == [3, 4, 5]
+
+
+class TestTrainerFaultTolerance:
+    def _mk(self, tmp_path, **kw):
+        cfg = configs.get_config("smollm-360m").smoke()
+        cfg = dataclasses.replace(cfg, num_layers=2, d_model=32, num_heads=2,
+                                  num_kv_heads=1, head_dim=16, d_ff=64,
+                                  vocab_size=128)
+        tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=5, decay_steps=1000)
+        return Trainer(cfg=cfg, tcfg=tcfg, workdir=str(tmp_path), batch=4,
+                       seq=32, ckpt_every=10, log_every=5, **kw)
+
+    def test_loss_decreases(self, tmp_path):
+        tr = self._mk(tmp_path)
+        tr.train(40)
+        first = tr.history[0]["loss"]
+        last = tr.history[-1]["loss"]
+        assert last < first - 0.2, (first, last)
+
+    def test_failure_recovery_is_bitwise_identical(self, tmp_path):
+        # uninterrupted run
+        tr_a = self._mk(tmp_path / "a")
+        state_a = tr_a.train(30)
+        # interrupted at step 17 (past the step-10 checkpoint), then resumed
+        tr_b = self._mk(tmp_path / "b", failure_at=17)
+        with pytest.raises(RuntimeError, match="injected node failure"):
+            tr_b.train(30)
+        tr_b2 = self._mk(tmp_path / "b")
+        state_b = tr_b2.train(30)
+        for la, lb in zip(jax.tree.leaves(state_a.params),
+                          jax.tree.leaves(state_b.params)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+class TestTrainStepMoE:
+    def test_router_state_regulates_during_training(self):
+        cfg = configs.get_config("granite-moe-3b-a800m").smoke()
+        tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=0, decay_steps=1000)
+        state = ts.init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+        data = pipeline.init_data_state()
+        step = jax.jit(lambda st, b: ts.train_step(st, b, cfg, tcfg))
+        cvs = []
+        for _ in range(8):
+            batch, data = pipeline.sample_batch(cfg, 4, 32, data)
+            state, metrics = step(state, batch)
+            cvs.append(float(metrics.load_cv))
+        assert np.isfinite(cvs).all()
+        assert not np.array_equal(np.asarray(state.router.bias), 0.0), \
+            "router bias never updated"

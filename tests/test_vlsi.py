@@ -1,0 +1,95 @@
+"""The paper's experiment: agent-based VLSI extraction vs the serial oracle."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.vlsi import extractor, layout, reference
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestOracle:
+    def test_nand_netlist(self):
+        net = reference.extract(layout.nand_layout())
+        assert len(net.fets) == 4
+        pfets = [f for f in net.fets if f.pol == "p"]
+        nfets = [f for f in net.fets if f.pol == "n"]
+        assert len(pfets) == 2 and len(nfets) == 2
+        # parallel pull-ups share one node; series pull-downs chain
+        p_nodes = [n for f in pfets for n in f.sd]
+        assert len(set(p_nodes)) == 3, "2 parallel PFETs must share a drain node"
+        assert len(net.equivs) == 7
+
+    def test_dff_tile_counts(self):
+        net = reference.extract(layout.dff_layout())
+        assert len(net.fets) == 32
+        assert len(net.equivs) == 56
+
+    def test_inverter(self):
+        g = layout._with_margin(layout.inverter_cell())
+        net = reference.extract(g)
+        assert len(net.fets) == 2
+        assert {f.pol for f in net.fets} == {"n", "p"}
+
+
+class TestAgentExtraction:
+    @pytest.mark.parametrize("seed", [1, 2])
+    def test_nand_equivalent_to_oracle(self, seed):
+        lay = layout.nand_layout()
+        oracle = reference.extract(lay)
+        grid, steps, _ = extractor.run_extraction(lay, n_agents=64, seed=seed,
+                                                  max_steps=4000)
+        assert steps < 4000, "extraction did not terminate"
+        sim = extractor.harvest(grid, lay)
+        ok, msg = extractor.netlists_equivalent(sim, oracle)
+        assert ok, msg
+
+    def test_more_agents_do_not_break_correctness(self):
+        lay = layout.nand_layout()
+        oracle = reference.extract(lay)
+        grid, steps, _ = extractor.run_extraction(lay, n_agents=192, seed=0,
+                                                  max_steps=4000)
+        sim = extractor.harvest(grid, lay)
+        ok, msg = extractor.netlists_equivalent(sim, oracle)
+        assert ok, msg
+
+    def test_redundant_statements_are_emitted_and_deduplicated(self):
+        """Paper: multiple contacts between one node pair produce redundant
+        equivalence statements; the harvester deduplicates them by region."""
+        lay = layout.nand_layout(double_contacts=True)
+        grid, _, _ = extractor.run_extraction(lay, n_agents=96, seed=0,
+                                              max_steps=4000)
+        sim = extractor.harvest(grid, lay)
+        # the two disjoint input contacts hit the same (m1, poly) node pairs
+        assert len(sim.equivs) < 9
+
+    def test_population_dynamics_shape(self):
+        """Fig. 3 qualitative shape: finder crash, labeller spike, propagator
+        steady state."""
+        lay = layout.nand_layout()
+        _, steps, pops = extractor.run_extraction(lay, n_agents=96, seed=0,
+                                                  max_steps=4000, record=True)
+        pops = np.asarray(pops)
+        finders = pops[:, extractor.FINDER]
+        labellers = pops[:, extractor.LABELLER]
+        props = pops[:, extractor.PROPAGATOR]
+        late = min(steps, 3999) - 1
+        # finders crash (possibly after the paper's "second generation" rebound)
+        assert finders[late] < finders[:30].max() / 4
+        assert labellers[:50].max() >= labellers[0], "labeller spike missing"
+        assert labellers[late] == 0, "labellers must die out"
+        assert props[late] == 96, "steady state must be all node propagators"
+        assert props[0] < 96 / 2, "propagators cannot dominate at start"
+
+
+class TestRandomLayouts:
+    @pytest.mark.parametrize("seed", [3, 7])
+    def test_random_tiling_extracts_correctly(self, seed):
+        rng = np.random.default_rng(seed)
+        lay = layout.random_layout(rng, rows=1, cols=2)
+        oracle = reference.extract(lay)
+        grid, steps, _ = extractor.run_extraction(lay, n_agents=96, seed=seed,
+                                                  max_steps=5000)
+        sim = extractor.harvest(grid, lay)
+        ok, msg = extractor.netlists_equivalent(sim, oracle)
+        assert ok, msg
