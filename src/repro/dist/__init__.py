@@ -1,0 +1,13 @@
+"""Elastic distribution substrate: checkpointing and sharding.
+
+This package is the fault-tolerance half of the immune load-balancing story: the
+scheduler (``repro.core.scheduler``) can mark a worker anergic and take its shard
+away, but the fleet only survives that if state can be saved, restored, and laid
+out under a *different* device placement than it was written with.
+
+  * ``repro.dist.checkpoint`` — atomic leaf-per-file checkpoints, gathered to host
+    so a save from one mesh restores onto any other (elastic resharding).
+  * ``repro.dist.sharding``   — NamedSharding trees for params / train state /
+    batches / decode caches over the production meshes in ``repro.launch.mesh``.
+"""
+from . import checkpoint, sharding  # noqa: F401

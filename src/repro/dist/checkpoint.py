@@ -1,0 +1,245 @@
+"""Atomic, reshardable pytree checkpoints.
+
+Directory layout (one checkpoint per optimizer step)::
+
+    <ckpt_dir>/
+      step_00000010/
+        manifest.json          # {"step": 10, "leaves": [{"shape": ..., "dtype": ...}]}
+        leaf_00000.npy         # pytree leaves in jax.tree.leaves() order
+        leaf_00001.npy
+        ...
+      step_00000020/
+        ...
+
+Semantics:
+
+  * **Atomicity** — a checkpoint is written into a ``step_XXXXXXXX.tmp.*``
+    scratch directory and ``os.rename``d into place only once every leaf and the
+    manifest are on disk. A crash mid-save leaves a ``.tmp.*`` directory that is
+    never considered by ``restore`` (and is swept on the next ``save``); the
+    previous checkpoint stays valid.
+  * **Elastic resharding** — leaves are gathered to host memory before writing
+    (``np.asarray`` on a sharded ``jax.Array`` is a global gather), so the file
+    format is placement-free. ``restore`` lays each leaf out to the sharding of
+    the corresponding leaf of ``like``: save from a 16x16 mesh, restore onto a
+    single host, a 2x16x16 mesh, or anything else that holds the same pytree.
+  * **Corruption fallback** — ``restore`` walks checkpoints newest-first and
+    returns the first one that fully loads and matches ``like``'s structure;
+    truncated/garbage leaves or manifests just skip to the next-older step.
+  * **Retention** — ``save(..., keep=k)`` prunes all but the newest ``k``
+    checkpoints after the new one is durable.
+  * **dtype fidelity** — dtypes outside numpy's native set (bfloat16, float8)
+    survive: the manifest records the dtype name and ``restore`` re-views the
+    raw buffer, so a bf16 leaf comes back bf16.
+
+Deferred (see ROADMAP "Open items"): async I/O overlapping the next step,
+multi-host coordinated saves (per-process shard files + barrier), and
+orbax-style partial/lazy restore.
+"""
+from __future__ import annotations
+
+import json
+import logging
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+_MANIFEST = "manifest.json"
+
+log = logging.getLogger(__name__)
+
+
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def _leaf_file(i: int) -> str:
+    return f"leaf_{i:05d}.npy"
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    """Sorted steps with a (structurally) complete checkpoint directory.
+
+    Read-only. A checkpoint orphaned in a ``.old.`` aside dir by a crash is
+    not listed here (``restore`` can still read it; ``save`` renames it back).
+    """
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m and os.path.isfile(os.path.join(ckpt_dir, name, _MANIFEST)):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def save(ckpt_dir: str, state: Any, step: int, keep: Optional[int] = None) -> str:
+    """Write ``state`` as ``<ckpt_dir>/step_XXXXXXXX``; returns the final path.
+
+    The write is atomic (temp dir + rename); an existing checkpoint at the same
+    step is replaced. ``keep`` prunes to the newest ``keep`` checkpoints.
+    """
+    os.makedirs(ckpt_dir, exist_ok=True)
+    _sweep_tmp(ckpt_dir)
+    leaves = jax.tree.leaves(state)
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+
+    tmp = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp.", dir=ckpt_dir)
+    try:
+        manifest = {"step": int(step), "leaves": []}
+        for i, arr in enumerate(host):
+            manifest["leaves"].append(
+                {"shape": list(arr.shape), "dtype": arr.dtype.name})
+            with open(os.path.join(tmp, _leaf_file(i)), "wb") as f:
+                np.save(f, arr, allow_pickle=False)
+                f.flush()
+                os.fsync(f.fileno())
+        # the manifest is written LAST: its presence marks the set of leaves
+        # complete, so a torn directory can never look like a valid checkpoint
+        mpath = os.path.join(tmp, _MANIFEST)
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        final = _step_dir(ckpt_dir, step)
+        # re-saving an existing step: move the old dir aside *before* the new
+        # rename so there is no instant with zero valid copies of this step
+        aside = None
+        if os.path.isdir(final):
+            aside = tempfile.mkdtemp(prefix=f"step_{step:08d}.old.", dir=ckpt_dir)
+            os.rmdir(aside)
+            os.rename(final, aside)
+        os.rename(tmp, final)
+        if aside is not None:
+            shutil.rmtree(aside, ignore_errors=True)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+    if keep is not None and keep > 0:
+        # prune relative to the step just written, NOT the max step on disk: a
+        # corrupt newer checkpoint we resumed past must never cause the prune
+        # to delete the good (older-numbered) checkpoints we are now writing
+        older = [s for s in all_steps(ckpt_dir) if s < step]
+        for old in older[:max(0, len(older) - (keep - 1))]:
+            shutil.rmtree(_step_dir(ckpt_dir, old), ignore_errors=True)
+    return final
+
+
+def restore(ckpt_dir: str, like: Any,
+            step: Optional[int] = None) -> tuple[Any, int]:
+    """Restore the newest checkpoint that loads cleanly against ``like``.
+
+    ``like`` supplies the pytree structure, per-leaf shapes/dtypes (both
+    validated — a dtype change is a structural mismatch, not a silent cast),
+    and — when its leaves are committed ``jax.Array``s — the target shardings,
+    so one on-disk checkpoint restores under any device placement. Returns
+    ``(state, step)``, or ``(None, 0)`` when no checkpoint in ``ckpt_dir`` is
+    usable. Corrupt or mismatched checkpoints are skipped (newest-first
+    fallback). Passing ``step`` pins the restore to that exact checkpoint
+    (no fallback) — used to co-restore sidecar state at a known step.
+    """
+    like_leaves, treedef = jax.tree.flatten(like)
+    # read-only candidate scan: includes checkpoints orphaned in ``.old.``
+    # aside dirs by a crash between the renames of a same-step re-save, WITHOUT
+    # moving anything — restore may race a live writer (e.g. serve reading a
+    # training workdir); recovery-by-rename happens only in save()
+    dirs = _candidate_dirs(ckpt_dir)
+    candidates = [step] if step is not None else sorted(dirs, reverse=True)
+    for s in candidates:
+        path = dirs.get(s)
+        if path is None:
+            continue
+        try:
+            leaves = _load_step(path, like_leaves)
+        except Exception as e:            # corrupt / torn / mismatched: fall back
+            log.warning("skipping checkpoint %s: %s: %s",
+                        path, type(e).__name__, e)
+            continue
+        return treedef.unflatten(leaves), s
+    if step is None and dirs:
+        log.warning("no usable checkpoint among steps %s in %s (all skipped)",
+                    sorted(dirs), ckpt_dir)
+    return None, 0
+
+
+def _candidate_dirs(ckpt_dir: str) -> dict[int, str]:
+    """step -> directory path, preferring final ``step_X`` dirs; an orphaned
+    ``step_X.old.*`` aside (final dir missing) is readable in place."""
+    out: dict[int, str] = {}
+    if not os.path.isdir(ckpt_dir):
+        return out
+    for name in os.listdir(ckpt_dir):
+        if ".old." not in name:
+            continue
+        stem = name.split(".old.")[0]
+        m = _STEP_RE.match(stem)
+        if (m and not os.path.isdir(os.path.join(ckpt_dir, stem))
+                and os.path.isfile(os.path.join(ckpt_dir, name, _MANIFEST))):
+            out.setdefault(int(m.group(1)), os.path.join(ckpt_dir, name))
+    for s in all_steps(ckpt_dir):
+        out[s] = _step_dir(ckpt_dir, s)
+    return out
+
+
+def _load_step(step_dir: str, like_leaves: list) -> list:
+    with open(os.path.join(step_dir, _MANIFEST)) as f:
+        manifest = json.load(f)
+    entries = manifest["leaves"]
+    if len(entries) != len(like_leaves):
+        raise ValueError(
+            f"checkpoint has {len(entries)} leaves, expected {len(like_leaves)}")
+    out = []
+    for i, (entry, like_leaf) in enumerate(zip(entries, like_leaves)):
+        raw = np.load(os.path.join(step_dir, _leaf_file(i)), allow_pickle=False)
+        dtype = jnp.dtype(entry["dtype"])
+        if raw.dtype != dtype:            # bf16 etc. round-trip through .npy as V2
+            raw = raw.view(dtype)
+        if tuple(raw.shape) != tuple(entry["shape"]):
+            raise ValueError(f"leaf {i}: shape {raw.shape} != manifest "
+                             f"{entry['shape']}")
+        if tuple(raw.shape) != tuple(np.shape(like_leaf)):
+            raise ValueError(f"leaf {i}: shape {raw.shape} != like "
+                             f"{np.shape(like_leaf)}")
+        like_dtype = getattr(like_leaf, "dtype", None)
+        if like_dtype is not None and jnp.dtype(like_dtype) != dtype:
+            raise ValueError(f"leaf {i}: dtype {dtype} != like {like_dtype}")
+        out.append(_place_like(raw, like_leaf))
+    return out
+
+
+def _place_like(arr: np.ndarray, like_leaf) -> jax.Array:
+    """Device-put a gathered host array to the placement of ``like_leaf``."""
+    sharding = getattr(like_leaf, "sharding", None)
+    if isinstance(like_leaf, jax.Array) and sharding is not None:
+        return jax.device_put(arr, sharding)
+    return jnp.asarray(arr)
+
+
+def _sweep_tmp(ckpt_dir: str) -> None:
+    """Clean up after a crash mid-save: drop ``.tmp.`` scratch dirs, and either
+    drop or *recover* ``.old.`` aside dirs (a crash between the two renames of a
+    same-step re-save leaves the only valid copy in the aside dir — put it
+    back rather than deleting it)."""
+    for name in os.listdir(ckpt_dir):
+        stem = name.split(".tmp.")[0] if ".tmp." in name else \
+            name.split(".old.")[0] if ".old." in name else None
+        if stem is None or not _STEP_RE.match(stem):
+            continue
+        path = os.path.join(ckpt_dir, name)
+        if ".old." in name and not os.path.isdir(os.path.join(ckpt_dir, stem)):
+            os.rename(path, os.path.join(ckpt_dir, stem))
+        else:
+            shutil.rmtree(path, ignore_errors=True)

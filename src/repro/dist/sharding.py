@@ -1,0 +1,187 @@
+"""NamedSharding trees for the production meshes.
+
+Layout policy (mirrors the activation constraints in ``models/layers.py``):
+
+  * **Tensor parallel ('model' axis)** — attention heads and FFN hidden dims are
+    split over 'model'; embeddings split the vocab; MoE expert banks split the
+    expert dim when ``pcfg.expert_parallel``.
+  * **FSDP ('data' axis)** — when ``pcfg.fsdp``, the *other* matrix dim of each
+    weight (and its optimizer moments) is additionally sharded over 'data',
+    ZeRO-3 style. The 'pod' axis (multi-pod mesh) stays pure data-parallel.
+  * **Batches** — the batch dim shards over ('pod', 'data'); with
+    ``pcfg.seq_shard`` the sequence dim of tokens/frames also shards over
+    'model' (long-context prefill).
+  * **Decode caches** — batch over ('pod', 'data'); KV heads over 'model'
+    (or the sequence dim when ``pcfg.seq_shard``).
+
+Every rule passes through a guard with the same policy as
+``layers.constrain`` (separate implementations today — see ROADMAP): an axis
+the mesh doesn't have, or that doesn't divide the dim it would split, is
+dropped rather than letting GSPMD pad-and-rematerialize. Leaves with no rule
+(small norms/biases, SSM scan constants) are replicated — correct, just not
+memory-minimal; see ROADMAP "Open items" for the SSM/rglru FSDP follow-up.
+
+Checkpoints are placement-free (``dist.checkpoint`` gathers leaves to host), so
+these shardings are a property of the *run*, not the *artifact*: the same
+checkpoint restores under any mesh by passing a ``like`` tree laid out with the
+functions here.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey
+
+from ..configs.base import ModelConfig, ParallelConfig
+
+_DP = ("pod", "data")          # pure data-parallel axes, filtered to the mesh
+
+
+def _axes(mesh: Mesh) -> dict[str, int]:
+    return dict(mesh.shape)
+
+
+def _guard(spec: tuple, shape: tuple, axes: dict[str, int]) -> P:
+    """Drop axis names the mesh lacks or that don't divide their dim."""
+    out = []
+    for s, dim in zip(spec, shape):
+        if s is None:
+            out.append(None)
+            continue
+        cand = tuple(a for a in (s if isinstance(s, tuple) else (s,)) if a in axes)
+        size = 1
+        for a in cand:
+            size *= axes[a]
+        if not cand or dim % size != 0:
+            out.append(None)
+        elif isinstance(s, tuple):
+            out.append(cand)
+        else:
+            out.append(cand[0])
+    return P(*out)
+
+
+def _named(mesh: Mesh, spec: tuple, shape: tuple) -> NamedSharding:
+    return NamedSharding(mesh, _guard(spec, shape, _axes(mesh)))
+
+
+def _dict_names(path) -> list[str]:
+    """String dict keys along a tree path (NamedTuple positions carry no names)."""
+    return [k.key for k in path if isinstance(k, DictKey) and isinstance(k.key, str)]
+
+
+def _param_candidate(names: list[str],
+                     pcfg: ParallelConfig) -> Optional[tuple]:
+    """Unguarded trailing-dims spec for a param leaf, or None to replicate.
+
+    ``names`` are the dict keys on the leaf's path (e.g. [..., 'mixer', 'wq']);
+    leading stack/scan dims (depth) are padded with None by the caller.
+    """
+    if not names:
+        return None
+    last = names[-1]
+    fsdp = "data" if pcfg.fsdp else None
+    if last in ("embed", "head", "frontend_proj"):
+        return ("model", fsdp)                      # (vocab|in, d_model)
+    if "moe" in names:
+        ep = "model" if pcfg.expert_parallel else None
+        if last in ("w_gate", "w_up"):              # (E, d_model, d_ff)
+            return (ep, fsdp, None if pcfg.expert_parallel else "model")
+        if last == "w_down":                        # (E, d_ff, d_model)
+            return (ep, fsdp if pcfg.expert_parallel else "model", None)
+        if last == "w_router":                      # (d_model, E)
+            return (fsdp, None)
+    if last in ("wq", "wk", "wv"):                  # (d_model, heads*head_dim)
+        return (fsdp, "model")
+    if last == "wo":                                # (heads*head_dim, d_model)
+        return ("model", fsdp)
+    if last in ("w_gate", "w_up", "w_gate_branch", "w_x_branch"):
+        return (fsdp, "model")                      # (d_model, d_ff|lru_width)
+    if last in ("w_down", "w_out"):                 # (d_ff|width, d_model)
+        return ("model", fsdp)
+    if last == "in_proj":                           # ssm: (d_model, fused_inner)
+        return (fsdp, "model")
+    if last == "out_proj":                          # ssm: (d_inner, d_model)
+        return ("model", fsdp)
+    return None
+
+
+def _param_spec(names: list[str], shape: tuple, mesh: Mesh,
+                pcfg: ParallelConfig, trim: int = 0) -> NamedSharding:
+    """Full guarded sharding for one leaf. ``trim`` re-derives factored-moment
+    specs: 1 drops the rule's last dim (Adafactor 'row'), 2 drops the last two
+    and keeps the final one ('col')."""
+    cand = _param_candidate(names, pcfg)
+    if cand is None:
+        return NamedSharding(mesh, P())
+    if trim == 1:
+        cand = cand[:-1]
+    elif trim == 2:
+        cand = cand[:-2] + cand[-1:]
+    full = (None,) * (len(shape) - len(cand)) + tuple(cand)
+    if len(full) != len(shape):                     # rule arity mismatch: replicate
+        return NamedSharding(mesh, P())
+    return _named(mesh, full, shape)
+
+
+def param_shardings(params_abs: Any, cfg: ModelConfig, mesh: Mesh,
+                    pcfg: ParallelConfig = ParallelConfig()) -> Any:
+    """NamedSharding tree matching a ``model.init_params`` pytree.
+
+    ``cfg`` is currently unused (the policy is path-name based) but part of the
+    signature for the planned config-aware rules (SSM/rglru FSDP — ROADMAP).
+    """
+    def leaf(path, x):
+        return _param_spec(_dict_names(path), tuple(x.shape), mesh, pcfg)
+    return jax.tree_util.tree_map_with_path(leaf, params_abs)
+
+
+def train_state_shardings(state_abs: Any, cfg: ModelConfig, mesh: Mesh,
+                          pcfg: ParallelConfig = ParallelConfig()) -> Any:
+    """NamedSharding tree matching a ``train_step.TrainState``.
+
+    Optimizer moments follow their parameter's layout; Adafactor's factored
+    second moments ('row'/'col' dicts) inherit the matching slice of it. The
+    immune router state and step counters are tiny and replicated.
+    """
+    def leaf(path, x):
+        names = _dict_names(path)
+        if names and names[-1] in ("row", "col"):
+            trim = 1 if names[-1] == "row" else 2
+            return _param_spec(names[:-1], tuple(x.shape), mesh, pcfg, trim=trim)
+        return _param_spec(names, tuple(x.shape), mesh, pcfg)
+    return jax.tree_util.tree_map_with_path(leaf, state_abs)
+
+
+def batch_shardings(batch_abs: Any, mesh: Mesh,
+                    pcfg: ParallelConfig = ParallelConfig()) -> Any:
+    """Batch dim over ('pod','data'); sequence over 'model' with seq_shard."""
+    def leaf(path, x):
+        names = _dict_names(path)
+        seq = "model" if (pcfg.seq_shard and names
+                          and names[-1] in ("tokens", "frames")) else None
+        spec = (_DP, seq) + (None,) * (x.ndim - 2) if x.ndim >= 2 else (_DP,)
+        return _named(mesh, spec[:x.ndim], tuple(x.shape))
+    return jax.tree_util.tree_map_with_path(leaf, batch_abs)
+
+
+def cache_shardings(cache_abs: Any, cfg: ModelConfig, mesh: Mesh,
+                    pcfg: ParallelConfig = ParallelConfig()) -> Any:
+    """Decode-cache layout: (depth, batch, seq, kv_heads, head_dim) KV leaves
+    shard batch over ('pod','data') and KV heads (or the sequence, under
+    seq_shard) over 'model'; SSM/rglru recurrent states shard batch only."""
+    def leaf(path, x):
+        names = _dict_names(path)
+        if names and names[-1] in ("k", "v") and x.ndim == 5:
+            if pcfg.seq_shard:
+                spec = (None, _DP, "model", None, None)
+            else:
+                spec = (None, _DP, None, "model", None)
+        elif x.ndim >= 2:
+            spec = (None, _DP) + (None,) * (x.ndim - 2)
+        else:
+            return NamedSharding(mesh, P())        # 'pos' scalar
+        return _named(mesh, spec, tuple(x.shape))
+    return jax.tree_util.tree_map_with_path(leaf, cache_abs)

@@ -1,20 +1,26 @@
 """The training loop: checkpoint/restart, failure injection, immune scheduling.
 
-Fault-tolerance contract (exercised by tests/test_trainer.py):
+Fault-tolerance contract (exercised by tests/test_train.py and tests/test_system.py):
   * auto-resume: on start, the trainer restores the newest valid checkpoint and
     continues from its step — a killed run resumes bitwise-identically (the data
     pipeline is a pure function of the step counter)
   * crash-safety: checkpoints are atomic (see dist/checkpoint.py); a failure mid-save
     falls back to the previous step
   * failure injection: ``failure_at`` raises mid-run to simulate a node loss
-  * the immune scheduler tracks per-worker throughput; on a real fleet its fractions
-    drive per-host microbatch sizing (here it is fed measured host step times)
+  * the immune scheduler tracks per-worker throughput and is checkpointed next to
+    the train state, so anergy verdicts (who is presumed dead) and shard fractions
+    survive a restart — a restored run resumes the paper's
+    anergy -> checkpoint-restore -> revival loop instead of re-learning the fleet.
+    ``heartbeats`` injects the fleet's per-worker throughput (tests simulate node
+    loss with it); on a single host it defaults to the measured local step rate.
 """
 from __future__ import annotations
 
+import logging
+import os
 import time
 from dataclasses import dataclass, field
-from functools import partial
+from functools import lru_cache, partial
 from typing import Callable, Optional
 
 import jax
@@ -30,6 +36,24 @@ from . import train_step as ts
 
 Array = jax.Array
 
+log = logging.getLogger(__name__)
+
+_SCHED_SUBDIR = "sched"
+
+
+@lru_cache(maxsize=32)
+def _jit_step(cfg: ModelConfig, tcfg: TrainConfig, rcfg: irouter.RouterConfig):
+    """Process-wide cache: every Trainer with the same (cfg, tcfg, rcfg) shares
+    one compiled step — a resumed run re-executes the *identical* executable
+    (bitwise-reproducible resume) and repeated small fixtures don't recompile."""
+    return jax.jit(partial(ts.train_step, cfg=cfg, tcfg=tcfg, rcfg=rcfg),
+                   donate_argnums=0)
+
+
+@lru_cache(maxsize=32)
+def _jit_data(cfg: ModelConfig, batch: int, seq: int):
+    return jax.jit(partial(pipeline.sample_batch, cfg, batch, seq))
+
 
 @dataclass
 class Trainer:
@@ -40,29 +64,69 @@ class Trainer:
     seq: int = 64
     ckpt_every: int = 50
     log_every: int = 10
+    keep: Optional[int] = None             # checkpoint retention (None = keep all)
     rcfg: irouter.RouterConfig = field(default_factory=irouter.RouterConfig)
+    scfg: ischeduler.SchedulerConfig = field(
+        default_factory=ischeduler.SchedulerConfig)
     failure_at: Optional[int] = None       # simulate a node loss at this step
+    num_workers: Optional[int] = None      # fleet size (default: process_count)
+    # (step, local_throughput) -> (num_workers,) observed per-worker throughput;
+    # 0 entries are missed heartbeats (anergy candidates)
+    heartbeats: Optional[Callable[[int, float], np.ndarray]] = None
     on_metrics: Optional[Callable] = None
 
     def __post_init__(self):
-        self._step_fn = jax.jit(partial(ts.train_step, cfg=self.cfg, tcfg=self.tcfg,
-                                        rcfg=self.rcfg), donate_argnums=0)
-        self._data_fn = jax.jit(partial(pipeline.sample_batch, self.cfg, self.batch,
-                                        self.seq))
-        self.scheduler = ischeduler.init_scheduler(num_workers=jax.process_count())
+        self._step_fn = _jit_step(self.cfg, self.tcfg, self.rcfg)
+        self._data_fn = _jit_data(self.cfg, self.batch, self.seq)
+        if self.num_workers is None:
+            self.num_workers = jax.process_count()
+        self.scheduler = ischeduler.init_scheduler(num_workers=self.num_workers)
         self.history: list[dict] = []
 
-    def init_or_restore(self) -> ts.TrainState:
+    def init_or_restore(self) -> tuple[ts.TrainState, int]:
+        """Newest valid checkpoint (with its scheduler state), else a fresh init.
+
+        Returns ``(state, step)`` with the step threaded explicitly: resume
+        continues from the checkpoint's step label, which must agree with the
+        ``state.step`` leaf it stored (the bitwise-resume tests pin this).
+        """
         key = jax.random.PRNGKey(self.tcfg.seed)
         state = ts.init_train_state(key, self.cfg, self.tcfg)
         restored, step = ckpt.restore(self.workdir, state)
-        if restored is not None:
-            return restored
-        return state
+        if restored is None:
+            return state, 0
+        if int(restored.step) != step:
+            # dir label and state leaf disagree (external tooling?): the leaf is
+            # what the training math uses, so trust it — never abort auto-resume
+            log.warning("checkpoint dir says step %d but state.step is %d; "
+                        "resuming from the state leaf", step, int(restored.step))
+            step = int(restored.step)
+        # the sched restore prefers the snapshot matching the train state's
+        # step (if the newest train checkpoint was corrupt and we fell back,
+        # so does the sched restore); failing that, the newest sched snapshot
+        # not newer than the train state — stale anergy memory beats amnesia
+        for s in [step] + [x for x in reversed(ckpt.all_steps(self._sched_dir()))
+                           if x < step]:
+            sched, _ = ckpt.restore(self._sched_dir(), self.scheduler, step=s)
+            if sched is not None:
+                self.scheduler = sched
+                break
+        return restored, step
+
+    def _sched_dir(self) -> str:
+        return os.path.join(self.workdir, _SCHED_SUBDIR)
+
+    def _checkpoint(self, state: ts.TrainState, step: int) -> None:
+        ckpt.save(self.workdir, state, step, keep=self.keep)
+        ckpt.save(self._sched_dir(), self.scheduler, step, keep=self.keep)
+
+    def worker_fracs(self) -> np.ndarray:
+        """Current per-worker shard fractions (drives per-host microbatch sizing)."""
+        return np.asarray(self.scheduler.frac)
 
     def train(self, num_steps: int) -> ts.TrainState:
-        state = self.init_or_restore()
-        start = int(state.step)
+        state, start = self.init_or_restore()
+
         data_state = pipeline.DataState(step=jnp.asarray(start, jnp.int32))
 
         for step in range(start, num_steps):
@@ -72,8 +136,11 @@ class Trainer:
             batch, data_state = self._data_fn(data_state)
             state, metrics = self._step_fn(state, batch)
             dt = time.perf_counter() - t0
-            self.scheduler = ischeduler.observe(
-                self.scheduler, jnp.asarray([1.0 / max(dt, 1e-9)]))
+            local_tput = 1.0 / max(dt, 1e-9)
+            hb = (self.heartbeats(step, local_tput) if self.heartbeats is not None
+                  else np.full((self.num_workers,), local_tput, np.float32))
+            self.scheduler = ischeduler.observe(self.scheduler, jnp.asarray(hb),
+                                                self.scfg)
 
             if step % self.log_every == 0 or step == num_steps - 1:
                 rec = {"step": step, "loss": float(metrics.loss),
@@ -81,10 +148,12 @@ class Trainer:
                        "lr": float(metrics.lr),
                        "load_cv": float(metrics.load_cv),
                        "drop_frac": float(metrics.drop_frac),
+                       "anergic_workers": int(np.sum(np.asarray(
+                           self.scheduler.anergic))),
                        "sec_per_step": dt}
                 self.history.append(rec)
                 if self.on_metrics:
                     self.on_metrics(rec)
             if (step + 1) % self.ckpt_every == 0 or step == num_steps - 1:
-                ckpt.save(self.workdir, state, step + 1)
+                self._checkpoint(state, step + 1)
         return state

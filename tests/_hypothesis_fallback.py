@@ -1,0 +1,140 @@
+"""Minimal stand-in for ``hypothesis`` when the real package is unavailable.
+
+The test environment declared in pyproject.toml includes hypothesis (CI installs
+it and gets the real shrinking engine); offline/airgapped environments may not
+have it. Rather than losing two whole test modules to a collection error,
+``conftest.py`` installs this fallback, which implements the small slice of the
+API our property tests use:
+
+  * ``@given(...)`` with positional or keyword strategies
+  * ``settings(deadline=..., max_examples=...)`` as a decorator (or reusable
+    decorator instance)
+  * strategies: ``integers``, ``floats``, ``booleans``, ``sampled_from``,
+    ``lists``
+
+Draws are deterministic per test (seeded from the test's qualname) so failures
+reproduce; the first example of every range strategy is its minimum and the
+second its maximum, so boundary cases are always exercised. No shrinking, no
+database — this is a fallback, not a replacement.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+__version__ = "0.0-fallback"
+
+
+class settings:
+    """Decorator (class instance) recording example-count / deadline knobs."""
+
+    def __init__(self, deadline=None, max_examples: int = 100, **_ignored):
+        self.deadline = deadline
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._hyp_settings = self
+        return fn
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random, index: int):
+        return self._draw(rng, index)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    def draw(rng, i):
+        if i == 0:
+            return min_value
+        if i == 1:
+            return max_value
+        return rng.randint(min_value, max_value)
+    return _Strategy(draw)
+
+
+def floats(min_value: float, max_value: float, **_ignored) -> _Strategy:
+    def draw(rng, i):
+        if i == 0:
+            return min_value
+        if i == 1:
+            return max_value
+        return rng.uniform(min_value, max_value)
+    return _Strategy(draw)
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng, i: (False, True)[i] if i < 2
+                     else bool(rng.getrandbits(1)))
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rng, i: options[i % len(options)] if i < len(options)
+                     else rng.choice(options))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng, i):
+        if i == 0:
+            size = min_size
+        elif i == 1:
+            size = max_size
+        else:
+            size = rng.randint(min_size, max_size)
+        return [elements.example(rng, 2 + rng.randrange(1 << 16))
+                for _ in range(size)]
+    return _Strategy(draw)
+
+
+def given(*pos_strategies, **kw_strategies):
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        names = [n for n in sig.parameters if n != "self"]
+        # real hypothesis binds positional strategies to the RIGHTMOST params
+        # (leftward ones stay free for pytest fixtures) — match that
+        mapping = dict(zip(names[len(names) - len(pos_strategies):],
+                           pos_strategies))
+        mapping.update(kw_strategies)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_hyp_settings", None) or settings()
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(conf.max_examples):
+                drawn = {k: s.example(rng, i) for k, s in mapping.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (#{i}): {drawn!r}") from e
+
+        # hide the strategy-filled params from pytest's fixture resolution
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for n, p in sig.parameters.items() if n not in mapping])
+        return wrapper
+    return decorate
+
+
+def install(mod: types.ModuleType | None = None) -> types.ModuleType:
+    """Register this module as ``hypothesis`` (+ ``hypothesis.strategies``).
+
+    ``mod`` is the loaded module object; pass it explicitly when loading via a
+    spec that never touched ``sys.modules`` (registration happens only here,
+    after a successful exec, so a broken load can't poison later imports).
+    """
+    if mod is None:
+        mod = sys.modules[__name__]
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists"):
+        setattr(strategies, name, getattr(mod, name))
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+    return mod

@@ -1,0 +1,28 @@
+"""Shared test configuration.
+
+Installs the deterministic ``hypothesis`` fallback (_hypothesis_fallback.py)
+when the real package is missing, so airgapped environments still collect and
+run the property-test modules.
+
+(JAX's persistent compilation cache was evaluated here to hide the VLSI agent
+model's 20-30 s XLA CPU compiles on warm runs, and rejected: with
+``donate_argnums`` in play, deserialized CPU executables produced NaNs and
+heap corruption under jax 0.4.37. Do not re-enable without a correctness soak;
+see ROADMAP "Open items".)
+"""
+import importlib.util
+import os
+import sys
+
+
+def _ensure_hypothesis() -> None:
+    if importlib.util.find_spec("hypothesis") is not None:
+        return
+    path = os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py")
+    spec = importlib.util.spec_from_file_location("hypothesis", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    mod.install(mod)               # single registration point for sys.modules
+
+
+_ensure_hypothesis()

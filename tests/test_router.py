@@ -9,20 +9,36 @@ from repro.core import router as irouter
 jax.config.update("jax_platform_name", "cpu")
 
 
+import functools
+
+
+@functools.lru_cache(maxsize=8)
+def _sim_fn(mode: str, e: int, t: int):
+    """One jitted scan per (mode, e, t): the whole simulation is a single XLA
+    program, reused across cases and step counts instead of dispatching
+    thousands of tiny host-side ops."""
+    cfg = irouter.RouterConfig(mode=mode)
+    skew = jnp.linspace(2.0, 0.0, e)[None, :]          # expert 0 strongly preferred
+
+    def body(state, i):
+        logits = skew + 0.5 * jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(0), i), (t, e))
+        idx, gates, probs = irouter.route(logits, state.bias, k=2)
+        load = irouter.load_fractions(idx, e)
+        return irouter.update_router_state(state, load, cfg), irouter.load_cv(load)
+
+    @jax.jit
+    def run(steps_arr):
+        return jax.lax.scan(body, irouter.init_router_state(e), steps_arr)
+
+    return run
+
+
 def _simulate(mode: str, steps: int = 400, e: int = 8, t: int = 512, seed: int = 0):
     """Feed a router whose raw logits are *persistently skewed* toward expert 0 and
     watch whether the balancing state evens out the realized loads."""
-    cfg = irouter.RouterConfig(mode=mode)
-    state = irouter.init_router_state(e)
-    key = jax.random.PRNGKey(seed)
-    skew = jnp.linspace(2.0, 0.0, e)[None, :]          # expert 0 strongly preferred
-    cvs = []
-    for i in range(steps):
-        logits = skew + 0.5 * jax.random.normal(jax.random.fold_in(key, i), (t, e))
-        idx, gates, probs = irouter.route(logits, state.bias, k=2)
-        load = irouter.load_fractions(idx, e)
-        state = irouter.update_router_state(state, load, cfg)
-        cvs.append(float(irouter.load_cv(load)))
+    base = seed * 1_000_003
+    state, cvs = _sim_fn(mode, e, t)(jnp.arange(base, base + steps, dtype=jnp.int32))
     return np.asarray(cvs), state
 
 

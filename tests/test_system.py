@@ -74,6 +74,50 @@ def test_elastic_reshard_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_anergy_checkpoint_restore_revival_loop(tmp_path):
+    """The full paper loop at fleet level: a worker stops heartbeating and is
+    anergized (clonal deletion); the run then crashes and auto-resumes from the
+    checkpoint — *including* the scheduler's membership memory, so the dead
+    worker stays excluded; when its heartbeat returns it is revived and gets
+    its shard fraction back (elastic membership)."""
+    from repro.core import scheduler as ischeduler
+
+    cfg = configs.get_config("smollm-360m").smoke()
+    cfg = dataclasses.replace(cfg, num_layers=2, d_model=32, num_heads=2,
+                              num_kv_heads=1, head_dim=16, d_ff=64, vocab_size=128)
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=5, decay_steps=1000)
+    scfg = ischeduler.SchedulerConfig(mem_decay=0.5, anergy_floor=0.1,
+                                      revival_steps=3)
+    dead_worker = 2
+
+    def heartbeats(step, tput):
+        hb = np.ones((4,), np.float32)
+        if step >= 3:                     # node loss: worker 2 stops reporting
+            hb[dead_worker] = 0.0
+        return hb
+
+    mk = lambda **kw: Trainer(cfg=cfg, tcfg=tcfg, workdir=str(tmp_path), batch=4,
+                              seq=32, ckpt_every=10, log_every=5, num_workers=4,
+                              scfg=scfg, **kw)
+    tr = mk(heartbeats=heartbeats, failure_at=13)
+    with pytest.raises(RuntimeError, match="injected node failure"):
+        tr.train(30)
+    assert bool(tr.scheduler.anergic[dead_worker]), "worker never anergized"
+    assert float(tr.scheduler.frac[dead_worker]) == 0.0
+
+    # resume: the restored scheduler remembers who is presumed dead ...
+    tr2 = mk(heartbeats=lambda step, tput: np.ones((4,), np.float32))
+    _, step = tr2.init_or_restore()
+    assert step == 10
+    assert bool(tr2.scheduler.anergic[dead_worker]), \
+        "anergy verdict lost across checkpoint restore"
+    # ... and the returning heartbeat revives the worker (elastic rejoin)
+    tr2.train(30)
+    assert not bool(tr2.scheduler.anergic[dead_worker]), "worker never revived"
+    assert float(tr2.scheduler.frac[dead_worker]) > 0.05
+    assert tr2.history[-1]["anergic_workers"] == 0
+
+
 @pytest.mark.slow
 def test_multi_device_dryrun_subprocess(tmp_path):
     """Integration check of deliverable (e): lower+compile one cell on the real

@@ -115,6 +115,48 @@ class TestCheckpoint:
             ckpt.save(str(tmp_path), state, step=s, keep=3)
         assert ckpt.all_steps(str(tmp_path)) == [3, 4, 5]
 
+    def test_retention_with_fewer_than_keep(self, tmp_path):
+        """keep larger than what exists must delete nothing (regression: the
+        prune slice went negative and ate the oldest checkpoints)."""
+        state = {"a": jnp.zeros(2)}
+        for s in range(1, 7):
+            ckpt.save(str(tmp_path), state, step=s, keep=4)
+        assert ckpt.all_steps(str(tmp_path)) == [3, 4, 5, 6]
+
+    def test_retention_spares_fallback_survivors(self, tmp_path):
+        """Pruning is relative to the step just saved: a corrupt newer
+        checkpoint we resumed past must not cause keep= to delete the good
+        checkpoints written after the fallback."""
+        state = {"a": jnp.arange(4.0)}
+        ckpt.save(str(tmp_path), state, step=10)
+        ckpt.save(str(tmp_path), {"a": jnp.arange(4.0) * 5}, step=50)
+        with open(os.path.join(str(tmp_path), "step_00000050",
+                               "leaf_00000.npy"), "wb") as f:
+            f.write(b"garbage")
+        restored, step = ckpt.restore(str(tmp_path), state)
+        assert step == 10
+        ckpt.save(str(tmp_path), restored, step=20, keep=1)
+        restored2, step2 = ckpt.restore(str(tmp_path), state)
+        assert step2 == 20 and restored2 is not None
+
+    def test_torn_save_is_invisible(self, tmp_path):
+        """A crash mid-save (scratch dir never renamed) must not shadow the last
+        good checkpoint, and the next save must sweep the debris."""
+        state = {"a": jnp.arange(4.0)}
+        ckpt.save(str(tmp_path), state, step=1)
+        torn = tmp_path / "step_00000002.tmp.deadbeef"
+        torn.mkdir()
+        (torn / "leaf_00000.npy").write_bytes(b"partial")
+        assert ckpt.all_steps(str(tmp_path)) == [1]
+        restored, step = ckpt.restore(str(tmp_path), state)
+        assert step == 1 and restored is not None
+        ckpt.save(str(tmp_path), state, step=3)
+        assert not torn.exists(), "scratch dir from a crashed save not swept"
+
+    def test_restore_empty_dir(self, tmp_path):
+        restored, step = ckpt.restore(str(tmp_path), {"a": jnp.zeros(2)})
+        assert restored is None and step == 0
+
 
 class TestTrainerFaultTolerance:
     def _mk(self, tmp_path, **kw):

@@ -56,8 +56,10 @@ class TestAgentExtraction:
     def test_redundant_statements_are_emitted_and_deduplicated(self):
         """Paper: multiple contacts between one node pair produce redundant
         equivalence statements; the harvester deduplicates them by region."""
+        # 64 agents on the same grid shape as the seed tests above: reuses their
+        # compiled extractor instead of paying a fresh multi-second XLA compile
         lay = layout.nand_layout(double_contacts=True)
-        grid, _, _ = extractor.run_extraction(lay, n_agents=96, seed=0,
+        grid, _, _ = extractor.run_extraction(lay, n_agents=64, seed=0,
                                               max_steps=4000)
         sim = extractor.harvest(grid, lay)
         # the two disjoint input contacts hit the same (m1, poly) node pairs
