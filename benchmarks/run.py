@@ -8,6 +8,7 @@ sub-benchmark). Heavier variants live in the individual modules:
     python -m benchmarks.ablations             # heuristic ablations
     python -m benchmarks.router_balance        # MoE balance: immune vs baselines
     python -m benchmarks.scheduler_bench       # straggler mitigation
+    python -m benchmarks.serve_engine          # serving admission: immune vs FIFO
     python -m benchmarks.kernel_bench          # Pallas kernel microbenches
     python -m benchmarks.roofline_report       # dry-run roofline tables
 """
@@ -55,6 +56,12 @@ def main() -> None:
     res, us = _timed(scheduler_bench.run)
     sp = np.mean([r[3] for r in res])
     rows.append(("straggler_scheduler", us, f"mean_speedup_vs_static={sp:.2f}x"))
+
+    from benchmarks import serve_engine
+    res, us = _timed(serve_engine.run, num_requests=24, seeds=(0,))
+    by = {r[1]: r for r in res}
+    rows.append(("serve_engine_admission", us,
+                 f"immune_p99={by['immune'][4]:.0f};fifo_p99={by['fifo'][4]:.0f}"))
 
     from benchmarks import kernel_bench
     kres, us = _timed(kernel_bench.run)

@@ -91,10 +91,14 @@ def observe(state: SchedulerState, throughput: Array,
 
 
 def step_time(state: SchedulerState, speeds: Array, work: float = 1.0) -> Array:
-    """Simulated wall-time of one DP step: max over live workers of share/speed."""
+    """Simulated wall-time of one DP step: max over live workers of share/speed.
+
+    A fully-anergic fleet has nobody to run the step: the time is ``inf`` (the
+    max over an empty set of workers), not 0.0 — returning 0.0 made a dead
+    fleet look infinitely fast in ``simulate``."""
     live = ~state.anergic
     t = jnp.where(live, state.frac * work / jnp.maximum(speeds, 1e-9), 0.0)
-    return jnp.max(t)
+    return jnp.where(jnp.any(live), jnp.max(t), jnp.inf)
 
 
 def simulate(speeds_trace: Array, cfg: SchedulerConfig = SchedulerConfig(),

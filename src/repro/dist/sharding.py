@@ -14,8 +14,8 @@ Layout policy (mirrors the activation constraints in ``models/layers.py``):
   * **Decode caches** — batch over ('pod', 'data'); KV heads over 'model'
     (or the sequence dim when ``pcfg.seq_shard``).
 
-Every rule passes through a guard with the same policy as
-``layers.constrain`` (separate implementations today — see ROADMAP): an axis
+Every rule passes through the same guard ``layers.constrain`` applies
+(``models.layers.guard_entry`` — one implementation, shared): an axis
 the mesh doesn't have, or that doesn't divide the dim it would split, is
 dropped rather than letting GSPMD pad-and-rematerialize. Leaves with no rule
 (small norms/biases, SSM scan constants) are replicated — correct, just not
@@ -35,6 +35,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.tree_util import DictKey
 
 from ..configs.base import ModelConfig, ParallelConfig
+from ..models.layers import guard_entry
 
 _DP = ("pod", "data")          # pure data-parallel axes, filtered to the mesh
 
@@ -44,23 +45,10 @@ def _axes(mesh: Mesh) -> dict[str, int]:
 
 
 def _guard(spec: tuple, shape: tuple, axes: dict[str, int]) -> P:
-    """Drop axis names the mesh lacks or that don't divide their dim."""
-    out = []
-    for s, dim in zip(spec, shape):
-        if s is None:
-            out.append(None)
-            continue
-        cand = tuple(a for a in (s if isinstance(s, tuple) else (s,)) if a in axes)
-        size = 1
-        for a in cand:
-            size *= axes[a]
-        if not cand or dim % size != 0:
-            out.append(None)
-        elif isinstance(s, tuple):
-            out.append(cand)
-        else:
-            out.append(cand[0])
-    return P(*out)
+    """Drop axis names the mesh lacks or that don't divide their dim — the same
+    ``models.layers.guard_entry`` policy the activation constraints apply, so
+    the two layouts cannot drift."""
+    return P(*(guard_entry(s, dim, axes) for s, dim in zip(spec, shape)))
 
 
 def _named(mesh: Mesh, spec: tuple, shape: tuple) -> NamedSharding:

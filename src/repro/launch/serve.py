@@ -3,6 +3,13 @@ restoring trained parameters from a checkpoint directory.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
         --batch 4 --steps 32 [--restore /tmp/run1]
+
+``--stream`` switches from the one-shot fixed batch to the continuous-batching
+engine driven by a synthetic open-loop arrival trace (bursty, heterogeneous
+request classes), with admission governed by the immune primitives:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+        --stream --requests 40 --slots 4 [--policy fifo]
 """
 from __future__ import annotations
 
@@ -29,6 +36,13 @@ def main():
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--restore", default=None,
                     help="checkpoint dir from repro.launch.train")
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous-batching engine on a synthetic open-loop "
+                         "arrival trace instead of a one-shot fixed batch")
+    ap.add_argument("--policy", default="immune", choices=("immune", "fifo"))
+    ap.add_argument("--requests", type=int, default=40)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--latency-budget", type=float, default=24.0)
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -50,6 +64,33 @@ def main():
         if state.router is not None:
             bias = state.router.bias
         print(f"restored step {step} from {args.restore}")
+
+    if args.stream:
+        from repro.serve import engine as eng_mod
+        ecfg = eng_mod.EngineConfig(
+            num_slots=args.slots,
+            max_cache=args.prompt_len + args.steps + 48,
+            policy=args.policy, num_classes=3,
+            latency_budget=args.latency_budget)
+        trace = eng_mod.synthetic_trace(cfg, num_requests=args.requests,
+                                        heavy_tokens=args.steps + 8)
+        eng = eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
+        with mesh:
+            t0 = time.perf_counter()
+            stats = eng.run(trace, max_ticks=50 * args.requests)
+        dt = time.perf_counter() - t0
+        print(f"[{args.policy}] {stats['completed']} completed / "
+              f"{stats['shed']} shed of {args.requests} requests in "
+              f"{stats['ticks']} ticks ({dt:.1f}s wall incl. compile)")
+        print(f"  throughput {stats['throughput']:.2f} tok/tick | "
+              f"p50 {stats['p50_latency']:.0f} / p99 {stats['p99_latency']:.0f} "
+              f"ticks | goodput {stats['goodput']:.2f} | "
+              f"{stats['mid_stream_admissions']} mid-stream admissions")
+        for r in eng.completed[:4]:
+            print(f"  req {r.rid} (class {r.rclass}): arrived {r.arrival}, "
+                  f"admitted {r.admit_tick}, finished {r.finish_tick}: "
+                  f"{r.out_tokens[:12]}{'...' if len(r.out_tokens) > 12 else ''}")
+        return
 
     key = jax.random.PRNGKey(1)
     prompts = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len),

@@ -54,6 +54,33 @@ def _current_axes() -> dict[str, int]:
         return {}
 
 
+def guard_entry(s, dim: int, axes: dict[str, int]):
+    """One PartitionSpec entry of the shared axis-drop policy.
+
+    This is THE guard — used by the activation constraints here and by
+    ``dist.sharding``'s NamedSharding rules, so the two layout policies cannot
+    drift. Axis names the mesh doesn't have are dropped; an entry whose
+    surviving axes' total size doesn't divide the dim it would split is dropped
+    whole (splitting anyway forces GSPMD into pad-and-rematerialize). Axis
+    sizes recorded as 0 mean "unknown" and skip the divisibility check.
+    Returns None, an axis name, or a tuple of axis names."""
+    if s is None:
+        return None
+    is_seq = isinstance(s, (tuple, list))
+    cand = tuple(a for a in (s if is_seq else (s,)) if a in axes)
+    if not cand:
+        return None
+    size, known = 1, True
+    for a in cand:
+        if axes[a]:
+            size *= axes[a]
+        else:
+            known = False
+    if known and dim % size != 0:
+        return None
+    return cand if is_seq else cand[0]
+
+
 def constrain(x: Array, *spec) -> Array:
     """with_sharding_constraint that no-ops outside a mesh, drops axis names the
     current mesh doesn't have, and drops axes that don't divide their dim (an
@@ -63,21 +90,7 @@ def constrain(x: Array, *spec) -> Array:
     if not axes:
         return x
 
-    def keep(s, dim):
-        if s is None:
-            return None
-        cand = tuple(a for a in (s if isinstance(s, (tuple, list)) else (s,))
-                     if a in axes)
-        if not cand:
-            return None
-        size = 1
-        for a in cand:
-            size *= max(axes[a], 1)
-        if axes.get(cand[0], 0) and dim % size != 0:
-            return None
-        return cand if isinstance(s, (tuple, list)) else cand[0]
-
-    filtered = tuple(keep(s, d) for s, d in zip(spec, x.shape))
+    filtered = tuple(guard_entry(s, d, axes) for s, d in zip(spec, x.shape))
     if all(s is None for s in filtered):
         return x
     return jax.lax.with_sharding_constraint(
@@ -313,26 +326,36 @@ def attention_prefill(params, x: Array, cfg: ModelConfig, cache: dict,
 
 def attention_decode(params, x: Array, cfg: ModelConfig, cache: dict, pos: Array,
                      window: Optional[int] = None):
-    """One-token decode. cache: {'k','v': (B, S_max, Hkv, D)}; pos: () current index.
+    """One-token decode. cache: {'k','v': (B, S_max, Hkv, D)}; ``pos`` is the
+    current index — () for a lockstep batch, or (B,) when each batch row sits at
+    its own depth (the serving engine's continuous-batching slots).
 
     Returns (out, new_cache). The cache is a ring buffer when ``window`` is set
     (bounded memory for sliding-window layers)."""
     b = x.shape[0]
-    positions = jnp.broadcast_to(pos, (b, 1))
+    pos = jnp.asarray(pos)
+    per_slot = pos.ndim == 1
+    positions = pos[:, None] if per_slot else jnp.broadcast_to(pos, (b, 1))
     q, k, v = _qkv(params, x, cfg, positions)
     s_max = cache["k"].shape[1]
     slot = pos % s_max if window is not None else pos
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    if per_slot:
+        rows = jnp.arange(b)
+        ck = cache["k"].at[rows, slot].set(k[:, 0])
+        cv = cache["v"].at[rows, slot].set(v[:, 0])
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
     kpos = jnp.arange(s_max)[None, :]
+    qref = pos[:, None] if per_slot else pos          # (B, 1) rows or () scalar
+    sref = slot[:, None] if per_slot else slot
     if window is not None:
         # ring buffer: valid slots are the last min(pos+1, s_max) written
-        age = (slot - kpos) % s_max
-        mask = age < jnp.minimum(pos + 1, s_max)
+        age = (sref - kpos) % s_max
+        mask = age < jnp.minimum(qref + 1, s_max)
     else:
-        mask = kpos <= pos
-    mask = jnp.broadcast_to(mask[:, None, :], (1, 1, s_max))
-    out = _sdpa(q, ck, cv, mask, cfg)
+        mask = kpos <= qref
+    out = _sdpa(q, ck, cv, mask[:, None, :], cfg)     # (B|1, 1, S_max) mask
     return out @ params["wo"], {"k": ck, "v": cv}
 
 

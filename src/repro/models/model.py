@@ -133,6 +133,38 @@ def decode_step(params, cfg: ModelConfig, batch: dict, cache: dict,
     return logits, {"layers": layer_caches, "pos": cache["pos"] + 1}
 
 
+# ---------------------------------------------------------------------------
+# slot-pool cache surgery (continuous-batching serving engine)
+# ---------------------------------------------------------------------------
+def init_slot_cache(cfg: ModelConfig, num_slots: int, s_max: int) -> dict:
+    """Pooled decode cache for the serving engine: like ``init_cache`` but with a
+    per-slot (num_slots,) position vector, so slots can sit at different depths
+    of their own sequences while sharing one compiled decode step."""
+    cache = init_cache(cfg, num_slots, s_max)
+    return {"layers": cache["layers"],
+            "pos": jnp.zeros((num_slots,), jnp.int32)}
+
+
+def insert_slot_cache(pool: dict, one: dict, slot: Array) -> dict:
+    """Splice a freshly prefilled batch-of-1 cache into ``slot`` of a pooled
+    cache (prefill-into-slot). Layer-cache leaves are stacked (depth, batch, ...)
+    so the batch axis is axis 1; the whole slot row is overwritten, which also
+    erases any stale state from the slot's previous occupant."""
+    layer_caches = jax.tree.map(
+        lambda full, o: jax.lax.dynamic_update_slice_in_dim(
+            full, o.astype(full.dtype), slot, axis=1),
+        pool["layers"], one["layers"])
+    return {"layers": layer_caches,
+            "pos": pool["pos"].at[slot].set(one["pos"].astype(pool["pos"].dtype))}
+
+
+def reset_slot_cache(pool: dict, slot: Array) -> dict:
+    """Retire a slot: zero its cache row and position (compaction for reuse)."""
+    layer_caches = jax.tree.map(lambda full: full.at[:, slot].set(0),
+                                pool["layers"])
+    return {"layers": layer_caches, "pos": pool["pos"].at[slot].set(0)}
+
+
 def param_count(params) -> int:
     return sum(int(x.size) for x in jax.tree.leaves(params))
 

@@ -1,1 +1,1 @@
-from . import decode  # noqa: F401
+from . import decode, engine  # noqa: F401

@@ -1,0 +1,463 @@
+"""Continuous-batching serving engine governed by the paper's immune primitives.
+
+``serve.decode.generate`` serves a *fixed* batch: every prompt prefills together
+and every sequence decodes in lockstep until the longest finishes. Real traffic
+is an open-loop arrival process, so the engine keeps a fixed pool of decode
+**slots** and admits requests mid-stream: a free slot is prefilled (batch-of-1)
+and spliced into the pooled KV cache while the other slots keep decoding;
+finished sequences retire and their slot is compacted (reset) for reuse. All
+slot state is arrays (per-slot cache position, last token, active mask), so one
+compiled decode step serves every tick regardless of occupancy.
+
+Admission is the immune loop applied to serving, per the anticipation argument
+of Boulmier et al. (PAPERS.md) — schedule on *remembered* cost, not
+instantaneous load:
+
+  * ``ImmuneMemory``      — EMA of per-request-class decode cost (slot-ticks);
+                            admission orders candidates by remembered cost, so
+                            a class's history, not the current queue snapshot,
+                            decides who gets a slot under pressure.
+  * ``TwoStageRegulator`` — admission-burst throttle: a burst admits at full
+                            speed (fast response), the suppressor population
+                            then builds and pauses follow-on admissions
+                            (delayed negative feedback), damping convoys.
+  * ``AnergyGate``        — request classes that repeatedly blow their latency
+                            budget without co-stimulation (in-budget
+                            completions) become anergic and are shed (left in
+                            the queue, not admitted); an IL-2-like signal
+                            revives them when queue pressure drops.
+
+The FIFO policy (``EngineConfig(policy="fifo")``) is the baseline the
+benchmark compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from dataclasses import dataclass, field
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core import immune
+from ..models import model
+from .decode import greedy
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# request / config types
+# ---------------------------------------------------------------------------
+@dataclass
+class Request:
+    """One serving request. ``tokens`` is the prompt; ``rclass`` buckets requests
+    into the classes the immune admission controller remembers (e.g. endpoint,
+    tenant, or prompt-shape bucket)."""
+
+    rid: int
+    tokens: np.ndarray                  # (L,) int32 prompt
+    max_new_tokens: int
+    rclass: int = 0
+    arrival: int = 0                    # tick the request enters the queue
+    eos_id: Optional[int] = None
+    patches: Optional[np.ndarray] = None   # vlm prefix embeddings (P, Fd)
+    frames: Optional[np.ndarray] = None    # audio frame embeddings (L, Fd)
+
+    # filled in by the engine
+    out_tokens: list = field(default_factory=list)
+    admit_tick: int = -1
+    finish_tick: int = -1
+    slot: int = -1
+
+    @property
+    def latency(self) -> int:
+        return self.finish_tick - self.arrival
+
+    def prompts(self) -> dict:
+        """The prefill batch-of-1 for this request — the single source of truth
+        for what the engine feeds the model (the parity oracle reuses it)."""
+        p = {"tokens": jnp.asarray(self.tokens, jnp.int32)[None]}
+        if self.patches is not None:
+            p["patches"] = jnp.asarray(self.patches)[None]
+        if self.frames is not None:
+            p["frames"] = jnp.asarray(self.frames)[None]
+        return p
+
+
+def attach_modality_inputs(req: Request, cfg: ModelConfig, rng) -> Request:
+    """Give a request the frontend inputs its family needs (random stand-ins
+    for the stub frontends) — shared by the trace generator, the examples, and
+    the tests so the shapes can't drift apart."""
+    if cfg.family == "vlm":
+        req.patches = rng.standard_normal(
+            (cfg.frontend_tokens, cfg.frontend_dim)).astype(np.float32)
+    if cfg.family == "audio":
+        req.frames = rng.standard_normal(
+            (len(req.tokens), cfg.frontend_dim)).astype(np.float32)
+    return req
+
+
+class EngineConfig(NamedTuple):
+    num_slots: int = 4
+    max_cache: int = 96
+    policy: str = "immune"            # "immune" | "fifo"
+    num_classes: int = 4
+    latency_budget: float = 32.0      # ticks; beyond this a completion "blew" SLO
+    mem_decay: float = 0.8            # cost-memory EMA decay
+    reg_threshold: float = 2.0        # admission pauses while response exceeds this
+    shed_level: float = 0.5           # anergy level above which a class is shed
+    low_pressure: float = 0.5         # queue_len < low_pressure*num_slots -> IL-2
+    anergy_onset: float = 0.34
+    anergy_revival: float = 0.3
+
+
+# ---------------------------------------------------------------------------
+# jitted slot-pool kernels — shared across Engine instances via jit's cache
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("cfg", "max_cache"))
+def _prefill_one(params, cfg: ModelConfig, prompts: dict, max_cache: int,
+                 router_bias):
+    """Prefill a batch-of-1 prompt into a fresh cache; returns (first_token,
+    cache). Identical math to the first stage of ``decode.generate``."""
+    cache = model.init_cache(cfg, 1, max_cache)
+    logits, cache = model.prefill(params, cfg, prompts, cache,
+                                  router_bias=router_bias)
+    return greedy(logits), cache
+
+
+@partial(jax.jit, donate_argnums=(0, 3))
+def _splice(pool, one, slot, last, active, first):
+    """Insert a prefilled batch-of-1 cache + its first token into ``slot``."""
+    pool = model.insert_slot_cache(pool, one, slot)
+    return pool, last.at[slot].set(first[0]), active.at[slot].set(True)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _release(pool, active, slot):
+    """Retire ``slot``: compact (zero) its cache row and clear the active bit."""
+    return model.reset_slot_cache(pool, slot), active.at[slot].set(False)
+
+
+# pool and last are donated: the engine rebinds both from the return value each
+# tick, and without donation every decoded token would pay a fresh copy of the
+# whole pooled KV cache (the scan carry in decode._decode_loop gets this free)
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2, 3))
+def _decode_tick(params, cfg: ModelConfig, pool, last, active, router_bias,
+                 frames):
+    """One token for every slot (occupied or not) — the single compiled decode
+    step. Inactive slots advance neither position nor last token; their lane
+    computes a garbage token that the host discards, which is what keeps the
+    step shape (and therefore the compiled program) independent of occupancy."""
+    batch = {"token": last}
+    if cfg.family == "audio":
+        batch["frame"] = frames
+    logits, new_pool = model.decode_step(params, cfg, batch, pool,
+                                         router_bias=router_bias)
+    nxt = greedy(logits)                             # (S, 1)
+    pos = jnp.where(active, new_pool["pos"], pool["pos"])
+    last = jnp.where(active[:, None], nxt, last)
+    return nxt, last, {"layers": new_pool["layers"], "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# immune admission controller
+# ---------------------------------------------------------------------------
+class ImmuneAdmission:
+    """Host-side admission controller over the three immune primitives.
+
+    Per tick: completions feed the cost memory and the anergy
+    stimulus/co-stimulus counters; ``end_tick`` advances the regulator (with the
+    tick's admissions as stimulus) and the anergy gate (with IL-2 flowing when
+    queue pressure is low)."""
+
+    def __init__(self, ecfg: EngineConfig):
+        self.ecfg = ecfg
+        c = ecfg.num_classes
+        self.memory = immune.ImmuneMemory.create((c,), decay=ecfg.mem_decay)
+        self.regulator = immune.TwoStageRegulator.create()
+        self.reg_state = self.regulator.init(())
+        self.gate = immune.AnergyGate.create(onset=ecfg.anergy_onset,
+                                             revival=ecfg.anergy_revival)
+        self.anergy = self.gate.init((c,))
+        self._blown = np.zeros(c, np.float32)
+        self._ok = np.zeros(c, np.float32)
+
+    def remembered_cost(self, rclass: int) -> float:
+        return float(self.memory.value[rclass])
+
+    def observe_completion(self, rclass: int, cost: float, latency: float):
+        # per-class EMA: observing `value` for the untouched classes leaves them
+        # unchanged under ImmuneMemory's decay*v + (1-decay)*obs update
+        self.memory = self.memory.update(
+            self.memory.value.at[rclass].set(cost))
+        if latency > self.ecfg.latency_budget:
+            self._blown[rclass] += 1.0
+        else:
+            self._ok[rclass] += 1.0
+
+    def admissible(self, rclass: int) -> bool:
+        return float(self.anergy.level[rclass]) <= self.ecfg.shed_level
+
+    def throttled(self) -> bool:
+        return float(self.reg_state.response) > self.ecfg.reg_threshold
+
+    def end_tick(self, admitted: int, queue_len: int,
+                 queued_demand: np.ndarray, predicted_cost: np.ndarray):
+        """Advance the regulator and anergy gate one tick.
+
+        Anergy stimulus is anticipatory: a class with queued demand whose
+        predicted cost already exceeds the latency budget *will* blow its SLO —
+        that is antigen without co-stimulation, and waiting for the completions
+        to prove it would let the convoy form first. In-budget completions are
+        the co-stimulation; IL-2 flows when queue pressure drops, reviving shed
+        classes so they are served in quiet periods."""
+        stim = jnp.asarray(admitted / max(self.ecfg.num_slots, 1), jnp.float32)
+        self.reg_state = self.regulator.step(self.reg_state, stim)
+        il2 = 1.0 if queue_len < self.ecfg.low_pressure * self.ecfg.num_slots \
+            else 0.0
+        will_blow = (queued_demand > 0) & \
+            (predicted_cost > self.ecfg.latency_budget)
+        self.anergy = self.gate.step(
+            self.anergy,
+            stimulus=jnp.asarray((self._blown > 0) | will_blow, jnp.float32),
+            costimulus=jnp.asarray(self._ok > 0, jnp.float32),
+            il2=il2)
+        self._blown[:] = 0.0
+        self._ok[:] = 0.0
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+class Engine:
+    """Continuous-batching decode over a fixed slot pool with queue admission."""
+
+    def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig,
+                 router_bias: Optional[Array] = None):
+        self.params, self.cfg, self.ecfg = params, cfg, ecfg
+        self.router_bias = router_bias
+        # MoE: the decode tick runs every slot, occupied or not, and expert
+        # capacity is contended across whatever shares the batch — a garbage
+        # lane from an empty slot must never displace a real request's token.
+        # Bump the decode-path capacity so the (tiny: num_slots * k) token set
+        # is dropless by construction. Prefill keeps the configured capacity:
+        # it is a batch-of-1 call, bitwise-identical to one-shot generate's.
+        self.cfg_decode = cfg if not cfg.num_experts else dataclasses.replace(
+            cfg, capacity_factor=float(max(cfg.num_experts,
+                                           cfg.capacity_factor)))
+        s = ecfg.num_slots
+        self.pool = model.init_slot_cache(cfg, s, ecfg.max_cache)
+        self.last = jnp.zeros((s, 1), jnp.int32)
+        self.active = jnp.zeros((s,), bool)
+        self.frames = (jnp.zeros((s, 1, cfg.frontend_dim), jnp.float32)
+                       if cfg.family == "audio" else None)
+        self.slots: list[Optional[Request]] = [None] * s
+        self.queue: deque[Request] = deque()
+        self.tick = 0
+        self.completed: list[Request] = []
+        self.shed: list[Request] = []      # rejected while their class was anergic
+        self.admission = ImmuneAdmission(ecfg) if ecfg.policy == "immune" \
+            else None
+        self.mid_stream_admissions = 0     # admissions while other slots decode
+        self.unsubmitted = 0               # run() arrivals never reached
+        self._admitted_this_tick = 0
+        self._decoding_before_admit = False
+
+    # -- queue ---------------------------------------------------------------
+    def submit(self, req: Request):
+        need = len(req.tokens) + self.cfg.frontend_tokens + req.max_new_tokens
+        if need > self.ecfg.max_cache:
+            raise ValueError(
+                f"request {req.rid}: prompt+prefix+decode = {need} exceeds "
+                f"max_cache = {self.ecfg.max_cache}")
+        if self.admission is not None and not 0 <= req.rclass < \
+                self.ecfg.num_classes:
+            raise ValueError(f"request {req.rid}: rclass {req.rclass} outside "
+                             f"[0, {self.ecfg.num_classes})")
+        self.queue.append(req)
+
+    # -- admission -----------------------------------------------------------
+    def _admit_into(self, req: Request, slot: int):
+        first, one = _prefill_one(self.params, self.cfg, req.prompts(),
+                                  self.ecfg.max_cache, self.router_bias)
+        if self._decoding_before_admit:
+            self.mid_stream_admissions += 1
+        self.pool, self.last, self.active = _splice(
+            self.pool, one, jnp.asarray(slot), self.last, self.active, first)
+        req.slot, req.admit_tick = slot, self.tick
+        req.out_tokens.append(int(first[0, 0]))
+        self.slots[slot] = req
+        self._admitted_this_tick += 1
+
+    def _admit(self):
+        self._admitted_this_tick = 0
+        # mid-stream means spliced in while another slot was actually decoding
+        # — slots filled earlier in this same admission pass don't count
+        self._decoding_before_admit = any(r is not None for r in self.slots)
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        if not free or not self.queue:
+            return
+        if self.admission is None:                      # FIFO baseline
+            while free and self.queue:
+                self._admit_into(self.queue.popleft(), free.pop(0))
+            return
+        adm = self.admission
+        # tolerance turned shedding: requests of anergic classes are rejected
+        # outright (not parked — a parked convoy would hold queue pressure high
+        # and block the IL-2 revival it is waiting for)
+        for req in [r for r in self.queue if not adm.admissible(r.rclass)]:
+            self.queue.remove(req)
+            self.shed.append(req)
+        if adm.throttled():                             # delayed suppression
+            return
+        # anticipation: order by *remembered* class cost, not queue position
+        cost = self._predicted_costs()
+        candidates = sorted(self.queue,
+                            key=lambda r: (cost[r.rclass], r.arrival, r.rid))
+        for req in candidates[:len(free)]:
+            self.queue.remove(req)
+            self._admit_into(req, free.pop(0))
+
+    def _predicted_costs(self) -> np.ndarray:
+        """Per-class cost estimate: the EMA memory, floored by what currently
+        running requests have already revealed (ticks held so far is a lower
+        bound on their class's true cost). Without the reveal, the cold-start
+        memory is all zeros and the first burst of heavies convoys the pool."""
+        cost = np.asarray(self.admission.memory.value, np.float64).copy()
+        for r in self.slots:
+            if r is not None:
+                cost[r.rclass] = max(cost[r.rclass], self.tick - r.admit_tick)
+        return cost
+
+    # -- retirement ----------------------------------------------------------
+    def _finished(self, req: Request) -> bool:
+        if len(req.out_tokens) >= req.max_new_tokens:
+            return True
+        return req.eos_id is not None and req.out_tokens and \
+            req.out_tokens[-1] == req.eos_id
+
+    def _retire(self):
+        for slot, req in enumerate(self.slots):
+            if req is None or not self._finished(req):
+                continue
+            req.finish_tick = self.tick
+            self.completed.append(req)
+            self.slots[slot] = None
+            self.pool, self.active = _release(self.pool, self.active,
+                                              jnp.asarray(slot))
+            if self.admission is not None:
+                # cost = slot-ticks consumed; feeds the anticipation memory
+                self.admission.observe_completion(
+                    req.rclass, cost=float(len(req.out_tokens)),
+                    latency=float(req.latency))
+
+    # -- one tick ------------------------------------------------------------
+    def step(self):
+        """One engine tick: admit into free slots, decode one token for every
+        occupied slot, retire finished sequences, advance the immune states."""
+        self._admit()
+        if any(r is not None for r in self.slots):
+            nxt, self.last, self.pool = _decode_tick(
+                self.params, self.cfg_decode, self.pool, self.last, self.active,
+                self.router_bias, self.frames)
+            nxt_host = np.asarray(nxt[:, 0])
+            for slot, req in enumerate(self.slots):
+                if req is not None and not self._finished(req):
+                    req.out_tokens.append(int(nxt_host[slot]))
+        self._retire()
+        if self.admission is not None:
+            demand = np.zeros(self.ecfg.num_classes, np.float64)
+            for r in self.queue:
+                demand[r.rclass] += 1.0
+            self.admission.end_tick(self._admitted_this_tick, len(self.queue),
+                                    demand, self._predicted_costs())
+        self.tick += 1
+
+    # -- driver --------------------------------------------------------------
+    def run(self, requests: list[Request], max_ticks: int = 10_000) -> dict:
+        """Open-loop drive: submit each request at its ``arrival`` tick, run
+        until everything completes (or ``max_ticks``); returns ``stats()``."""
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        i = 0
+        while True:
+            while i < len(pending) and pending[i].arrival <= self.tick:
+                self.submit(pending[i])
+                i += 1
+            drained = (i == len(pending) and not self.queue
+                       and all(r is None for r in self.slots))
+            if drained or self.tick >= max_ticks:
+                break
+            self.step()
+        # arrivals the max_ticks backstop never let in still count as demand —
+        # otherwise a policy that stalls into the backstop flatters its stats
+        self.unsubmitted = len(pending) - i
+        return self.stats()
+
+    def stats(self) -> dict:
+        lat = np.asarray([r.latency for r in self.completed], np.float64)
+        toks = int(sum(len(r.out_tokens) for r in self.completed))
+        in_budget = int((lat <= self.ecfg.latency_budget).sum()) if lat.size \
+            else 0
+        in_flight = sum(r is not None for r in self.slots)
+        # every request the trace produced, wherever it ended up — the goodput
+        # denominator, so a policy that stalls into the max_ticks backstop
+        # (requests still queued, in-flight, or never submitted) cannot
+        # flatter itself by under-counting demand
+        demand = (len(self.completed) + len(self.shed) + len(self.queue)
+                  + in_flight + self.unsubmitted)
+        # no completions -> the tail is unbounded, not "best ever"
+        empty = float("inf")
+        return {
+            "policy": self.ecfg.policy,
+            "ticks": self.tick,
+            "completed": len(self.completed),
+            "shed": len(self.shed),
+            "unserved": len(self.queue) + in_flight + self.unsubmitted,
+            "tokens": toks,
+            "throughput": toks / max(self.tick, 1),
+            "p50_latency": float(np.percentile(lat, 50)) if lat.size else empty,
+            "p99_latency": float(np.percentile(lat, 99)) if lat.size else empty,
+            "max_latency": float(lat.max()) if lat.size else empty,
+            # fraction of total demand served within the latency budget: shed
+            # requests count against goodput — rejection is not a free lunch
+            "goodput": in_budget / max(demand, 1),
+            "mid_stream_admissions": self.mid_stream_admissions,
+        }
+
+
+# ---------------------------------------------------------------------------
+# synthetic open-loop traffic
+# ---------------------------------------------------------------------------
+def synthetic_trace(cfg: ModelConfig, num_requests: int = 40, seed: int = 0,
+                    burst_every: int = 10, burst_size: int = 8,
+                    light_tokens: int = 5, heavy_tokens: int = 40,
+                    heavy_frac: float = 0.15,
+                    prompt_lens: tuple = (8, 16)) -> list[Request]:
+    """Bursty heterogeneous arrivals: mostly light requests plus a heavy class
+    whose decode length alone blows a chat-style latency budget. Classes:
+    0..len(prompt_lens)-1 are light (one per prompt-length bucket); the last
+    class is heavy. Prompt lengths come from a tiny bucket set so the engine
+    compiles a bounded number of prefill shapes."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    n_light_classes = len(prompt_lens)
+    for rid in range(num_requests):
+        burst = rid // burst_size
+        heavy = rng.random() < heavy_frac
+        plen = int(prompt_lens[rid % n_light_classes])
+        rclass = n_light_classes if heavy else rid % n_light_classes
+        steps = heavy_tokens if heavy else light_tokens + rid % 3
+        req = Request(
+            rid=rid,
+            tokens=rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
+            max_new_tokens=int(steps),
+            rclass=rclass,
+            arrival=burst * burst_every + int(rng.integers(0, 3)),
+        )
+        reqs.append(attach_modality_inputs(req, cfg, rng))
+    return reqs

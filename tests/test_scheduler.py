@@ -1,5 +1,8 @@
 """Immune straggler scheduler: beats static under heterogeneity, detects failures,
-revives recovered workers, and does not oscillate."""
+revives recovered workers, does not oscillate — plus fleet edge cases (all-dead,
+single-worker, mass revival) and the shard-fraction invariant as a property."""
+import hypothesis
+import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -72,3 +75,72 @@ class TestFailureAnergy:
             state = sch.observe(state, speeds)
         assert int(jnp.sum(state.anergic)) == 6
         np.testing.assert_allclose(float(jnp.sum(state.frac)), 1.0, rtol=1e-5)
+
+
+def _all_anergic(w: int = 4) -> sch.SchedulerState:
+    return sch.init_scheduler(w)._replace(
+        anergic=jnp.ones((w,), bool),
+        frac=jnp.zeros((w,), jnp.float32),
+        mem=jnp.zeros((w,), jnp.float32))
+
+
+class TestFleetEdgeCases:
+    def test_all_anergic_step_time_is_not_zero(self):
+        """A fully-dead fleet must not look infinitely fast: the max over an
+        empty set of live workers is inf, not 0.0."""
+        t = sch.step_time(_all_anergic(), jnp.ones((4,)))
+        assert float(t) == float("inf")
+
+    def test_all_anergic_simulate_diverges(self):
+        """simulate over a trace that starts all-dead accumulates inf time
+        rather than claiming instant steps."""
+        state = _all_anergic()
+        t = sch.step_time(state, jnp.asarray([2.0, 2.0, 2.0, 2.0]))
+        assert not bool(jnp.isfinite(t))
+        # one worker back alive -> finite again
+        state = state._replace(anergic=jnp.asarray([False, True, True, True]),
+                               frac=jnp.asarray([1.0, 0.0, 0.0, 0.0]))
+        assert bool(jnp.isfinite(sch.step_time(state, jnp.ones((4,)))))
+
+    def test_single_worker_fleet(self):
+        """W=1: the only worker keeps the whole share and is never anergized by
+        the relative-health test, even through a dead spell."""
+        state = sch.init_scheduler(1)
+        for thr in (1.0, 0.5, 0.0, 0.0, 0.0, 1.0):
+            state = sch.observe(state, jnp.asarray([thr]))
+            assert not bool(state.anergic[0])
+            np.testing.assert_allclose(float(state.frac[0]), 1.0, rtol=1e-6)
+        assert float(sch.step_time(state, jnp.asarray([2.0]))) > 0.0
+
+    def test_mass_simultaneous_revival(self):
+        """Every worker anergic, then the whole fleet heartbeats: all revive in
+        the same step and the shares return to a normalized distribution."""
+        state = _all_anergic(4)
+        cfg = sch.SchedulerConfig()
+        for _ in range(cfg.revival_steps):
+            state = sch.observe(state, jnp.ones((4,)))
+        assert not bool(jnp.any(state.anergic)), "mass revival failed"
+        frac = np.asarray(state.frac)
+        assert (frac > 0).all()
+        np.testing.assert_allclose(frac.sum(), 1.0, rtol=1e-5)
+        np.testing.assert_allclose(frac, 0.25, atol=1e-3)
+
+
+class TestSchedulerProperties:
+    @hypothesis.settings(deadline=None, max_examples=25)
+    @hypothesis.given(trace=st.lists(
+        st.lists(st.floats(0.0, 4.0), min_size=6, max_size=6),
+        min_size=1, max_size=40))
+    def test_frac_nonnegative_and_normalized_over_live(self, trace):
+        """For arbitrary throughput traces: frac >= 0 everywhere, anergic
+        workers hold exactly 0, and the live shares sum to 1 (whenever anyone
+        is live)."""
+        state = sch.init_scheduler(6)
+        for speeds in trace:
+            state = sch.observe(state, jnp.asarray(speeds, jnp.float32))
+            frac = np.asarray(state.frac)
+            live = ~np.asarray(state.anergic)
+            assert (frac >= 0.0).all(), frac
+            assert (frac[~live] == 0.0).all(), frac
+            if live.any():
+                np.testing.assert_allclose(frac[live].sum(), 1.0, atol=1e-4)

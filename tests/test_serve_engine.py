@@ -1,0 +1,213 @@
+"""Continuous-batching engine: decode-parity oracle + admission behavior.
+
+The correctness anchor is *token parity*: a request served by the engine —
+prefilled into an arbitrary slot mid-stream, decoded alongside unrelated
+sequences at other depths, retired, its slot compacted and reused — must emit
+exactly the tokens that one-shot ``serve.decode.generate`` produces for the
+same prompt and params. That pins slot insertion, per-slot positions (rope +
+causal masks), compaction, and cross-slot isolation in one observable.
+
+MoE runs at the *default* capacity factor on purpose: the engine's decode tick
+bumps capacity to be dropless (a garbage lane from an empty slot must never
+displace a real request's token at an expert's capacity limit), and prefill
+is a batch-of-1 call identical to the oracle's — so parity must hold with no
+capacity pinning at all.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model
+from repro.serve import decode
+from repro.serve import engine as eng_mod
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _smoke_cfg(arch):
+    return configs.get_config(arch).smoke()
+
+
+def _params(cfg):
+    return model.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _bias(cfg):
+    return (jnp.zeros((cfg.num_layers, cfg.num_experts))
+            if cfg.num_experts else None)
+
+
+def _make_requests(cfg, n, seed=0, prompt_lens=(6, 10), steps=(5, 8),
+                   stagger=1):
+    """Staggered heterogeneous requests; two prompt-length buckets bound the
+    number of prefill shapes the engine compiles."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n):
+        plen = prompt_lens[rid % len(prompt_lens)]
+        req = eng_mod.Request(
+            rid=rid,
+            tokens=rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
+            max_new_tokens=steps[rid % len(steps)],
+            rclass=rid % 2,
+            arrival=rid * stagger)
+        reqs.append(eng_mod.attach_modality_inputs(req, cfg, rng))
+    return reqs
+
+
+def _oracle_tokens(params, cfg, req, max_cache, bias):
+    # req.prompts() is exactly what the engine prefills — same arrays, no copy
+    toks, _ = decode.generate(params, cfg, req.prompts(), max_cache=max_cache,
+                              steps=req.max_new_tokens, router_bias=bias)
+    return [int(t) for t in np.asarray(toks[0])]
+
+
+class TestDecodeParity:
+    """Engine output == one-shot generate, token for token, per family."""
+
+    def test_dense_staggered_trace_token_identical(self):
+        """The acceptance trace: >= 8 staggered requests through 3 slots, so
+        slots are reused and every admission is mid-stream."""
+        cfg = _smoke_cfg("smollm-360m")
+        params = _params(cfg)
+        ecfg = eng_mod.EngineConfig(num_slots=3, max_cache=48, policy="immune",
+                                    num_classes=2, latency_budget=64.0)
+        reqs = _make_requests(cfg, 9)
+        eng = eng_mod.Engine(params, cfg, ecfg)
+        stats = eng.run(reqs, max_ticks=500)
+        assert stats["completed"] == 9 and stats["shed"] == 0
+        # admissions actually interleaved with other slots' decodes
+        assert stats["mid_stream_admissions"] >= 6
+        # slots were reused (9 requests > 3 slots) and compacted afterwards
+        assert all(r is None for r in eng.slots)
+        assert not bool(eng.active.any())
+        assert np.asarray(eng.pool["pos"]).tolist() == [0, 0, 0]
+        for req in eng.completed:
+            oracle = _oracle_tokens(params, cfg, req, ecfg.max_cache, None)
+            assert req.out_tokens == oracle, f"request {req.rid} diverged"
+
+    @pytest.mark.parametrize("arch", ["granite-moe-3b-a800m", "paligemma-3b",
+                                      "musicgen-medium"])
+    def test_moe_vlm_audio_token_identical(self, arch):
+        cfg = _smoke_cfg(arch)
+        params = _params(cfg)
+        bias = _bias(cfg)
+        ecfg = eng_mod.EngineConfig(num_slots=2, max_cache=48, policy="fifo")
+        reqs = _make_requests(cfg, 4, seed=1, steps=(4, 6))
+        eng = eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
+        stats = eng.run(reqs, max_ticks=300)
+        assert stats["completed"] == 4
+        assert stats["mid_stream_admissions"] >= 1
+        for req in eng.completed:
+            oracle = _oracle_tokens(params, cfg, req, ecfg.max_cache, bias)
+            assert req.out_tokens == oracle, f"{arch} request {req.rid} diverged"
+
+
+class TestEngineMechanics:
+    @pytest.fixture(scope="class")
+    def dense(self):
+        cfg = _smoke_cfg("smollm-360m")
+        return cfg, _params(cfg)
+
+    def test_eos_early_stop(self, dense):
+        cfg, params = dense
+        ecfg = eng_mod.EngineConfig(num_slots=2, max_cache=48, policy="fifo")
+        [probe] = _make_requests(cfg, 1, steps=(6,))
+        eng = eng_mod.Engine(params, cfg, ecfg)
+        eng.run([probe], max_ticks=50)
+        assert len(probe.out_tokens) == 6
+        # rerun with eos = the 3rd emitted token: output must stop right there
+        [again] = _make_requests(cfg, 1, steps=(6,))
+        again.eos_id = probe.out_tokens[2]
+        eng2 = eng_mod.Engine(params, cfg, ecfg)
+        eng2.run([again], max_ticks=50)
+        assert again.out_tokens == probe.out_tokens[:3]
+
+    def test_single_token_request_retires_at_admission_tick(self, dense):
+        cfg, params = dense
+        ecfg = eng_mod.EngineConfig(num_slots=2, max_cache=48, policy="fifo")
+        [req] = _make_requests(cfg, 1, steps=(1,))
+        eng = eng_mod.Engine(params, cfg, ecfg)
+        stats = eng.run([req], max_ticks=20)
+        assert stats["completed"] == 1
+        assert len(req.out_tokens) == 1
+        assert req.finish_tick == req.admit_tick
+
+    def test_submit_rejects_oversized_request(self, dense):
+        cfg, params = dense
+        ecfg = eng_mod.EngineConfig(num_slots=2, max_cache=16)
+        eng = eng_mod.Engine(params, cfg, ecfg)
+        [req] = _make_requests(cfg, 1, prompt_lens=(12,), steps=(8,))
+        with pytest.raises(ValueError, match="max_cache"):
+            eng.submit(req)
+
+
+class TestImmuneAdmission:
+    """Unit-level behavior of the admission controller (no model involved)."""
+
+    def _ecfg(self, **kw):
+        base = dict(num_slots=4, max_cache=64, policy="immune", num_classes=3,
+                    latency_budget=10.0)
+        base.update(kw)
+        return eng_mod.EngineConfig(**base)
+
+    def test_burst_throttles_then_recovers(self):
+        adm = eng_mod.ImmuneAdmission(self._ecfg())
+        none = np.zeros(3)
+        assert not adm.throttled()            # fast path: bursts admit freely
+        for _ in range(4):                    # sustained full-pool admission
+            adm.end_tick(admitted=4, queue_len=10, queued_demand=none,
+                         predicted_cost=none)
+        assert adm.throttled(), "delayed suppression never engaged"
+        for _ in range(60):                   # quiet: suppressor drains response
+            adm.end_tick(admitted=0, queue_len=0, queued_demand=none,
+                         predicted_cost=none)
+        assert not adm.throttled(), "throttle never released"
+
+    def test_blown_budget_sheds_then_pressure_drop_revives(self):
+        adm = eng_mod.ImmuneAdmission(self._ecfg())
+        demand = np.asarray([1.0, 0.0, 1.0])
+        cost = np.asarray([2.0, 2.0, 50.0])   # class 2 cannot meet the budget
+        for _ in range(6):                    # high pressure: no IL-2
+            adm.observe_completion(0, cost=2.0, latency=3.0)
+            adm.end_tick(admitted=1, queue_len=20, queued_demand=demand,
+                         predicted_cost=cost)
+        assert not adm.admissible(2), "abusive class never shed"
+        assert adm.admissible(0) and adm.admissible(1), \
+            "healthy classes shed alongside the abusive one"
+        for _ in range(20):                   # pressure drops: IL-2 revives
+            adm.end_tick(admitted=0, queue_len=0, queued_demand=np.zeros(3),
+                         predicted_cost=cost)
+        assert adm.admissible(2), "anergy is supposed to be reversible"
+
+    def test_memory_tracks_per_class_cost(self):
+        adm = eng_mod.ImmuneAdmission(self._ecfg())
+        for _ in range(30):
+            adm.observe_completion(0, cost=4.0, latency=5.0)
+            adm.observe_completion(1, cost=40.0, latency=45.0)
+        assert abs(adm.remembered_cost(0) - 4.0) < 0.5
+        assert abs(adm.remembered_cost(1) - 40.0) < 5.0
+        assert adm.remembered_cost(2) == 0.0  # untouched class unchanged
+
+
+class TestImmuneVsFifo:
+    def test_immune_tail_no_worse_than_fifo_under_bursts(self):
+        """The benchmark's acceptance property, in-suite: bursty heterogeneous
+        traffic, identical trace, immune p99 <= FIFO p99 (and goodput at least
+        as high) — the anticipation + shedding loop protecting the tail."""
+        cfg = _smoke_cfg("smollm-360m")
+        params = _params(cfg)
+        stats = {}
+        for policy in ("fifo", "immune"):
+            ecfg = eng_mod.EngineConfig(num_slots=4, max_cache=64,
+                                        policy=policy, num_classes=3,
+                                        latency_budget=24.0)
+            trace = eng_mod.synthetic_trace(cfg, num_requests=24, seed=0)
+            eng = eng_mod.Engine(params, cfg, ecfg)
+            stats[policy] = eng.run(trace, max_ticks=1200)
+        assert stats["fifo"]["completed"] == 24
+        imm, fifo = stats["immune"], stats["fifo"]
+        assert imm["p99_latency"] <= fifo["p99_latency"], (imm, fifo)
+        assert imm["goodput"] >= fifo["goodput"], (imm, fifo)

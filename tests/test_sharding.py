@@ -38,6 +38,24 @@ class TestGuard:
         # a tuple whose product doesn't divide the dim is dropped whole
         assert shd._guard((("pod", "data"), None), (6, 3), axes) == P(None, None)
 
+    def test_guard_is_the_constrain_policy(self):
+        """dist/sharding and models/layers apply literally the same guard
+        (layers.guard_entry) — this pins the shared helper so the two layout
+        policies cannot drift apart again."""
+        from repro.models import layers
+        assert shd._guard is not layers.guard_entry      # wrapper, same policy
+        axes = {"data": 4, "model": 8}
+        for spec, dim in [("model", 16), ("model", 12), ("ghost", 16),
+                          (("pod", "data"), 8), (("pod", "data"), 6),
+                          (None, 7)]:
+            assert shd._guard((spec,), (dim,), axes) == \
+                P(layers.guard_entry(spec, dim, axes))
+        # unknown axis sizes (recorded as 0 by set_mesh_axes without sizes)
+        # skip the divisibility check instead of dropping everything
+        assert layers.guard_entry("model", 12, {"model": 0}) == "model"
+        # list specs filter like tuple specs (constrain's extra input shape)
+        assert layers.guard_entry(["pod", "data"], 8, axes) == ("data",)
+
 
 class TestParamLayout:
     def test_dense_policy(self):
