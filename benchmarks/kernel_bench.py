@@ -8,9 +8,12 @@ import time
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.grid_step import grid_step, grid_step_ref
 from repro.kernels.moe_gmm import gmm_ref, moe_gmm
+from repro.kernels.paged_attention import paged_attention, paged_attention_ref
 
 
 def _time(fn, *args, reps=3):
@@ -42,6 +45,27 @@ def run():
     rows.append(("moe_gmm_interp", _time(
         lambda *a: moe_gmm(*a, interpret=True), x, w, sizes), f"e{e}c{c}d{dd}f{f}"))
     rows.append(("moe_gmm_ref", _time(gmm_ref, x, w, sizes), f"e{e}c{c}d{dd}f{f}"))
+
+    # paged decode attention: 16 slots x 4 pages of 128 tokens, GQA 4:1
+    b_, h_, hk_, d_, page, maxp = 16, 8, 2, 64, 128, 4
+    num_pages = b_ * maxp + 1
+    qd = jax.random.normal(key, (b_, h_, d_))
+    kp = jax.random.normal(jax.random.fold_in(key, 3), (num_pages, page, hk_, d_))
+    vp = jax.random.normal(jax.random.fold_in(key, 4), (num_pages, page, hk_, d_))
+    rng = np.random.default_rng(0)
+    lens = rng.integers(1, maxp * page + 1, size=b_)
+    free = list(range(1, num_pages))
+    tbl = np.zeros((b_, maxp), np.int32)
+    for i in range(b_):
+        for j in range(-(-int(lens[i]) // page)):
+            tbl[i, j] = free.pop()
+    tbl, lens = jnp.asarray(tbl), jnp.asarray(lens, jnp.int32)
+    rows.append(("paged_attention_interp", _time(
+        lambda *a: paged_attention(*a, interpret=True), qd, kp, vp, tbl, lens),
+        f"b{b_}h{h_}page{page}maxp{maxp}"))
+    rows.append(("paged_attention_ref", _time(
+        paged_attention_ref, qd, kp, vp, tbl, lens),
+        f"b{b_}h{h_}page{page}maxp{maxp}"))
 
     lab = jax.random.randint(key, (80, 128), 0, 99, jnp.int32)
     cond = (jax.random.uniform(key, (80, 128)) < 0.5).astype(jnp.int32)

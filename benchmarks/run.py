@@ -59,9 +59,13 @@ def main() -> None:
 
     from benchmarks import serve_engine
     res, us = _timed(serve_engine.run, num_requests=24, seeds=(0,))
-    by = {r[1]: r for r in res}
-    rows.append(("serve_engine_admission", us,
-                 f"immune_p99={by['immune'][4]:.0f};fifo_p99={by['fifo'][4]:.0f}"))
+    s = res["summary"]
+    rows.append(("serve_engine_paged_kv", us,
+                 f"paged_p99={s['paged_immune_p99']:.0f};"
+                 f"fixed_p99={s['fixed_immune_p99']:.0f};"
+                 f"concurrency={s['paged_concurrency_hw']:.0f}v"
+                 f"{s['fixed_concurrency_hw']:.0f};"
+                 f"checks={'PASS' if all(s['checks'].values()) else 'FAIL'}"))
 
     from benchmarks import kernel_bench
     kres, us = _timed(kernel_bench.run)

@@ -4,8 +4,9 @@ per-family decode state (attention KV / SSM state / RG-LRU ring buffers).
     PYTHONPATH=src python examples/serve_batch.py [--arch mamba2-130m]
 
 ``--engine`` demos continuous batching instead: staggered requests are admitted
-mid-stream into a fixed slot pool (prefill-into-slot while other slots keep
-decoding), finished sequences retire and their slots are compacted for reuse.
+mid-stream into a paged slot pool (prompts land chunk-by-chunk in block-table
+pages while other slots keep decoding), finished sequences retire and their
+pages return to the free list for reuse.
 
     PYTHONPATH=src python examples/serve_batch.py --engine [--arch qwen3-4b]
 """
@@ -74,8 +75,11 @@ def _engine_demo(params, cfg, args):
 
     bias = (jnp.zeros((cfg.num_layers, cfg.num_experts))
             if cfg.num_experts else None)
-    ecfg = eng_mod.EngineConfig(num_slots=min(args.batch, 4),
-                                max_cache=args.prompt_len + args.steps + 16)
+    # max_cache rounds up to the page grain (16-token pages, chunked prefill)
+    ecfg = eng_mod.EngineConfig(
+        num_slots=min(args.batch, 4),
+        max_cache=-(-(args.prompt_len + args.steps + 16) // 16) * 16,
+        prefill_chunk=16)
     rng = np.random.default_rng(0)
     reqs = []
     for rid in range(2 * ecfg.num_slots + 2):      # forces slot reuse
@@ -94,7 +98,9 @@ def _engine_demo(params, cfg, args):
     print(f"{args.arch} ({cfg.family}) continuous batching: "
           f"{stats['completed']} requests over {ecfg.num_slots} slots in "
           f"{stats['ticks']} ticks ({dt:.1f}s incl. compile); "
-          f"{stats['mid_stream_admissions']} admitted mid-stream")
+          f"{stats['mid_stream_admissions']} admitted mid-stream, "
+          f"{stats['chunked_prefill_chunks']} prefill chunks, pages high-water "
+          f"{stats['pages_hw']}/{stats['pages_budget']}")
     for r in sorted(eng.completed, key=lambda r: r.rid):
         print(f"  req {r.rid}: slot {r.slot}, ticks {r.admit_tick}"
               f"-{r.finish_tick}: {r.out_tokens[:12]}"

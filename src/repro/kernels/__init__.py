@@ -1,4 +1,4 @@
 """Pallas TPU kernels (validated interpret=True on CPU): each subpackage carries
 kernel.py (pl.pallas_call + BlockSpec tiling), ops.py (jit'd wrapper), ref.py
 (pure-jnp oracle)."""
-from . import flash_attention, grid_step, moe_gmm  # noqa: F401
+from . import flash_attention, grid_step, moe_gmm, paged_attention  # noqa: F401

@@ -1,0 +1,3 @@
+from .ops import paged_attention, paged_attention_ref
+
+__all__ = ["paged_attention", "paged_attention_ref"]

@@ -1,0 +1,23 @@
+"""jit'd public wrapper: picks the Pallas kernel on TPU, interpret mode elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import paged_attention as _kernel_call
+from .ref import paged_attention_ref
+
+
+def paged_attention(q, k_pages, v_pages, table, lengths, *,
+                    interpret: bool | None = None):
+    """q: (B, H, D); k_pages, v_pages: (P, page, Hkv, D); table: (B, maxp) i32;
+    lengths: (B,) i32. interpret=None -> auto (True off-TPU)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, d = q.shape
+    hk = k_pages.shape[2]
+    out = _kernel_call(q.reshape(b, hk, h // hk, d), k_pages, v_pages,
+                       table, lengths, interpret=interpret)
+    return out.reshape(b, h, d)
+
+
+__all__ = ["paged_attention", "paged_attention_ref"]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the paged-decode attention kernel: dense gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, table, lengths):
+    """q: (B, H, D); k_pages, v_pages: (P, page, Hkv, D); table: (B, maxp) i32;
+    lengths: (B,) i32 -> (B, H, D), fp32 math.
+
+    Gathers each sequence's pages into the dense (maxp*page, Hkv, D) logical
+    layout, then runs masked single-query attention — the same contract the
+    XLA fallback in ``models.layers.attention_decode_paged`` implements."""
+    b, h, d = q.shape
+    page = k_pages.shape[1]
+    maxp = table.shape[1]
+    hk = k_pages.shape[2]
+    g = h // hk
+
+    k = k_pages[table].reshape(b, maxp * page, hk, d).astype(jnp.float32)
+    v = v_pages[table].reshape(b, maxp * page, hk, d).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(b, hk, g, d)
+
+    scores = jnp.einsum("bkgd,btkd->bkgt", qf, k) / (d ** 0.5)
+    kpos = jnp.arange(maxp * page)[None, None, None, :]
+    scores = jnp.where(kpos < lengths[:, None, None, None], scores, -1e30)
+    probs = jnp.exp(scores - scores.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v)
+    return out.reshape(b, h, d).astype(q.dtype)

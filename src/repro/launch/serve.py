@@ -43,6 +43,13 @@ def main():
     ap.add_argument("--requests", type=int, default=40)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--latency-budget", type=float, default=24.0)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged-KV page size (tokens per physical page)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="page-pool size incl. the null page; default fully "
+                         "provisioned (slots x max_cache worth)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="chunked prefill size; 0 = one-shot prefill")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -66,12 +73,18 @@ def main():
         print(f"restored step {step} from {args.restore}")
 
     if args.stream:
+        import math
+
         from repro.serve import engine as eng_mod
+        lcm = math.lcm(args.page_size, args.prefill_chunk or 1)
+        raw = args.prompt_len + args.steps + 48
         ecfg = eng_mod.EngineConfig(
             num_slots=args.slots,
-            max_cache=args.prompt_len + args.steps + 48,
+            max_cache=-(-raw // lcm) * lcm,     # round up to page/chunk grain
             policy=args.policy, num_classes=3,
-            latency_budget=args.latency_budget)
+            latency_budget=args.latency_budget,
+            page_size=args.page_size, num_pages=args.pages,
+            prefill_chunk=args.prefill_chunk)
         trace = eng_mod.synthetic_trace(cfg, num_requests=args.requests,
                                         heavy_tokens=args.steps + 8)
         eng = eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
@@ -80,12 +93,17 @@ def main():
             stats = eng.run(trace, max_ticks=50 * args.requests)
         dt = time.perf_counter() - t0
         print(f"[{args.policy}] {stats['completed']} completed / "
-              f"{stats['shed']} shed of {args.requests} requests in "
+              f"{stats['shed']} shed / {stats['rejected']} rejected of "
+              f"{args.requests} requests in "
               f"{stats['ticks']} ticks ({dt:.1f}s wall incl. compile)")
         print(f"  throughput {stats['throughput']:.2f} tok/tick | "
               f"p50 {stats['p50_latency']:.0f} / p99 {stats['p99_latency']:.0f} "
               f"ticks | goodput {stats['goodput']:.2f} | "
               f"{stats['mid_stream_admissions']} mid-stream admissions")
+        print(f"  paged KV: {stats['pages_hw']}/{stats['pages_budget']} pages "
+              f"high-water x {stats['page_size']} tokens | up to "
+              f"{stats['concurrency_hw']} concurrent | "
+              f"{stats['chunked_prefill_chunks']} prefill chunks landed")
         for r in eng.completed[:4]:
             print(f"  req {r.rid} (class {r.rclass}): arrived {r.arrival}, "
                   f"admitted {r.admit_tick}, finished {r.finish_tick}: "

@@ -366,6 +366,81 @@ def init_attention_cache(cfg: ModelConfig, batch: int, s_max: int, dtype) -> dic
 
 
 # ---------------------------------------------------------------------------
+# paged attention (block-table KV cache — the serving engine's memory plane)
+# ---------------------------------------------------------------------------
+def init_attention_cache_paged(cfg: ModelConfig, num_pages: int, page_size: int,
+                               dtype) -> dict:
+    """Physical page pool for one attention layer: K/V as (P, page, Hkv, D).
+    Page 0 is the null/trash page (see ``serve.paging``)."""
+    hk, hd = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((num_pages, page_size, hk, hd), dtype),
+            "v": jnp.zeros((num_pages, page_size, hk, hd), dtype)}
+
+
+def _gather_pages(pages: Array, table: Array) -> Array:
+    """pages: (P, page, Hkv, D); table: (..., maxp) -> (..., maxp*page, Hkv, D).
+
+    The gathered sequence is the slot's cache in logical order, padded by null
+    pages to exactly maxp*page positions — when maxp*page == max_cache this is
+    the same K/V tensor (values *and* shape) the dense slot-row layout holds,
+    so the masked softmax downstream is bitwise identical to the unpaged path.
+    """
+    g = pages[table]                                   # (..., maxp, page, Hk, D)
+    return g.reshape(*table.shape[:-1], -1, *pages.shape[2:])
+
+
+def attention_decode_paged(params, x: Array, cfg: ModelConfig, cache: dict,
+                           pos: Array, table: Array, active: Array):
+    """One-token decode against a paged KV cache.
+
+    cache: {'k','v': (P, page, Hkv, D)} physical page pools; ``pos`` (B,) is each
+    slot's cache position; ``table`` (B, maxp) the block table; ``active`` (B,)
+    routes the writes of inactive slots to the null page so a garbage lane can
+    never dirty a page a mid-prefill slot already owns.
+    """
+    b = x.shape[0]
+    pos = jnp.asarray(pos)
+    q, k, v = _qkv(params, x, cfg, pos[:, None])
+    page = cache["k"].shape[1]
+    rows = jnp.arange(b)
+    pidx = jnp.where(active, table[rows, pos // page], 0)
+    off = pos % page
+    ck = cache["k"].at[pidx, off].set(k[:, 0])
+    cv = cache["v"].at[pidx, off].set(v[:, 0])
+    gk = _gather_pages(ck, table)                      # (B, maxp*page, Hk, D)
+    gv = _gather_pages(cv, table)
+    kpos = jnp.arange(gk.shape[1])[None, :]
+    mask = kpos <= pos[:, None]                        # (B, S)
+    out = _sdpa(q, gk, gv, mask[:, None, :], cfg)
+    return out @ params["wo"], {"k": ck, "v": cv}
+
+
+def attention_prefill_paged(params, x: Array, cfg: ModelConfig, cache: dict,
+                            table_row: Array, p0: Array):
+    """One prefill *chunk* (batch-of-1) written straight into the slot's pages.
+
+    x: (1, C, D) — the chunk's embeddings; ``table_row`` (maxp,) the slot's
+    block table row; ``p0`` the chunk's first absolute position. Queries attend
+    over the gathered pages (fixed maxp*page == max_cache length), so every
+    chunk call compiles one shape regardless of prompt length — and, because
+    padded/garbage positions are masked to exact zeros, the result is bitwise
+    identical to the one-shot full-sequence prefill.
+    """
+    _, c, _ = x.shape
+    lpos = p0 + jnp.arange(c)                          # absolute positions
+    q, k, v = _qkv(params, x, cfg, lpos[None, :])
+    page = cache["k"].shape[1]
+    ck = cache["k"].at[table_row[lpos // page], lpos % page].set(k[0])
+    cv = cache["v"].at[table_row[lpos // page], lpos % page].set(v[0])
+    gk = _gather_pages(ck, table_row)[None]            # (1, maxp*page, Hk, D)
+    gv = _gather_pages(cv, table_row)[None]
+    kpos = jnp.arange(gk.shape[1])[None, :]
+    mask = (kpos <= lpos[:, None])[None]               # (1, C, S)
+    out = _sdpa(q, gk, gv, mask, cfg)
+    return out @ params["wo"], {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
 # gated MLP (SwiGLU / GeGLU)
 # ---------------------------------------------------------------------------
 def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:

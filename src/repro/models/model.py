@@ -122,47 +122,113 @@ def prefill(params, cfg: ModelConfig, batch: dict, cache: dict,
 
 
 def decode_step(params, cfg: ModelConfig, batch: dict, cache: dict,
-                router_bias: Optional[Array] = None):
-    """One-token step for every sequence in the batch. Returns (logits, new_cache)."""
+                router_bias: Optional[Array] = None,
+                table: Optional[Array] = None,
+                active: Optional[Array] = None):
+    """One-token step for every sequence in the batch. Returns (logits, new_cache).
+
+    ``table`` (B, maxp) switches full-attention layers onto the paged KV pool.
+    ``active`` (B,) additionally freezes the *slot-row* caches (recurrent
+    state, ring buffers) of inactive slots: a garbage lane must never advance
+    state a chunked prefill is threading through that row between ticks. The
+    paged leaves don't need the freeze — inactive writes are routed to the
+    null page inside ``attention_decode_paged``."""
     x = _embed(params, cfg, batch["token"])
     if cfg.family == "audio":
         x = x + frontends.project_frontend(params["frontend"], batch["frame"])
     x, layer_caches = transformer.apply_stack_decode(
-        params["stack"], x, cfg, cache["layers"], cache["pos"], bias=router_bias)
+        params["stack"], x, cfg, cache["layers"], cache["pos"], bias=router_bias,
+        table=table, active=active)
+    if active is not None:
+        def freeze(kind, new, old):
+            if kind in ("attn", "moe"):
+                return new
+            return jax.tree.map(
+                lambda n, o: jnp.where(
+                    active.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o),
+                new, old)
+        layer_caches = transformer.map_block_caches(cfg, freeze, layer_caches,
+                                                    cache["layers"])
     logits = _head(params, cfg, x)
     return logits, {"layers": layer_caches, "pos": cache["pos"] + 1}
 
 
 # ---------------------------------------------------------------------------
-# slot-pool cache surgery (continuous-batching serving engine)
+# paged slot-pool surgery (block-table KV cache, continuous-batching engine)
 # ---------------------------------------------------------------------------
-def init_slot_cache(cfg: ModelConfig, num_slots: int, s_max: int) -> dict:
-    """Pooled decode cache for the serving engine: like ``init_cache`` but with a
-    per-slot (num_slots,) position vector, so slots can sit at different depths
-    of their own sequences while sharing one compiled decode step."""
-    cache = init_cache(cfg, num_slots, s_max)
-    return {"layers": cache["layers"],
+def init_slot_cache_paged(cfg: ModelConfig, num_slots: int, s_max: int,
+                          num_pages: int, page_size: int) -> dict:
+    """Paged pooled decode cache: full-attention K/V live in per-layer physical
+    page pools (num_pages, page_size, Hkv, D) indexed by a host-side block
+    table; recurrent/ring leaves stay slot-indexed. ``pos`` is per-slot — like
+    ``init_cache`` but a (num_slots,) vector, so slots can sit at different
+    depths of their own sequences while sharing one compiled decode step. (The
+    pre-paging fixed-row layout is the degenerate page_size == s_max config.)"""
+    return {"layers": transformer.init_stack_cache_paged(
+                cfg, num_slots, s_max, num_pages, page_size, dtype_of(cfg)),
             "pos": jnp.zeros((num_slots,), jnp.int32)}
 
 
-def insert_slot_cache(pool: dict, one: dict, slot: Array) -> dict:
-    """Splice a freshly prefilled batch-of-1 cache into ``slot`` of a pooled
-    cache (prefill-into-slot). Layer-cache leaves are stacked (depth, batch, ...)
-    so the batch axis is axis 1; the whole slot row is overwritten, which also
-    erases any stale state from the slot's previous occupant."""
-    layer_caches = jax.tree.map(
-        lambda full, o: jax.lax.dynamic_update_slice_in_dim(
-            full, o.astype(full.dtype), slot, axis=1),
-        pool["layers"], one["layers"])
+def insert_slot_cache_paged(pool: dict, one: dict, cfg: ModelConfig,
+                            slot: Array, table_row: Array) -> dict:
+    """Splice a one-shot prefilled batch-of-1 dense cache into the paged pool.
+
+    Full-attention leaves: the dense (1, s_max, ...) row is reshaped to
+    (maxp, page, ...) and scattered to the slot's physical pages; rows beyond
+    the slot's allocation land on the null page (table entries there point at
+    it), which is by construction write-don't-care. Other leaves are whole-row
+    copies at the slot's batch index, erasing any stale state from the slot's
+    previous occupant."""
+    def splice(kind, full_d, one_d):
+        if kind in ("attn", "moe"):
+            def pagewise(full, o):
+                reps, page = full.shape[0], full.shape[2]
+                chunks = o.astype(full.dtype).reshape(
+                    reps, -1, page, *full.shape[3:])
+                return full.at[:, table_row].set(chunks)
+            return jax.tree.map(pagewise, full_d, one_d)
+        return jax.tree.map(
+            lambda full, o: jax.lax.dynamic_update_slice_in_dim(
+                full, o.astype(full.dtype), slot, axis=1), full_d, one_d)
+
+    layer_caches = transformer.map_block_caches(cfg, splice, pool["layers"],
+                                                one["layers"])
     return {"layers": layer_caches,
             "pos": pool["pos"].at[slot].set(one["pos"].astype(pool["pos"].dtype))}
 
 
-def reset_slot_cache(pool: dict, slot: Array) -> dict:
-    """Retire a slot: zero its cache row and position (compaction for reuse)."""
-    layer_caches = jax.tree.map(lambda full: full.at[:, slot].set(0),
-                                pool["layers"])
+def release_slot_cache_paged(pool: dict, cfg: ModelConfig, slot: Array) -> dict:
+    """Retire a slot in the paged pool: zero the slot-row (recurrent/ring)
+    leaves and the position; physical pages are NOT zeroed — they just return
+    to the host free list, and stale contents are only ever read masked."""
+    def wipe(kind, full_d):
+        if kind in ("attn", "moe"):
+            return full_d
+        return jax.tree.map(lambda full: full.at[:, slot].set(0), full_d)
+
+    layer_caches = transformer.map_block_caches(cfg, wipe, pool["layers"])
     return {"layers": layer_caches, "pos": pool["pos"].at[slot].set(0)}
+
+
+def prefill_chunk(params, cfg: ModelConfig, batch: dict, pool: dict,
+                  table_row: Array, p0: Array, last_idx: Array, slot: Array,
+                  router_bias: Optional[Array] = None):
+    """One chunk of a chunked prefill, written straight into the paged pool.
+
+    ``batch`` holds the chunk's tokens (1, C) (+ frames for audio); ``p0`` is
+    the chunk's first absolute position and ``last_idx`` the in-chunk index of
+    the prompt's final token (only meaningful on the last chunk — the logits
+    returned there seed decoding). The pool's ``pos`` is left untouched; the
+    engine activates the slot when the final chunk lands."""
+    x = _embed(params, cfg, batch["tokens"])
+    if cfg.family == "audio":
+        x = x + frontends.project_frontend(params["frontend"], batch["frames"])
+    x, layer_caches = transformer.apply_stack_prefill_chunk(
+        params["stack"], x, cfg, pool["layers"], table_row, p0, slot,
+        bias=router_bias)
+    logits = _head(params, cfg,
+                   jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1))
+    return logits, {"layers": layer_caches, "pos": pool["pos"]}
 
 
 def param_count(params) -> int:

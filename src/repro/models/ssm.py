@@ -79,9 +79,16 @@ def _segsum_decay(a: Array) -> Array:
 
 
 def ssd_chunked(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
-                chunk: int, return_state: bool = False):
+                chunk: int, return_state: bool = False,
+                init_state: Array | None = None):
     """x: (B,S,H,P); dt: (B,S,H); a_log: (H,); b, c: (B,S,N). Returns (B,S,H,P)
-    (and the final recurrence state (B,H,N,P) when ``return_state``)."""
+    (and the final recurrence state (B,H,N,P) when ``return_state``).
+
+    ``init_state`` resumes the inter-chunk recurrence mid-sequence (chunked
+    prefill). The scan body is a single elementwise multiply-add per chunk, so
+    splitting a sequence across calls at chunk boundaries reproduces the
+    one-shot op order exactly — resumed prefill is bitwise-identical as long as
+    every piece is a multiple of ``chunk``."""
     bsz, s, h, p = x.shape
     n = b.shape[-1]
     l = min(chunk, s)
@@ -114,7 +121,8 @@ def ssd_chunked(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
         new = carry * dk[..., None, None] + st
         return new, carry                               # emit state *entering* the chunk
 
-    init = jnp.zeros((bsz, h, n, p), x.dtype)
+    init = (jnp.zeros((bsz, h, n, p), x.dtype) if init_state is None
+            else init_state.astype(x.dtype))
     final_state, entering = jax.lax.scan(step, init,
                                          (jnp.moveaxis(states, 1, 0),
                                           jnp.moveaxis(chunk_decay, 1, 0)))
@@ -170,6 +178,44 @@ def ssm_block_prefill(params, x: Array, cfg: ModelConfig, cache: dict):
     conv_tail = xbc[:, -k:] if xbc.shape[1] >= k else jnp.pad(
         xbc, ((0, 0), (k - xbc.shape[1], 0), (0, 0)))
     return y @ params["out_proj"], {"conv": conv_tail, "state": state}
+
+
+def _conv_resume(params, xbc: Array, tail: Array) -> Array:
+    """Causal depthwise conv resumed mid-sequence: ``tail`` is the previous
+    chunk's last ``ssm_conv - 1`` *pre-conv* projections. Same multiply-add
+    order as ``_conv_train`` (whose zero left-padding this generalizes), so a
+    chunk with a zero tail is bitwise-identical to the sequence start."""
+    w = params["conv_w"]
+    k, s = w.shape[0], xbc.shape[1]
+    ext = jnp.concatenate([tail, xbc], axis=1)         # (B, k-1+S, C)
+    out = xbc * w[-1]
+    for i in range(1, k):
+        out = out + ext[:, k - 1 - i:k - 1 - i + s] * w[-1 - i]
+    return jax.nn.silu(out + params["conv_b"].astype(out.dtype))
+
+
+def ssm_block_prefill_chunk(params, x: Array, cfg: ModelConfig, cache: dict):
+    """Chunk-resume prefill: consumes the incoming cache (conv tail + recurrence
+    state) and threads it to the next chunk. Bitwise-identical to one-shot
+    ``ssm_block_prefill`` when the prompt and every chunk are multiples of
+    ``cfg.ssm_chunk`` (the serving engine enforces this before chunking)."""
+    d_inner, h, n, p = dims(cfg)
+    z, xbc, dt = _split(params, x, cfg)
+    xbc_c = _conv_resume(params, xbc, cache["conv"])
+    xs = xbc_c[..., :d_inner].reshape(*x.shape[:2], h, p)
+    b = xbc_c[..., d_inner:d_inner + n]
+    c = xbc_c[..., d_inner + n:]
+    y, state = ssd_chunked(xs.astype(jnp.float32), dt, params["A_log"],
+                           b.astype(jnp.float32), c.astype(jnp.float32),
+                           cfg.ssm_chunk, return_state=True,
+                           init_state=cache["state"])
+    y = y + params["D"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg)
+    k = cfg.ssm_conv - 1
+    conv_tail = jnp.concatenate([cache["conv"], xbc], axis=1)[:, -k:]
+    return y @ params["out_proj"], {"conv": conv_tail,
+                                    "state": state.astype(jnp.float32)}
 
 
 # ---------------------------------------------------------------------------

@@ -95,12 +95,21 @@ def apply_block(p, x: Array, cfg: ModelConfig, kind: str,
 
 
 def apply_block_decode(p, x: Array, cfg: ModelConfig, kind: str, cache, pos,
-                       bias: Optional[Array] = None):
-    """One-token block step. Returns (x, new_cache, moe_stats | None)."""
+                       bias: Optional[Array] = None,
+                       table: Optional[Array] = None,
+                       active: Optional[Array] = None):
+    """One-token block step. Returns (x, new_cache, moe_stats | None).
+    ``table``/``active`` switch full-attention layers onto the paged KV path
+    (serving engine); sliding-window and recurrent layers keep their slot-row
+    caches either way."""
     stats = None
     h = rmsnorm(p["norm1"], x, cfg)
     if kind in ("attn", "moe"):
-        y, cache = layers.attention_decode(p["mixer"], h, cfg, cache, pos)
+        if table is not None:
+            y, cache = layers.attention_decode_paged(p["mixer"], h, cfg, cache,
+                                                     pos, table, active)
+        else:
+            y, cache = layers.attention_decode(p["mixer"], h, cfg, cache, pos)
         x = x + y
     elif kind == "local":
         y, cache = layers.attention_decode(p["mixer"], h, cfg, cache, pos,
@@ -141,6 +150,32 @@ def apply_block_prefill(p, x: Array, cfg: ModelConfig, kind: str, cache,
     elif kind == "rglru":
         y, cache = rglru.rglru_block_prefill(p["mixer"], h, cfg, cache)
         x = x + y
+    if kind == "moe":
+        y, stats = moe.moe_ffn(p["moe"], rmsnorm(p["norm2"], x, cfg), cfg, bias)
+        x = x + y
+    else:
+        x = x + layers.mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg), cfg)
+    return x, cache, stats
+
+
+def apply_block_prefill_chunk(p, x: Array, cfg: ModelConfig, kind: str, cache,
+                              table_row: Array, p0: Array,
+                              bias: Optional[Array] = None):
+    """One prefill-chunk block step against the paged pool (full attention) or
+    the slot's recurrent state row (SSM). Sliding-window and RG-LRU layers are
+    not chunkable (ring-slot remapping / associative-scan splits change the
+    numerics) — the engine routes those configs to one-shot prefill."""
+    stats = None
+    h = rmsnorm(p["norm1"], x, cfg)
+    if kind in ("attn", "moe"):
+        y, cache = layers.attention_prefill_paged(p["mixer"], h, cfg, cache,
+                                                  table_row, p0)
+        x = x + y
+    elif kind == "ssm":
+        y, cache = ssm.ssm_block_prefill_chunk(p["mixer"], h, cfg, cache)
+        return x + y, cache, None
+    else:
+        raise NotImplementedError(f"chunked prefill unsupported for {kind!r}")
     if kind == "moe":
         y, stats = moe.moe_ffn(p["moe"], rmsnorm(p["norm2"], x, cfg), cfg, bias)
         x = x + y
@@ -239,6 +274,43 @@ def init_stack_cache(cfg: ModelConfig, batch: int, s_max: int, dtype) -> list:
     return out
 
 
+def map_block_caches(cfg: ModelConfig, fn, *trees):
+    """Apply ``fn(kind, *per-layer-cache-dicts)`` across the stacked segment
+    structure of one or more stack-cache trees, preserving the structure. The
+    kind-aware analogue of ``jax.tree.map`` — paged full-attention leaves and
+    slot-row recurrent leaves need different surgery and can't be told apart by
+    leaf shape alone."""
+    out = []
+    for si, (pattern, reps) in enumerate(segments(cfg)):
+        seg = []
+        for pi, kind in enumerate(pattern):
+            seg.append(fn(kind, *(t[si][pi] for t in trees)))
+        out.append(seg)
+    return out
+
+
+def init_stack_cache_paged(cfg: ModelConfig, num_slots: int, s_max: int,
+                           num_pages: int, page_size: int, dtype) -> list:
+    """Paged decode caches: full-attention layers get a physical page pool
+    (shared free list across slots, per-layer storage under one block table);
+    sliding-window layers keep bounded slot-row ring buffers and recurrent
+    layers their O(1) slot-row states — none of those holds a worst-case
+    sequence reservation, so only full attention needs paging."""
+    out = []
+    for pattern, reps in segments(cfg):
+        seg = []
+        for kind in pattern:
+            if kind in ("attn", "moe"):
+                one = layers.init_attention_cache_paged(cfg, num_pages,
+                                                        page_size, dtype)
+            else:
+                one = init_block_cache(cfg, kind, num_slots, s_max, dtype)
+            seg.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (reps,) + a.shape).copy(), one))
+        out.append(seg)
+    return out
+
+
 def apply_stack_prefill(stack_params: list, x: Array, cfg: ModelConfig, caches: list,
                         bias: Optional[Array] = None,
                         prefix_len: Optional[Array] = None):
@@ -270,8 +342,11 @@ def apply_stack_prefill(stack_params: list, x: Array, cfg: ModelConfig, caches: 
 
 
 def apply_stack_decode(stack_params: list, x: Array, cfg: ModelConfig, caches: list,
-                       pos: Array, bias: Optional[Array] = None):
-    """One-token pass. Returns (x, new_caches)."""
+                       pos: Array, bias: Optional[Array] = None,
+                       table: Optional[Array] = None,
+                       active: Optional[Array] = None):
+    """One-token pass. Returns (x, new_caches). ``table``/``active`` select the
+    paged KV path for full-attention layers (closed over, same for every layer)."""
     li = 0
     new_caches = []
     for (pattern, reps), seg_params, seg_cache in zip(segments(cfg), stack_params,
@@ -289,10 +364,53 @@ def apply_stack_decode(stack_params: list, x: Array, cfg: ModelConfig, caches: l
             for pi, kind in enumerate(pattern):
                 bi = None if b is None else b[pi]
                 xc, c2, _ = apply_block_decode(lp[pi], xc, cfg, kind, cs[pi], pos,
-                                               bias=bi)
+                                               bias=bi, table=table,
+                                               active=active)
                 new_cs.append(c2)
             return xc, new_cs
 
         x, nc = jax.lax.scan(body, x, (seg_params, seg_cache, seg_bias))
+        new_caches.append(nc)
+    return x, new_caches
+
+
+def apply_stack_prefill_chunk(stack_params: list, x: Array, cfg: ModelConfig,
+                              caches: list, table_row: Array, p0: Array,
+                              slot: Array, bias: Optional[Array] = None):
+    """One prefill-chunk pass (batch-of-1) against the paged pool. Full-attention
+    layers write the chunk's K/V into the slot's pages; recurrent (SSM) layers
+    thread the slot's state row across chunks. Returns (x, new_caches)."""
+    li = 0
+    new_caches = []
+    for (pattern, reps), seg_params, seg_cache in zip(segments(cfg), stack_params,
+                                                      caches):
+        npos = len(pattern)
+        seg_bias = None
+        if bias is not None:
+            seg_bias = bias[li:li + reps * npos].reshape(reps, npos, -1)
+        li += reps * npos
+        # recurrent leaves are slot-indexed (reps, S, ...): slice the slot's row
+        # outside the scan, write it back after
+        seg_in = [jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(
+                      a, slot, 1, axis=1), cs) if kind not in ("attn", "moe")
+                  else cs for kind, cs in zip(pattern, seg_cache)]
+
+        def body(carry, inp, pattern=pattern):
+            xc = carry
+            lp, cs, b = inp
+            new_cs = []
+            for pi, kind in enumerate(pattern):
+                bi = None if b is None else b[pi]
+                xc, c2, _ = apply_block_prefill_chunk(lp[pi], xc, cfg, kind,
+                                                      cs[pi], table_row, p0,
+                                                      bias=bi)
+                new_cs.append(c2)
+            return xc, new_cs
+
+        x, nc = jax.lax.scan(body, x, (seg_params, seg_in, seg_bias))
+        nc = [jax.tree.map(lambda full, row: jax.lax.dynamic_update_slice_in_dim(
+                  full, row.astype(full.dtype), slot, axis=1), cs, c2)
+              if kind not in ("attn", "moe") else c2
+              for kind, cs, c2 in zip(pattern, seg_cache, nc)]
         new_caches.append(nc)
     return x, new_caches

@@ -1,13 +1,43 @@
-"""Continuous-batching serving engine governed by the paper's immune primitives.
+"""Continuous-batching serving engine governed by the paper's immune primitives,
+over a **paged KV cache** with **chunked prefill**.
 
 ``serve.decode.generate`` serves a *fixed* batch: every prompt prefills together
 and every sequence decodes in lockstep until the longest finishes. Real traffic
 is an open-loop arrival process, so the engine keeps a fixed pool of decode
-**slots** and admits requests mid-stream: a free slot is prefilled (batch-of-1)
-and spliced into the pooled KV cache while the other slots keep decoding;
-finished sequences retire and their slot is compacted (reset) for reuse. All
-slot state is arrays (per-slot cache position, last token, active mask), so one
-compiled decode step serves every tick regardless of occupancy.
+**slots** and admits requests mid-stream; finished sequences retire and their
+slot is reused. All slot state is arrays (per-slot cache position, last token,
+active mask), so one compiled decode step serves every tick regardless of
+occupancy.
+
+Memory plane — the page-table layout:
+
+  * Each full-attention layer's K/V is a physical **page pool**
+    ``(num_pages, page_size, Hkv, D)`` (stacked over depth by the layer scan).
+    Page 0 is the null/trash page: never allocated, absorbs the writes of
+    inactive decode lanes, read only masked.
+  * A host-side block table (``serve.paging.PageAllocator``) maps each slot's
+    logical pages to physical ones; the device sees the dense
+    ``(num_slots, max_pages_per_slot)`` int32 table each tick. With
+    ``max_pages_per_slot = max_cache // page_size`` the gathered K/V length is
+    exactly ``max_cache``, so the paged decode is bitwise-identical to the
+    dense slot-row layout (null-page padding is masked to exact zeros).
+  * Admission *reserves* a request's worst-case page count
+    (``ceil((prompt + decode budget) / page_size)`` — its actual need, not the
+    ``max_cache`` worst case), then pages are appended lazily as prefill
+    chunks land and decode crosses page boundaries; retirement returns pages
+    to the free list with no zeroing or row compaction. Recurrent states and
+    sliding-window ring buffers are O(1)/O(window) per slot and stay
+    slot-indexed — only full attention carries a sequence-length reservation
+    worth paging.
+
+Compute plane — chunked prefill (``EngineConfig.prefill_chunk > 0``): long
+prompts are sliced into decode-tick-sized chunks written straight into the
+slot's pages, one chunk per engine tick, interleaved with the running decodes —
+a long prefill no longer stalls occupied slots, and the engine compiles ONE
+chunk shape instead of one prefill shape per prompt length. Chunking applies
+where it is bitwise-exact (attention stacks; MoE at dropless expert capacity;
+SSM via state-resume when lengths align to ``ssm_chunk``); VLM prefix-LM,
+finite-capacity MoE, and RG-LRU hybrids fall back to one-shot prefill.
 
 Admission is the immune loop applied to serving, per the anticipation argument
 of Boulmier et al. (PAPERS.md) — schedule on *remembered* cost, not
@@ -27,8 +57,15 @@ instantaneous load:
                             the queue, not admitted); an IL-2-like signal
                             revives them when queue pressure drops.
 
+A request whose prompt can never fit a slot is rejected at ``submit`` (counted
+in ``stats()['rejected']``, against goodput) instead of raising; a request that
+fits but finds no free pages is simply deferred in the queue until pages free
+up — out-of-pages backpressure, not an error.
+
 The FIFO policy (``EngineConfig(policy="fifo")``) is the baseline the
-benchmark compares against.
+benchmark compares against; ``page_size == max_cache`` degenerates to the
+fixed-row engine (one page per slot, reserved whole at admission) for
+equal-memory comparisons.
 """
 from __future__ import annotations
 
@@ -44,8 +81,9 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core import immune
-from ..models import model
+from ..models import model, transformer
 from .decode import greedy
+from .paging import PageAllocator, pages_for
 
 Array = jax.Array
 
@@ -104,7 +142,7 @@ def attach_modality_inputs(req: Request, cfg: ModelConfig, rng) -> Request:
 
 class EngineConfig(NamedTuple):
     num_slots: int = 4
-    max_cache: int = 96
+    max_cache: int = 96               # per-slot logical KV capacity (tokens)
     policy: str = "immune"            # "immune" | "fifo"
     num_classes: int = 4
     latency_budget: float = 32.0      # ticks; beyond this a completion "blew" SLO
@@ -114,6 +152,23 @@ class EngineConfig(NamedTuple):
     low_pressure: float = 0.5         # queue_len < low_pressure*num_slots -> IL-2
     anergy_onset: float = 0.34
     anergy_revival: float = 0.3
+    # -- paged KV plane ------------------------------------------------------
+    page_size: int = 16               # tokens per physical page
+    num_pages: Optional[int] = None   # pool size incl. the null page; None ->
+    #                                   fully provisioned (slots*maxp + 1),
+    #                                   admission-equivalent to fixed rows
+    prefill_chunk: int = 0            # >0: chunked prefill, one chunk per tick
+
+
+@dataclass
+class _PrefillJob:
+    """An in-flight chunked prefill: one chunk lands per engine tick while the
+    other slots keep decoding; the slot activates when the last chunk lands."""
+    req: Request
+    slot: int
+    p0: int          # next chunk's first absolute position
+    total: int       # padded prompt length (multiple of prefill_chunk)
+    length: int      # true prompt length (incl. any frontend prefix)
 
 
 # ---------------------------------------------------------------------------
@@ -122,42 +177,66 @@ class EngineConfig(NamedTuple):
 @partial(jax.jit, static_argnames=("cfg", "max_cache"))
 def _prefill_one(params, cfg: ModelConfig, prompts: dict, max_cache: int,
                  router_bias):
-    """Prefill a batch-of-1 prompt into a fresh cache; returns (first_token,
-    cache). Identical math to the first stage of ``decode.generate``."""
+    """Prefill a batch-of-1 prompt into a fresh dense cache; returns
+    (first_token, cache). Identical math to the first stage of
+    ``decode.generate`` — the parity anchor for the one-shot admission path."""
     cache = model.init_cache(cfg, 1, max_cache)
     logits, cache = model.prefill(params, cfg, prompts, cache,
                                   router_bias=router_bias)
     return greedy(logits), cache
 
 
-@partial(jax.jit, donate_argnums=(0, 3))
-def _splice(pool, one, slot, last, active, first):
-    """Insert a prefilled batch-of-1 cache + its first token into ``slot``."""
-    pool = model.insert_slot_cache(pool, one, slot)
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 5))
+def _splice(pool, one, slot, table_row, first, last, active, cfg: ModelConfig):
+    """Insert a one-shot prefilled batch-of-1 cache + its first token into
+    ``slot`` of the paged pool (K/V rows scattered to the slot's pages)."""
+    pool = model.insert_slot_cache_paged(pool, one, cfg, slot, table_row)
     return pool, last.at[slot].set(first[0]), active.at[slot].set(True)
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _release(pool, active, slot):
-    """Retire ``slot``: compact (zero) its cache row and clear the active bit."""
-    return model.reset_slot_cache(pool, slot), active.at[slot].set(False)
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(3,))
+def _prefill_chunk(params, cfg: ModelConfig, chunk: dict, pool, table_row, p0,
+                   last_idx, slot, router_bias):
+    """Land one prefill chunk in the slot's pages; returns (greedy token of the
+    chunk's last real position, pool). One compiled shape per config."""
+    logits, pool = model.prefill_chunk(params, cfg, chunk, pool, table_row, p0,
+                                       last_idx, slot, router_bias=router_bias)
+    return greedy(logits), pool
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _activate(pool, last, active, slot, first, length):
+    """Final chunk landed: set the slot's position, first token, active bit."""
+    return ({"layers": pool["layers"], "pos": pool["pos"].at[slot].set(length)},
+            last.at[slot].set(first[0]), active.at[slot].set(True))
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+def _release(pool, active, slot, cfg: ModelConfig):
+    """Retire ``slot``: zero its slot-row (recurrent/ring) state and position;
+    its physical pages just return to the host free list, unzeroed."""
+    return (model.release_slot_cache_paged(pool, cfg, slot),
+            active.at[slot].set(False))
 
 
 # pool and last are donated: the engine rebinds both from the return value each
 # tick, and without donation every decoded token would pay a fresh copy of the
 # whole pooled KV cache (the scan carry in decode._decode_loop gets this free)
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2, 3))
-def _decode_tick(params, cfg: ModelConfig, pool, last, active, router_bias,
-                 frames):
+def _decode_tick(params, cfg: ModelConfig, pool, last, active, table,
+                 router_bias, frames):
     """One token for every slot (occupied or not) — the single compiled decode
-    step. Inactive slots advance neither position nor last token; their lane
-    computes a garbage token that the host discards, which is what keeps the
-    step shape (and therefore the compiled program) independent of occupancy."""
+    step. Inactive slots advance neither position nor state; their lane
+    computes a garbage token that the host discards (paged K/V writes of
+    inactive lanes are routed to the null page, slot-row caches are frozen),
+    which keeps the step shape independent of occupancy AND keeps garbage
+    lanes from dirtying pages a mid-flight chunked prefill already owns."""
     batch = {"token": last}
     if cfg.family == "audio":
         batch["frame"] = frames
     logits, new_pool = model.decode_step(params, cfg, batch, pool,
-                                         router_bias=router_bias)
+                                         router_bias=router_bias,
+                                         table=table, active=active)
     nxt = greedy(logits)                             # (S, 1)
     pos = jnp.where(active, new_pool["pos"], pool["pos"])
     last = jnp.where(active[:, None], nxt, last)
@@ -235,10 +314,16 @@ class ImmuneAdmission:
 # the engine
 # ---------------------------------------------------------------------------
 class Engine:
-    """Continuous-batching decode over a fixed slot pool with queue admission."""
+    """Continuous-batching decode over a paged slot pool with queue admission."""
 
     def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig,
                  router_bias: Optional[Array] = None):
+        if ecfg.max_cache % ecfg.page_size:
+            raise ValueError(f"max_cache {ecfg.max_cache} must be a multiple "
+                             f"of page_size {ecfg.page_size}")
+        if ecfg.prefill_chunk and ecfg.max_cache % ecfg.prefill_chunk:
+            raise ValueError(f"max_cache {ecfg.max_cache} must be a multiple "
+                             f"of prefill_chunk {ecfg.prefill_chunk}")
         self.params, self.cfg, self.ecfg = params, cfg, ecfg
         self.router_bias = router_bias
         # MoE: the decode tick runs every slot, occupied or not, and expert
@@ -251,48 +336,112 @@ class Engine:
             cfg, capacity_factor=float(max(cfg.num_experts,
                                            cfg.capacity_factor)))
         s = ecfg.num_slots
-        self.pool = model.init_slot_cache(cfg, s, ecfg.max_cache)
+        self.maxp = ecfg.max_cache // ecfg.page_size
+        num_pages = ecfg.num_pages if ecfg.num_pages is not None \
+            else s * self.maxp + 1
+        self.alloc = PageAllocator(num_pages, ecfg.page_size, s, self.maxp)
+        self.pool = model.init_slot_cache_paged(cfg, s, ecfg.max_cache,
+                                                num_pages, ecfg.page_size)
         self.last = jnp.zeros((s, 1), jnp.int32)
         self.active = jnp.zeros((s,), bool)
         self.frames = (jnp.zeros((s, 1, cfg.frontend_dim), jnp.float32)
                        if cfg.family == "audio" else None)
         self.slots: list[Optional[Request]] = [None] * s
+        self.jobs: deque[_PrefillJob] = deque()
+        self.pos_host = np.zeros(s, np.int64)      # per-slot next write index
+        self.active_host = np.zeros(s, bool)
         self.queue: deque[Request] = deque()
         self.tick = 0
         self.completed: list[Request] = []
         self.shed: list[Request] = []      # rejected while their class was anergic
+        self.rejected: list[Request] = []  # can never fit a slot (submit-time)
         self.admission = ImmuneAdmission(ecfg) if ecfg.policy == "immune" \
             else None
         self.mid_stream_admissions = 0     # admissions while other slots decode
         self.unsubmitted = 0               # run() arrivals never reached
+        self.concurrency_hw = 0            # max simultaneously occupied slots
+        self.chunked_prefill_chunks = 0    # chunk calls landed
         self._admitted_this_tick = 0
         self._decoding_before_admit = False
 
     # -- queue ---------------------------------------------------------------
     def submit(self, req: Request):
-        need = len(req.tokens) + self.cfg.frontend_tokens + req.max_new_tokens
-        if need > self.ecfg.max_cache:
-            raise ValueError(
-                f"request {req.rid}: prompt+prefix+decode = {need} exceeds "
-                f"max_cache = {self.ecfg.max_cache}")
+        """Queue a request. A prompt+decode budget that can never fit a slot is
+        *rejected* (recorded, counted against goodput) rather than raised: an
+        open-loop server sheds what it cannot serve, it does not crash."""
         if self.admission is not None and not 0 <= req.rclass < \
                 self.ecfg.num_classes:
             raise ValueError(f"request {req.rid}: rclass {req.rclass} outside "
                              f"[0, {self.ecfg.num_classes})")
+        need = len(req.tokens) + self.cfg.frontend_tokens + req.max_new_tokens
+        if need > self.ecfg.max_cache \
+                or self._need_pages(req) > self.alloc.usable_pages:
+            self.rejected.append(req)       # could never be admitted: don't
+            return                          # let it camp in the queue forever
         self.queue.append(req)
+
+    # -- paging --------------------------------------------------------------
+    def _chunkable(self, req: Request) -> bool:
+        """Chunked prefill only where it is bitwise-exact vs one-shot prefill:
+        attention stacks always; MoE only at dropless expert capacity (capacity
+        is per-call, so a finite capacity factor can drop different tokens per
+        chunking); SSM when the prompt and chunk align to ``ssm_chunk``
+        (state-resume preserves the scan's op order); VLM (prefix-LM mask over
+        the patch prefix) and RG-LRU hybrids (splitting the associative scan
+        regroups the rounding) fall back to one-shot."""
+        c = self.ecfg.prefill_chunk
+        if not c or self.cfg.family == "vlm" or self.cfg.frontend_tokens:
+            return False
+        kinds = set(transformer.layer_kinds(self.cfg))
+        if "moe" in kinds:
+            # dropless iff capacity >= worst-case per-expert load: cf >= E/k
+            dropless = self.cfg.capacity_factor * self.cfg.experts_per_token \
+                >= self.cfg.num_experts
+            if not dropless:
+                return False
+        if kinds <= {"attn", "moe"}:
+            return True
+        if kinds == {"ssm"}:
+            return len(req.tokens) % c == 0 and c % self.cfg.ssm_chunk == 0
+        return False
+
+    def _need_pages(self, req: Request) -> int:
+        """Worst-case pages this request can ever hold: prompt (+ chunk
+        padding) plus its full decode budget."""
+        plen = len(req.tokens) + self.cfg.frontend_tokens
+        cover = plen + req.max_new_tokens
+        if self._chunkable(req):
+            c = self.ecfg.prefill_chunk
+            cover = max(cover, -(-plen // c) * c)
+        return pages_for(cover, self.ecfg.page_size)
+
+    def _table_row(self, slot: int) -> Array:
+        return jnp.asarray(self.alloc.table()[slot])
 
     # -- admission -----------------------------------------------------------
     def _admit_into(self, req: Request, slot: int):
-        first, one = _prefill_one(self.params, self.cfg, req.prompts(),
-                                  self.ecfg.max_cache, self.router_bias)
+        self.alloc.reserve(slot, self._need_pages(req))
+        plen = len(req.tokens) + self.cfg.frontend_tokens
+        req.slot, req.admit_tick = slot, self.tick
+        self.slots[slot] = req
         if self._decoding_before_admit:
             self.mid_stream_admissions += 1
-        self.pool, self.last, self.active = _splice(
-            self.pool, one, jnp.asarray(slot), self.last, self.active, first)
-        req.slot, req.admit_tick = slot, self.tick
-        req.out_tokens.append(int(first[0, 0]))
-        self.slots[slot] = req
         self._admitted_this_tick += 1
+        c = self.ecfg.prefill_chunk
+        if self._chunkable(req):
+            total = -(-plen // c) * c
+            self.jobs.append(_PrefillJob(req=req, slot=slot, p0=0, total=total,
+                                         length=plen))
+            return
+        first, one = _prefill_one(self.params, self.cfg, req.prompts(),
+                                  self.ecfg.max_cache, self.router_bias)
+        self.alloc.ensure(slot, pages_for(plen, self.ecfg.page_size))
+        self.pool, self.last, self.active = _splice(
+            self.pool, one, jnp.asarray(slot), self._table_row(slot), first,
+            self.last, self.active, self.cfg)
+        self.active_host[slot] = True
+        self.pos_host[slot] = plen
+        req.out_tokens.append(int(first[0, 0]))
 
     def _admit(self):
         self._admitted_this_tick = 0
@@ -304,6 +453,8 @@ class Engine:
             return
         if self.admission is None:                      # FIFO baseline
             while free and self.queue:
+                if not self.alloc.can_admit(self._need_pages(self.queue[0])):
+                    break     # strict FIFO: an unfit head blocks the line
                 self._admit_into(self.queue.popleft(), free.pop(0))
             return
         adm = self.admission
@@ -315,11 +466,18 @@ class Engine:
             self.shed.append(req)
         if adm.throttled():                             # delayed suppression
             return
-        # anticipation: order by *remembered* class cost, not queue position
+        # anticipation: order by *remembered* class cost, not queue position;
+        # a candidate the page pool cannot hold yet is skipped (deferred), so
+        # a big request waiting for pages never blocks smaller ones — the
+        # paged pool's admissive win over fixed rows
         cost = self._predicted_costs()
         candidates = sorted(self.queue,
                             key=lambda r: (cost[r.rclass], r.arrival, r.rid))
-        for req in candidates[:len(free)]:
+        for req in candidates:
+            if not free:
+                break
+            if not self.alloc.can_admit(self._need_pages(req)):
+                continue
             self.queue.remove(req)
             self._admit_into(req, free.pop(0))
 
@@ -334,6 +492,42 @@ class Engine:
                 cost[r.rclass] = max(cost[r.rclass], self.tick - r.admit_tick)
         return cost
 
+    # -- chunked prefill ------------------------------------------------------
+    def _prefill_tick(self):
+        """Land one chunk of the front prefill job (if any). One chunk per
+        engine tick: the job's slot stays inactive while the other slots
+        decode, so a long prompt never stalls the pool."""
+        if not self.jobs:
+            return
+        job = self.jobs[0]
+        c, page = self.ecfg.prefill_chunk, self.ecfg.page_size
+        end = job.p0 + c
+        self.alloc.ensure(job.slot, pages_for(end, page))
+        toks = np.zeros((c,), np.int32)
+        seg = job.req.tokens[job.p0:min(end, len(job.req.tokens))]
+        toks[:len(seg)] = seg
+        chunk = {"tokens": jnp.asarray(toks)[None]}
+        if self.cfg.family == "audio":
+            fr = np.zeros((c, self.cfg.frontend_dim), np.float32)
+            fseg = job.req.frames[job.p0:min(end, len(job.req.frames))]
+            fr[:len(fseg)] = fseg
+            chunk["frames"] = jnp.asarray(fr)[None]
+        last_idx = min(job.length - 1 - job.p0, c - 1)
+        first, self.pool = _prefill_chunk(
+            self.params, self.cfg, chunk, self.pool, self._table_row(job.slot),
+            jnp.asarray(job.p0, jnp.int32), jnp.asarray(last_idx, jnp.int32),
+            jnp.asarray(job.slot, jnp.int32), self.router_bias)
+        self.chunked_prefill_chunks += 1
+        job.p0 = end
+        if end >= job.total:
+            self.jobs.popleft()
+            self.pool, self.last, self.active = _activate(
+                self.pool, self.last, self.active, jnp.asarray(job.slot),
+                first, jnp.asarray(job.length, jnp.int32))
+            self.active_host[job.slot] = True
+            self.pos_host[job.slot] = job.length
+            job.req.out_tokens.append(int(first[0, 0]))
+
     # -- retirement ----------------------------------------------------------
     def _finished(self, req: Request) -> bool:
         if len(req.out_tokens) >= req.max_new_tokens:
@@ -343,13 +537,17 @@ class Engine:
 
     def _retire(self):
         for slot, req in enumerate(self.slots):
-            if req is None or not self._finished(req):
+            if req is None or not self.active_host[slot] \
+                    or not self._finished(req):
                 continue
             req.finish_tick = self.tick
             self.completed.append(req)
             self.slots[slot] = None
             self.pool, self.active = _release(self.pool, self.active,
-                                              jnp.asarray(slot))
+                                              jnp.asarray(slot), self.cfg)
+            self.alloc.release(slot)           # incl. unused reservation (eos)
+            self.active_host[slot] = False
+            self.pos_host[slot] = 0
             if self.admission is not None:
                 # cost = slot-ticks consumed; feeds the anticipation memory
                 self.admission.observe_completion(
@@ -358,17 +556,28 @@ class Engine:
 
     # -- one tick ------------------------------------------------------------
     def step(self):
-        """One engine tick: admit into free slots, decode one token for every
-        occupied slot, retire finished sequences, advance the immune states."""
+        """One engine tick: admit into free slots, land a prefill chunk, decode
+        one token for every active slot, retire finished sequences, advance the
+        immune states."""
         self._admit()
-        if any(r is not None for r in self.slots):
+        self._prefill_tick()
+        self.concurrency_hw = max(self.concurrency_hw,
+                                  sum(r is not None for r in self.slots))
+        if self.active_host.any():
+            page = self.ecfg.page_size
+            for slot in np.flatnonzero(self.active_host):
+                # decode writes at pos: append the page lazily at the boundary
+                self.alloc.ensure(int(slot),
+                                  pages_for(int(self.pos_host[slot]) + 1, page))
             nxt, self.last, self.pool = _decode_tick(
                 self.params, self.cfg_decode, self.pool, self.last, self.active,
-                self.router_bias, self.frames)
+                jnp.asarray(self.alloc.table()), self.router_bias, self.frames)
             nxt_host = np.asarray(nxt[:, 0])
             for slot, req in enumerate(self.slots):
-                if req is not None and not self._finished(req):
+                if req is not None and self.active_host[slot] \
+                        and not self._finished(req):
                     req.out_tokens.append(int(nxt_host[slot]))
+            self.pos_host[self.active_host] += 1
         self._retire()
         if self.admission is not None:
             demand = np.zeros(self.ecfg.num_classes, np.float64)
@@ -408,8 +617,8 @@ class Engine:
         # denominator, so a policy that stalls into the max_ticks backstop
         # (requests still queued, in-flight, or never submitted) cannot
         # flatter itself by under-counting demand
-        demand = (len(self.completed) + len(self.shed) + len(self.queue)
-                  + in_flight + self.unsubmitted)
+        demand = (len(self.completed) + len(self.shed) + len(self.rejected)
+                  + len(self.queue) + in_flight + self.unsubmitted)
         # no completions -> the tail is unbounded, not "best ever"
         empty = float("inf")
         return {
@@ -417,6 +626,7 @@ class Engine:
             "ticks": self.tick,
             "completed": len(self.completed),
             "shed": len(self.shed),
+            "rejected": len(self.rejected),
             "unserved": len(self.queue) + in_flight + self.unsubmitted,
             "tokens": toks,
             "throughput": toks / max(self.tick, 1),
@@ -424,9 +634,17 @@ class Engine:
             "p99_latency": float(np.percentile(lat, 99)) if lat.size else empty,
             "max_latency": float(lat.max()) if lat.size else empty,
             # fraction of total demand served within the latency budget: shed
-            # requests count against goodput — rejection is not a free lunch
+            # and rejected requests count against goodput — rejection is not a
+            # free lunch
             "goodput": in_budget / max(demand, 1),
             "mid_stream_admissions": self.mid_stream_admissions,
+            # paged-memory telemetry: the perf trajectory BENCH_serve.json tracks
+            "page_size": self.ecfg.page_size,
+            "pages_budget": self.alloc.usable_pages,
+            "pages_in_use": self.alloc.pages_in_use,
+            "pages_hw": self.alloc.high_water,
+            "concurrency_hw": self.concurrency_hw,
+            "chunked_prefill_chunks": self.chunked_prefill_chunks,
         }
 
 
@@ -437,12 +655,15 @@ def synthetic_trace(cfg: ModelConfig, num_requests: int = 40, seed: int = 0,
                     burst_every: int = 10, burst_size: int = 8,
                     light_tokens: int = 5, heavy_tokens: int = 40,
                     heavy_frac: float = 0.15,
-                    prompt_lens: tuple = (8, 16)) -> list[Request]:
+                    prompt_lens: tuple = (8, 16),
+                    heavy_prompt: Optional[int] = None) -> list[Request]:
     """Bursty heterogeneous arrivals: mostly light requests plus a heavy class
     whose decode length alone blows a chat-style latency budget. Classes:
     0..len(prompt_lens)-1 are light (one per prompt-length bucket); the last
     class is heavy. Prompt lengths come from a tiny bucket set so the engine
-    compiles a bounded number of prefill shapes."""
+    compiles a bounded number of prefill shapes. ``heavy_prompt`` gives the
+    heavy class a long prompt of its own (exercises chunked prefill and the
+    paged pool's mixed-length admission)."""
     rng = np.random.default_rng(seed)
     reqs = []
     n_light_classes = len(prompt_lens)
@@ -450,6 +671,8 @@ def synthetic_trace(cfg: ModelConfig, num_requests: int = 40, seed: int = 0,
         burst = rid // burst_size
         heavy = rng.random() < heavy_frac
         plen = int(prompt_lens[rid % n_light_classes])
+        if heavy and heavy_prompt is not None:
+            plen = int(heavy_prompt)
         rclass = n_light_classes if heavy else rid % n_light_classes
         steps = heavy_tokens if heavy else light_tokens + rid % 3
         req = Request(

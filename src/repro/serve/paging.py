@@ -1,0 +1,119 @@
+"""Host-side block-table allocator for the paged KV cache (vLLM-style).
+
+The device holds one physical page pool per attention layer, shaped
+``(num_pages, page_size, kv_heads, head_dim)``; this module owns the *mapping*:
+which physical pages belong to which decode slot, in logical order. The device
+side never sees the free list — only the dense ``(num_slots, max_pages_per_slot)``
+block table produced by :meth:`PageAllocator.table`.
+
+Layout invariants (the hypothesis suite in ``tests/test_paging.py`` churns these):
+
+  * page 0 is the **null page**: never allocated, permanently parked. Unmapped
+    block-table entries point at it, and the decode step routes the writes of
+    inactive slots there, so it doubles as the trash page. Reads of it are
+    always masked (its logical positions are beyond every slot's ``pos``), so
+    its contents are irrelevant as long as they stay finite.
+  * no physical page is ever owned by two live slots;
+  * ``free + sum(owned) == num_pages - 1`` (conservation, null page excluded);
+  * ``available()`` never goes negative: admission *reserves* a request's
+    worst-case page count up front (``reserve``), then pages are physically
+    appended lazily (``ensure``) as prefill chunks land and decode crosses page
+    boundaries — so a slot can never deadlock mid-decode waiting for a page
+    another slot might never release.
+
+Reservation is per-request worst case (``ceil((prompt + decode budget)/page)``)
+— far smaller than the fixed-row engine's ``max_cache`` row, which is the whole
+point: mixed-length requests admit without the worst-case reservation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Physical pages needed to hold ``tokens`` cache positions."""
+    return -(-tokens // page_size)
+
+
+class PageAllocator:
+    """Free-list page allocator with per-slot reservations.
+
+    ``num_pages`` counts the null page, so ``num_pages - 1`` pages are usable.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, num_slots: int,
+                 max_pages_per_slot: int):
+        if num_pages < 2:
+            raise ValueError("need at least one usable page beyond the null page")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.num_slots = num_slots
+        self.max_pages_per_slot = max_pages_per_slot
+        # pop() order is ascending page id — cosmetic, but makes traces readable
+        self._free = list(range(num_pages - 1, NULL_PAGE, -1))
+        self._owned: list[list[int]] = [[] for _ in range(num_slots)]
+        self._reserved = np.zeros(num_slots, np.int64)
+        self.high_water = 0
+
+    # -- accounting ----------------------------------------------------------
+    @property
+    def usable_pages(self) -> int:
+        return self.num_pages - 1
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.usable_pages - len(self._free)
+
+    def owned(self, slot: int) -> list[int]:
+        return list(self._owned[slot])
+
+    def available(self) -> int:
+        """Pages neither allocated nor promised to a live slot."""
+        return len(self._free) - int(self._reserved.sum())
+
+    def can_admit(self, need_pages: int) -> bool:
+        return need_pages <= min(self.available(), self.max_pages_per_slot)
+
+    # -- lifecycle -----------------------------------------------------------
+    def reserve(self, slot: int, need_pages: int) -> None:
+        """Promise ``need_pages`` to ``slot`` (its worst case); call at admission."""
+        if self._owned[slot] or self._reserved[slot]:
+            raise RuntimeError(f"slot {slot} already holds pages/reservation")
+        if not self.can_admit(need_pages):
+            raise RuntimeError(f"reserve({slot}, {need_pages}) exceeds "
+                               f"available {self.available()}")
+        self._reserved[slot] = need_pages
+
+    def ensure(self, slot: int, npages: int) -> None:
+        """Grow ``slot`` to at least ``npages`` physical pages (within its
+        reservation). Called before a prefill chunk lands or a decode write
+        crosses a page boundary."""
+        if npages > self.max_pages_per_slot:
+            raise RuntimeError(f"slot {slot}: {npages} pages exceeds "
+                               f"max_pages_per_slot {self.max_pages_per_slot}")
+        while len(self._owned[slot]) < npages:
+            if self._reserved[slot] <= 0:
+                raise RuntimeError(f"slot {slot} grew past its reservation")
+            self._owned[slot].append(self._free.pop())
+            self._reserved[slot] -= 1
+            self.high_water = max(self.high_water, self.pages_in_use)
+
+    def release(self, slot: int) -> None:
+        """Retire ``slot``: return its pages (and any unused reservation — an
+        early EOS leaves some) to the pool. No zeroing: stale page contents are
+        only ever read masked."""
+        self._free.extend(reversed(self._owned[slot]))
+        self._owned[slot] = []
+        self._reserved[slot] = 0
+
+    # -- device view ---------------------------------------------------------
+    def table(self) -> np.ndarray:
+        """(num_slots, max_pages_per_slot) int32 block table; unmapped entries
+        point at the null page."""
+        t = np.full((self.num_slots, self.max_pages_per_slot), NULL_PAGE,
+                    np.int32)
+        for slot, pages in enumerate(self._owned):
+            t[slot, :len(pages)] = pages
+        return t

@@ -1,0 +1,145 @@
+"""Paged KV allocator: unit behavior + churn invariants.
+
+The allocator is pure host logic, so these tests run in microseconds; the
+hypothesis case drives random admit/grow/release sequences and checks the
+layout invariants the device side silently relies on — above all that no two
+live slots ever share a physical page (a violation would silently corrupt
+another request's KV, which token-parity tests can only catch by luck).
+"""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.serve.paging import NULL_PAGE, PageAllocator, pages_for
+
+SETTINGS = hypothesis.settings(deadline=None, max_examples=60)
+
+
+def _alloc(num_pages=9, page_size=16, num_slots=3, maxp=4):
+    return PageAllocator(num_pages, page_size, num_slots, maxp)
+
+
+class TestPagesFor:
+    def test_rounds_up(self):
+        assert pages_for(1, 16) == 1
+        assert pages_for(16, 16) == 1
+        assert pages_for(17, 16) == 2
+        assert pages_for(64, 16) == 4
+
+
+class TestAllocFreeReuse:
+    def test_alloc_free_reuse_cycle(self):
+        a = _alloc()
+        a.reserve(0, 3)
+        a.ensure(0, 3)
+        first = a.owned(0)
+        assert len(first) == 3 and NULL_PAGE not in first
+        assert a.pages_in_use == 3
+        a.release(0)
+        assert a.pages_in_use == 0 and a.owned(0) == []
+        # freed pages are reusable by another slot
+        a.reserve(1, 4)
+        a.ensure(1, 4)
+        assert set(first) <= set(a.owned(1)) | set(a._free)
+        assert a.high_water == 4
+
+    def test_table_maps_logical_to_physical_in_order(self):
+        a = _alloc()
+        a.reserve(2, 2)
+        a.ensure(2, 2)
+        t = a.table()
+        assert t.shape == (3, 4)
+        assert list(t[2, :2]) == a.owned(2)
+        assert (t[2, 2:] == NULL_PAGE).all()
+        assert (t[:2] == NULL_PAGE).all()
+
+    def test_release_returns_unused_reservation(self):
+        """Early EOS: a slot that reserved 4 but only touched 1 page gives the
+        other 3 promises back."""
+        a = _alloc()
+        a.reserve(0, 4)
+        a.ensure(0, 1)
+        assert a.available() == 8 - 1 - 3
+        a.release(0)
+        assert a.available() == 8 and a.pages_in_use == 0
+
+    def test_fragmentation_churn_has_no_leak(self):
+        """Interleaved alloc/free of mixed sizes: conservation holds and the
+        full pool is reachable again after the churn."""
+        a = _alloc(num_pages=17, num_slots=4, maxp=4)
+        for round_ in range(50):
+            slot = round_ % 4
+            if a.owned(slot):
+                a.release(slot)
+            need = 1 + (round_ * 7) % 4
+            if a.can_admit(need):
+                a.reserve(slot, need)
+                a.ensure(slot, need)
+        for slot in range(4):
+            a.release(slot)
+        assert a.pages_in_use == 0 and a.available() == 16
+
+
+class TestBackpressure:
+    def test_out_of_pages_is_not_an_error(self):
+        a = _alloc(num_pages=5, maxp=4)        # 4 usable
+        a.reserve(0, 3)
+        assert not a.can_admit(2)              # only 1 unpromised page left
+        assert a.can_admit(1)
+        a.release(0)
+        assert a.can_admit(4)
+
+    def test_reservation_guards_lazy_growth(self):
+        a = _alloc(num_pages=5, maxp=4)
+        a.reserve(0, 2)
+        with pytest.raises(RuntimeError, match="reservation"):
+            a.ensure(0, 3)                     # growing past the promise
+
+    def test_max_pages_per_slot_is_enforced(self):
+        a = _alloc(num_pages=17, maxp=2)
+        assert not a.can_admit(3)
+        a.reserve(0, 2)
+        with pytest.raises(RuntimeError, match="max_pages_per_slot"):
+            a.ensure(0, 3)
+
+
+class TestInvariants:
+    """No two live slots ever share a page — plus conservation — under random
+    admit/grow/release churn."""
+
+    @SETTINGS
+    @hypothesis.given(seed=st.integers(0, 10_000),
+                      num_pages=st.integers(2, 24),
+                      num_slots=st.integers(1, 6),
+                      steps=st.integers(1, 80))
+    def test_no_two_live_slots_share_a_page(self, seed, num_pages, num_slots,
+                                            steps):
+        import random
+        rng = random.Random(seed)
+        maxp = 4
+        a = PageAllocator(num_pages, 16, num_slots, maxp)
+        for _ in range(steps):
+            slot = rng.randrange(num_slots)
+            op = rng.random()
+            if op < 0.4 and not a.owned(slot) and not a._reserved[slot]:
+                need = rng.randint(1, maxp)
+                if a.can_admit(need):
+                    a.reserve(slot, need)
+                    a.ensure(slot, rng.randint(0, need))
+            elif op < 0.7 and (a.owned(slot) or a._reserved[slot]):
+                grown = len(a.owned(slot)) + int(a._reserved[slot])
+                a.ensure(slot, rng.randint(len(a.owned(slot)), grown))
+            elif a.owned(slot) or a._reserved[slot]:
+                a.release(slot)
+            # -- the invariants ------------------------------------------
+            owned = [p for s in range(num_slots) for p in a.owned(s)]
+            assert len(owned) == len(set(owned)), "two slots share a page"
+            assert NULL_PAGE not in owned, "null page handed out"
+            assert len(a._free) + len(owned) == num_pages - 1, "page leak"
+            assert a.available() >= 0, "over-promised pages"
+            assert a.high_water <= num_pages - 1
+            t = a.table()
+            for s in range(num_slots):
+                n = len(a.owned(s))
+                assert list(t[s, :n]) == a.owned(s)
+                assert (t[s, n:] == NULL_PAGE).all()

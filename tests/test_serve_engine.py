@@ -1,18 +1,24 @@
 """Continuous-batching engine: decode-parity oracle + admission behavior.
 
 The correctness anchor is *token parity*: a request served by the engine —
-prefilled into an arbitrary slot mid-stream, decoded alongside unrelated
-sequences at other depths, retired, its slot compacted and reused — must emit
-exactly the tokens that one-shot ``serve.decode.generate`` produces for the
-same prompt and params. That pins slot insertion, per-slot positions (rope +
-causal masks), compaction, and cross-slot isolation in one observable.
+prefilled into an arbitrary slot mid-stream (one-shot or chunk by chunk into
+its block-table pages), decoded alongside unrelated sequences at other depths,
+retired, its pages freed and reused — must emit exactly the tokens that
+one-shot ``serve.decode.generate`` produces for the same prompt and params.
+That pins page scatter/gather, per-slot positions (rope + causal masks),
+chunked-prefill state threading, and cross-slot isolation in one observable.
 
 MoE runs at the *default* capacity factor on purpose: the engine's decode tick
 bumps capacity to be dropless (a garbage lane from an empty slot must never
-displace a real request's token at an expert's capacity limit), and prefill
-is a batch-of-1 call identical to the oracle's — so parity must hold with no
-capacity pinning at all.
+displace a real request's token at an expert's capacity limit), and one-shot
+prefill is a batch-of-1 call identical to the oracle's — so parity must hold
+with no capacity pinning at all. The *chunked* MoE case pins capacity to
+dropless on both sides instead: expert capacity is per-call, so a chunked
+prefill at finite capacity could legitimately drop tokens the one-shot oracle
+keeps — parity there is only defined dropless.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -80,13 +86,75 @@ class TestDecodeParity:
         assert stats["completed"] == 9 and stats["shed"] == 0
         # admissions actually interleaved with other slots' decodes
         assert stats["mid_stream_admissions"] >= 6
-        # slots were reused (9 requests > 3 slots) and compacted afterwards
+        # slots were reused (9 requests > 3 slots) and drained clean: no live
+        # pages, every page back on the free list, positions reset
         assert all(r is None for r in eng.slots)
         assert not bool(eng.active.any())
         assert np.asarray(eng.pool["pos"]).tolist() == [0, 0, 0]
+        assert stats["pages_in_use"] == 0
+        assert 0 < stats["pages_hw"] <= stats["pages_budget"]
         for req in eng.completed:
             oracle = _oracle_tokens(params, cfg, req, ecfg.max_cache, None)
             assert req.out_tokens == oracle, f"request {req.rid} diverged"
+
+    def test_chunked_prefill_mid_stream_token_identical(self):
+        """Long prompts land chunk by chunk (one per tick) while other slots
+        keep decoding — and the tokens still match one-shot ``generate``
+        exactly. The 24-token prompts take 3 chunks each, so every multi-chunk
+        prefill overlaps live decodes."""
+        cfg = _smoke_cfg("smollm-360m")
+        params = _params(cfg)
+        ecfg = eng_mod.EngineConfig(num_slots=3, max_cache=48, policy="immune",
+                                    num_classes=2, latency_budget=64.0,
+                                    prefill_chunk=8)
+        reqs = _make_requests(cfg, 8, prompt_lens=(24, 10))
+        eng = eng_mod.Engine(params, cfg, ecfg)
+        stats = eng.run(reqs, max_ticks=500)
+        assert stats["completed"] == 8 and stats["shed"] == 0
+        # 4 long prompts x 3 chunks + 4 short x 2 chunks = 20 chunk calls
+        assert stats["chunked_prefill_chunks"] == 20
+        assert stats["mid_stream_admissions"] >= 5
+        for req in eng.completed:
+            oracle = _oracle_tokens(params, cfg, req, ecfg.max_cache, None)
+            assert req.out_tokens == oracle, \
+                f"request {req.rid} diverged after chunked prefill"
+
+    def test_chunked_prefill_moe_dropless_token_identical(self):
+        """Chunked MoE prefill at *dropless* capacity (pinned on both engine
+        and oracle: capacity is per-call, so finite-capacity drops are not
+        comparable across chunkings)."""
+        cfg = dataclasses.replace(_smoke_cfg("granite-moe-3b-a800m"),
+                                  capacity_factor=8.0)
+        params = _params(cfg)
+        bias = _bias(cfg)
+        ecfg = eng_mod.EngineConfig(num_slots=2, max_cache=48, policy="fifo",
+                                    prefill_chunk=8)
+        reqs = _make_requests(cfg, 4, seed=1, prompt_lens=(16, 8), steps=(4, 6))
+        eng = eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
+        stats = eng.run(reqs, max_ticks=300)
+        assert stats["completed"] == 4
+        assert stats["chunked_prefill_chunks"] == 6
+        for req in eng.completed:
+            oracle = _oracle_tokens(params, cfg, req, ecfg.max_cache, bias)
+            assert req.out_tokens == oracle, f"moe request {req.rid} diverged"
+
+    def test_recurrent_chunked_prefill_token_identical(self):
+        """Position-free recurrent config (mamba2): chunked prefill resumes the
+        SSD recurrence + conv tail across chunks; aligned lengths make it
+        bitwise-identical to the one-shot oracle."""
+        cfg = _smoke_cfg("mamba2-130m")
+        params = _params(cfg)
+        ecfg = eng_mod.EngineConfig(num_slots=2, max_cache=48, policy="fifo",
+                                    prefill_chunk=8)
+        reqs = _make_requests(cfg, 4, seed=1, prompt_lens=(16, 8), steps=(4, 6))
+        eng = eng_mod.Engine(params, cfg, ecfg)
+        stats = eng.run(reqs, max_ticks=300)
+        assert stats["completed"] == 4
+        assert stats["chunked_prefill_chunks"] == 6
+        assert stats["mid_stream_admissions"] >= 1
+        for req in eng.completed:
+            oracle = _oracle_tokens(params, cfg, req, ecfg.max_cache, None)
+            assert req.out_tokens == oracle, f"ssm request {req.rid} diverged"
 
     @pytest.mark.parametrize("arch", ["granite-moe-3b-a800m", "paligemma-3b",
                                       "musicgen-medium"])
@@ -135,13 +203,50 @@ class TestEngineMechanics:
         assert len(req.out_tokens) == 1
         assert req.finish_tick == req.admit_tick
 
-    def test_submit_rejects_oversized_request(self, dense):
+    def test_submit_rejects_oversized_request_without_raising(self, dense):
+        """A prompt+decode budget that can never fit a slot is shed at submit —
+        recorded and counted against goodput — not raised mid-stream: an
+        open-loop server drops what it cannot serve, it does not crash."""
         cfg, params = dense
         ecfg = eng_mod.EngineConfig(num_slots=2, max_cache=16)
         eng = eng_mod.Engine(params, cfg, ecfg)
-        [req] = _make_requests(cfg, 1, prompt_lens=(12,), steps=(8,))
-        with pytest.raises(ValueError, match="max_cache"):
-            eng.submit(req)
+        big, ok = _make_requests(cfg, 2, prompt_lens=(12, 6), steps=(8, 4))
+        eng.submit(big)                       # 12 + 8 = 20 > 16: rejected
+        eng.submit(ok)                        # 6 + 4 = 10: queued
+        assert eng.rejected == [big] and list(eng.queue) == [ok]
+        stats = eng.run([], max_ticks=50)     # drain the queued request
+        assert stats["completed"] == 1 and stats["rejected"] == 1
+        assert big.out_tokens == []
+        # the rejected request still counts as demand in goodput
+        assert stats["goodput"] <= 0.5
+
+    def test_out_of_pages_backpressure_defers_then_serves(self, dense):
+        """Page exhaustion is backpressure, not an error: with pages for only
+        one request in flight, the second waits in the queue until the first
+        retires, then completes. Nothing is dropped, slots never share pages."""
+        cfg, params = dense
+        # a pool with fewer pages than one slot's worth: a request that fits
+        # max_cache but needs more pages than the whole pool has is rejected at
+        # submit (it could never be admitted), not left camping in the queue
+        tiny = eng_mod.EngineConfig(num_slots=2, max_cache=32, page_size=16,
+                                    num_pages=2, policy="fifo")  # 1 usable page
+        tiny_eng = eng_mod.Engine(params, cfg, tiny)
+        [two_pager] = _make_requests(cfg, 1, prompt_lens=(10,), steps=(8,))
+        tiny_eng.submit(two_pager)            # needs 2 pages, pool has 1
+        assert tiny_eng.rejected == [two_pager] and not tiny_eng.queue
+
+        ecfg = eng_mod.EngineConfig(num_slots=2, max_cache=32, page_size=16,
+                                    num_pages=3, policy="fifo")  # 2 usable pages
+        eng = eng_mod.Engine(params, cfg, ecfg)
+        reqs = _make_requests(cfg, 2, prompt_lens=(10,), steps=(8,))
+        stats = eng.run(reqs, max_ticks=100)  # each request needs 2 pages
+        assert stats["completed"] == 2 and stats["rejected"] == 0
+        assert stats["concurrency_hw"] == 1, \
+            "page budget for one request admitted two at once"
+        assert stats["pages_hw"] <= 2
+        r0, r1 = sorted(eng.completed, key=lambda r: r.rid)
+        assert r1.admit_tick >= r0.finish_tick, \
+            "second request admitted before the first released its pages"
 
 
 class TestImmuneAdmission:
