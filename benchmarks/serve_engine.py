@@ -1,8 +1,9 @@
-"""Continuous-batching engine: paged KV + chunked prefill vs fixed rows, and
-immune admission vs FIFO, under bursty heterogeneous traffic.
+"""Continuous-batching engine: paged KV + chunked prefill vs fixed rows,
+prefix sharing on vs off, and immune admission vs FIFO.
 
-Two engine layouts run the same synthetic open-loop trace at **equal usable KV
-memory** (``budget_slots * max_cache`` cache tokens):
+**Layout comparison** — two engine layouts run the same bursty heterogeneous
+open-loop trace at **equal usable KV memory** (``budget_slots * max_cache``
+cache tokens):
 
   * ``fixed`` — the PR 2 engine expressed as the degenerate paged config
     (``page_size == max_cache``, one page per slot, reserved whole at
@@ -13,13 +14,19 @@ memory** (``budget_slots * max_cache`` cache tokens):
     the same memory, and long prompts land chunk-by-chunk without stalling
     running decodes.
 
-Traffic is bursty and heterogeneous: mostly light chat-style requests plus a
-heavy class (long prompt + long decode) that stresses the latency budget — the
-head-of-line convoy case where worst-case row reservations choke admission.
 The budget is set so the immune gate *orders* rather than sheds here: when one
 layout sheds a heavy the other serves, the served heavy lands in the tail and
 p99-over-completions stops comparing like with like (the shed-vs-serve dynamic
 itself is pinned by ``tests/test_serve_engine.py::TestImmuneVsFifo``).
+
+**Prefix-sharing comparison** — the same engine twice, sharing on vs off, on
+*system-prompt* traffic (a few fixed prefixes × many random suffixes) at an
+identical tight page budget: share-off worst-cases every prompt from the free
+list, share-on adopts the resident prefix pages with refcount++ and charges
+only the unshared tail, so it packs more concurrent requests into the same
+pages (or the same concurrency into fewer). Every share-on completion is also
+replayed through one-shot ``decode.generate`` — the tokens must be bitwise
+identical, and the JSON records that bit.
 
 Latencies are in engine *ticks* (one decode step for the whole slot pool), so
 results are deterministic and hardware-independent. Results go to a CSV and to
@@ -34,12 +41,14 @@ from __future__ import annotations
 import argparse
 import json
 import os
+from typing import Optional
 
 import jax
 import numpy as np
 
 from repro import configs
 from repro.models import model
+from repro.serve import decode as decode_mod
 from repro.serve import engine as eng_mod
 
 ENGINES = {
@@ -70,7 +79,7 @@ def run(arch: str = "smollm-360m", num_requests: int = 40, budget_slots: int = 4
         max_cache: int = 64, latency_budget: float = 32.0,
         seeds: tuple = (0, 1, 2),
         out_csv: str = "benchmarks/results/serve_engine.csv",
-        out_json: str = "BENCH_serve.json") -> dict:
+        out_json: Optional[str] = "BENCH_serve.json") -> dict:
     cfg = configs.get_config(arch).smoke()
     params = model.init_params(jax.random.PRNGKey(0), cfg)
 
@@ -151,9 +160,86 @@ def run(arch: str = "smollm-360m", num_requests: int = 40, budget_slots: int = 4
         for r in rows:
             fh.write(",".join(f"{r[c]:.3f}" if isinstance(r[c], float)
                               else str(r[c]) for c in cols) + "\n")
-    with open(out_json, "w") as fh:
-        json.dump(result, fh, indent=1)
+    if out_json is not None:
+        with open(out_json, "w") as fh:
+            json.dump(result, fh, indent=1)
     return result
+
+
+def run_prefix(arch: str = "smollm-360m", num_requests: int = 28,
+               num_slots: int = 10, max_cache: int = 64, page_size: int = 16,
+               budget_pages: int = 12, seeds: tuple = (0, 1),
+               parity_requests: int = 8) -> dict:
+    """Prefix sharing on vs off on system-prompt traffic at an identical tight
+    page budget. Sharing admits deeper (only unshared pages are charged), so
+    the on-engine should sustain materially more concurrent slots — and its
+    tokens must stay bitwise one-shot-exact."""
+    cfg = configs.get_config(arch).smoke()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+
+    rows = []
+    parity_exact = True
+    for seed in seeds:
+        for share in (False, True):
+            ecfg = eng_mod.EngineConfig(
+                num_slots=num_slots, max_cache=max_cache, policy="fifo",
+                page_size=page_size, num_pages=budget_pages + 1,
+                prefill_chunk=page_size, prefill_streams=2,
+                prefix_sharing=share)
+            trace = eng_mod.shared_prefix_trace(
+                cfg, num_requests=num_requests, num_prefixes=2, prefix_len=32,
+                suffix_lens=(4, 8), decode_lens=(6, 10), arrival_every=1,
+                seed=seed)
+            eng = eng_mod.Engine(params, cfg, ecfg)
+            s = eng.run(trace, max_ticks=50 * num_requests)
+            s.update(seed=seed, engine="share_on" if share else "share_off")
+            rows.append(s)
+            if share and seed == seeds[0]:
+                for req in eng.completed[:parity_requests]:
+                    toks, _ = decode_mod.generate(
+                        params, cfg, req.prompts(), max_cache=max_cache,
+                        steps=req.max_new_tokens)
+                    if req.out_tokens != [int(t) for t in np.asarray(toks[0])]:
+                        parity_exact = False
+        by = {r["engine"]: r for r in rows if r["seed"] == seed}
+        on, off = by["share_on"], by["share_off"]
+        print(f"seed {seed}: share-on concurrency {on['concurrency_hw']} vs "
+              f"{off['concurrency_hw']} | p99 {on['p99_latency']:.1f} vs "
+              f"{off['p99_latency']:.1f} ticks | pages hw {on['pages_hw']} vs "
+              f"{off['pages_hw']} of {budget_pages} | hit rate "
+              f"{on['prefix_hit_rate']:.2f} | {on['cow_forks']} CoW forks | "
+              f"{on['prefill_positions_skipped']} prefill positions skipped")
+
+    def mean(engine, key):
+        return float(np.mean([r[key] for r in rows if r["engine"] == engine]))
+
+    summary = {
+        "budget_pages": budget_pages,
+        "share_on_p99": mean("share_on", "p99_latency"),
+        "share_off_p99": mean("share_off", "p99_latency"),
+        "share_on_concurrency_hw": mean("share_on", "concurrency_hw"),
+        "share_off_concurrency_hw": mean("share_off", "concurrency_hw"),
+        "share_on_pages_hw": mean("share_on", "pages_hw"),
+        "share_off_pages_hw": mean("share_off", "pages_hw"),
+        "prefix_hit_rate": mean("share_on", "prefix_hit_rate"),
+        "cow_forks": mean("share_on", "cow_forks"),
+        "prefill_positions_skipped": mean("share_on",
+                                          "prefill_positions_skipped"),
+        "share_parity_exact": parity_exact,
+    }
+    summary["checks"] = {
+        # the acceptance bar: at equal page budget, sharing sustains >= 1.5x
+        # the concurrency OR >= 30% lower pages high-water — and is exact
+        "sharing_concurrency_or_pages_win":
+            summary["share_on_concurrency_hw"]
+            >= 1.5 * summary["share_off_concurrency_hw"]
+            or summary["share_on_pages_hw"]
+            <= 0.7 * summary["share_off_pages_hw"],
+        "share_p99_no_worse": summary["share_on_p99"]
+        <= summary["share_off_p99"],
+        "share_parity_exact": parity_exact,
+    }
+    return {"rows": rows, "summary": summary}
 
 
 def main():
@@ -170,7 +256,13 @@ def main():
 
     n = 24 if args.smoke else 40
     res = run(arch=args.arch, num_requests=n, seeds=tuple(args.seeds),
-              out_json=args.json)
+              out_json=None)                  # single JSON write, below
+    res["prefix_sharing"] = run_prefix(
+        arch=args.arch, num_requests=16 if args.smoke else 28,
+        seeds=tuple(args.seeds)[:2])
+    with open(args.json, "w") as fh:
+        json.dump(res, fh, indent=1)
+
     s = res["summary"]
     ok = all(s["checks"].values())
     print(f"mean p99: paged+chunked {s['paged_immune_p99']:.1f} vs fixed "
@@ -178,6 +270,14 @@ def main():
           f"{s['paged_concurrency_hw']:.1f} vs {s['fixed_concurrency_hw']:.1f}"
           f" | checks {'OK' if ok else 'REGRESSION'}: "
           f"{json.dumps(s['checks'])}")
+    p = res["prefix_sharing"]["summary"]
+    pok = all(p["checks"].values())
+    print(f"prefix sharing: concurrency {p['share_on_concurrency_hw']:.1f} vs "
+          f"{p['share_off_concurrency_hw']:.1f} off | pages hw "
+          f"{p['share_on_pages_hw']:.1f} vs {p['share_off_pages_hw']:.1f} | "
+          f"hit rate {p['prefix_hit_rate']:.2f} | parity "
+          f"{'exact' if p['share_parity_exact'] else 'BROKEN'} | checks "
+          f"{'OK' if pok else 'REGRESSION'}: {json.dumps(p['checks'])}")
 
 
 if __name__ == "__main__":

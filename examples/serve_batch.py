@@ -6,9 +6,14 @@ per-family decode state (attention KV / SSM state / RG-LRU ring buffers).
 ``--engine`` demos continuous batching instead: staggered requests are admitted
 mid-stream into a paged slot pool (prompts land chunk-by-chunk in block-table
 pages while other slots keep decoding), finished sequences retire and their
-pages return to the free list for reuse.
+pages return to the free list for reuse. Half the requests share a common
+prompt prefix, so with ``--prefix-sharing`` (default) admission adopts the
+resident prefix pages with refcount++ instead of re-prefilling them;
+``--attn-backend pallas_interpret`` decodes through the Pallas block-table
+kernel instead of the XLA gather.
 
-    PYTHONPATH=src python examples/serve_batch.py --engine [--arch qwen3-4b]
+    PYTHONPATH=src python examples/serve_batch.py --engine [--arch qwen3-4b] \
+        [--no-prefix-sharing] [--attn-backend pallas_interpret]
 """
 import argparse
 import os
@@ -33,6 +38,12 @@ def main():
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--engine", action="store_true",
                     help="continuous-batching engine demo (staggered arrivals)")
+    ap.add_argument("--prefix-sharing", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="refcounted prompt-prefix page sharing in the engine")
+    ap.add_argument("--attn-backend", default="xla",
+                    choices=("xla", "pallas", "pallas_interpret"),
+                    help="paged decode attention backend for the engine")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch).smoke()
@@ -79,14 +90,22 @@ def _engine_demo(params, cfg, args):
     ecfg = eng_mod.EngineConfig(
         num_slots=min(args.batch, 4),
         max_cache=-(-(args.prompt_len + args.steps + 16) // 16) * 16,
-        prefill_chunk=16)
+        prefill_chunk=16,
+        prefix_sharing=args.prefix_sharing,
+        attn_backend=args.attn_backend)
     rng = np.random.default_rng(0)
+    # half the requests ride a common "system prompt" prefix: with sharing on,
+    # its pages are prefilled once and adopted (refcount++) by every follower
+    prefix = rng.integers(0, cfg.vocab_size,
+                          size=args.prompt_len).astype(np.int32)
     reqs = []
     for rid in range(2 * ecfg.num_slots + 2):      # forces slot reuse
         plen = (args.prompt_len // 2, args.prompt_len)[rid % 2]
+        toks = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        if rid % 2:
+            toks = np.concatenate([prefix, toks[:4]])
         req = eng_mod.Request(
-            rid=rid,
-            tokens=rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
+            rid=rid, tokens=toks,
             max_new_tokens=(args.steps // 4, args.steps // 2)[rid % 2],
             rclass=rid % 2, arrival=2 * rid)
         reqs.append(eng_mod.attach_modality_inputs(req, cfg, rng))
@@ -100,7 +119,13 @@ def _engine_demo(params, cfg, args):
           f"{stats['ticks']} ticks ({dt:.1f}s incl. compile); "
           f"{stats['mid_stream_admissions']} admitted mid-stream, "
           f"{stats['chunked_prefill_chunks']} prefill chunks, pages high-water "
-          f"{stats['pages_hw']}/{stats['pages_budget']}")
+          f"{stats['pages_hw']}/{stats['pages_budget']} "
+          f"[{stats['attn_backend']} decode]")
+    print(f"  prefix sharing {'on' if stats['prefix_sharing'] else 'off'}: "
+          f"hit rate {stats['prefix_hit_rate']:.2f}, "
+          f"{stats['shared_pages_adopted']} pages adopted, "
+          f"{stats['cow_forks']} CoW forks, "
+          f"{stats['prefill_positions_skipped']} prefill positions skipped")
     for r in sorted(eng.completed, key=lambda r: r.rid):
         print(f"  req {r.rid}: slot {r.slot}, ticks {r.admit_tick}"
               f"-{r.finish_tick}: {r.out_tokens[:12]}"

@@ -6,10 +6,14 @@ restoring trained parameters from a checkpoint directory.
 
 ``--stream`` switches from the one-shot fixed batch to the continuous-batching
 engine driven by a synthetic open-loop arrival trace (bursty, heterogeneous
-request classes), with admission governed by the immune primitives:
+request classes — or ``--trace shared-prefix`` for system-prompt traffic that
+exercises refcounted prefix page sharing), with admission governed by the
+immune primitives:
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
-        --stream --requests 40 --slots 4 [--policy fifo]
+        --stream --requests 40 --slots 4 [--policy fifo] \
+        [--trace shared-prefix] [--no-prefix-sharing] \
+        [--attn-backend pallas_interpret] [--prefill-streams 2]
 """
 from __future__ import annotations
 
@@ -50,6 +54,23 @@ def main():
                          "provisioned (slots x max_cache worth)")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="chunked prefill size; 0 = one-shot prefill")
+    ap.add_argument("--prefill-streams", type=int, default=1,
+                    help=">1: batch that many concurrent prefill jobs into "
+                         "one compiled call per tick (attention stacks)")
+    ap.add_argument("--prefix-sharing", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="refcounted prompt-prefix page sharing (CoW forks); "
+                         "--no-prefix-sharing for the single-owner allocator")
+    ap.add_argument("--attn-backend", default="xla",
+                    choices=("xla", "pallas", "pallas_interpret"),
+                    help="paged decode attention: XLA gather fallback, or the "
+                         "kernels.paged_attention Pallas kernel (pallas = "
+                         "compiled on TPU, pallas_interpret = runs anywhere)")
+    ap.add_argument("--trace", default="bursty",
+                    choices=("bursty", "shared-prefix"),
+                    help="synthetic arrival trace: bursty heterogeneous, or "
+                         "system-prompt traffic (a few prefixes x many "
+                         "suffixes) that exercises prefix sharing")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -84,9 +105,18 @@ def main():
             policy=args.policy, num_classes=3,
             latency_budget=args.latency_budget,
             page_size=args.page_size, num_pages=args.pages,
-            prefill_chunk=args.prefill_chunk)
-        trace = eng_mod.synthetic_trace(cfg, num_requests=args.requests,
-                                        heavy_tokens=args.steps + 8)
+            prefill_chunk=args.prefill_chunk,
+            prefix_sharing=args.prefix_sharing,
+            attn_backend=args.attn_backend,
+            prefill_streams=args.prefill_streams)
+        if args.trace == "shared-prefix":
+            trace = eng_mod.shared_prefix_trace(
+                cfg, num_requests=args.requests,
+                prefix_len=max(args.prompt_len, 2 * args.page_size),
+                decode_lens=(args.steps // 2, args.steps))
+        else:
+            trace = eng_mod.synthetic_trace(cfg, num_requests=args.requests,
+                                            heavy_tokens=args.steps + 8)
         eng = eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
         with mesh:
             t0 = time.perf_counter()
@@ -103,7 +133,15 @@ def main():
         print(f"  paged KV: {stats['pages_hw']}/{stats['pages_budget']} pages "
               f"high-water x {stats['page_size']} tokens | up to "
               f"{stats['concurrency_hw']} concurrent | "
-              f"{stats['chunked_prefill_chunks']} prefill chunks landed")
+              f"{stats['chunked_prefill_chunks']} prefill chunks landed in "
+              f"{stats['prefill_batch_calls']} batched calls "
+              f"[{stats['attn_backend']} decode]")
+        print(f"  prefix sharing {'on' if stats['prefix_sharing'] else 'off'}:"
+              f" hit rate {stats['prefix_hit_rate']:.2f} | "
+              f"{stats['shared_pages_adopted']} pages adopted | "
+              f"{stats['cow_forks']} CoW forks | "
+              f"{stats['prefill_positions_skipped']} prefill positions "
+              f"skipped")
         for r in eng.completed[:4]:
             print(f"  req {r.rid} (class {r.rclass}): arrived {r.arrival}, "
                   f"admitted {r.admit_tick}, finished {r.finish_tick}: "

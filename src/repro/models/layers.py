@@ -390,13 +390,21 @@ def _gather_pages(pages: Array, table: Array) -> Array:
 
 
 def attention_decode_paged(params, x: Array, cfg: ModelConfig, cache: dict,
-                           pos: Array, table: Array, active: Array):
+                           pos: Array, table: Array, active: Array,
+                           backend: str = "xla"):
     """One-token decode against a paged KV cache.
 
     cache: {'k','v': (P, page, Hkv, D)} physical page pools; ``pos`` (B,) is each
     slot's cache position; ``table`` (B, maxp) the block table; ``active`` (B,)
     routes the writes of inactive slots to the null page so a garbage lane can
     never dirty a page a mid-prefill slot already owns.
+
+    ``backend`` picks the attention compute: ``"xla"`` gathers the pages into a
+    dense (B, maxp*page, ...) K/V and runs the masked-softmax oracle (bitwise
+    the dense slot-row path); ``"pallas"`` / ``"pallas_interpret"`` run the
+    ``kernels.paged_attention`` scalar-prefetch kernel instead — the block
+    table becomes the DMA schedule and no contiguous K/V tensor ever exists.
+    Writes are identical either way, so the backends can be swapped mid-stream.
     """
     b = x.shape[0]
     pos = jnp.asarray(pos)
@@ -407,11 +415,19 @@ def attention_decode_paged(params, x: Array, cfg: ModelConfig, cache: dict,
     off = pos % page
     ck = cache["k"].at[pidx, off].set(k[:, 0])
     cv = cache["v"].at[pidx, off].set(v[:, 0])
-    gk = _gather_pages(ck, table)                      # (B, maxp*page, Hk, D)
-    gv = _gather_pages(cv, table)
-    kpos = jnp.arange(gk.shape[1])[None, :]
-    mask = kpos <= pos[:, None]                        # (B, S)
-    out = _sdpa(q, gk, gv, mask[:, None, :], cfg)
+    if backend != "xla":
+        # deferred import: layers must stay importable without the kernel pkg
+        from ..kernels.paged_attention import paged_attention as paged_kernel
+        interpret = True if backend == "pallas_interpret" else None
+        out = paged_kernel(q[:, 0], ck, cv, table,
+                           (pos + 1).astype(jnp.int32), interpret=interpret)
+        out = out.reshape(b, 1, -1).astype(v.dtype)
+    else:
+        gk = _gather_pages(ck, table)                  # (B, maxp*page, Hk, D)
+        gv = _gather_pages(cv, table)
+        kpos = jnp.arange(gk.shape[1])[None, :]
+        mask = kpos <= pos[:, None]                    # (B, S)
+        out = _sdpa(q, gk, gv, mask[:, None, :], cfg)
     return out @ params["wo"], {"k": ck, "v": cv}
 
 
@@ -436,6 +452,35 @@ def attention_prefill_paged(params, x: Array, cfg: ModelConfig, cache: dict,
     gv = _gather_pages(cv, table_row)[None]
     kpos = jnp.arange(gk.shape[1])[None, :]
     mask = (kpos <= lpos[:, None])[None]               # (1, C, S)
+    out = _sdpa(q, gk, gv, mask, cfg)
+    return out @ params["wo"], {"k": ck, "v": cv}
+
+
+def attention_prefill_paged_multi(params, x: Array, cfg: ModelConfig,
+                                  cache: dict, tables: Array, p0s: Array):
+    """``J`` concurrent prefill chunks, one per lane, in a single call.
+
+    x: (J, C, D) — each lane is one in-flight chunked-prefill job's chunk;
+    ``tables`` (J, maxp) each lane's block-table row; ``p0s`` (J,) each chunk's
+    first absolute position. Lanes write into disjoint page sets (the allocator
+    guarantees a writable page has exactly one owner), except padding lanes,
+    whose all-null tables route every write to the null/trash page. Each lane's
+    math is row-independent and shape-identical to the single-job path, so
+    batching jobs costs no exactness — it just turns J prefill dispatches per
+    tick into one.
+    """
+    j, c, _ = x.shape
+    lpos = p0s[:, None] + jnp.arange(c)[None, :]       # (J, C) absolute
+    q, k, v = _qkv(params, x, cfg, lpos)
+    page = cache["k"].shape[1]
+    pidx = jnp.take_along_axis(tables, lpos // page, axis=1)   # (J, C)
+    off = lpos % page
+    ck = cache["k"].at[pidx, off].set(k)
+    cv = cache["v"].at[pidx, off].set(v)
+    gk = _gather_pages(ck, tables)                     # (J, maxp*page, Hk, D)
+    gv = _gather_pages(cv, tables)
+    kpos = jnp.arange(gk.shape[1])[None, None, :]
+    mask = kpos <= lpos[:, :, None]                    # (J, C, S)
     out = _sdpa(q, gk, gv, mask, cfg)
     return out @ params["wo"], {"k": ck, "v": cv}
 

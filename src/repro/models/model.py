@@ -124,7 +124,8 @@ def prefill(params, cfg: ModelConfig, batch: dict, cache: dict,
 def decode_step(params, cfg: ModelConfig, batch: dict, cache: dict,
                 router_bias: Optional[Array] = None,
                 table: Optional[Array] = None,
-                active: Optional[Array] = None):
+                active: Optional[Array] = None,
+                attn_backend: str = "xla"):
     """One-token step for every sequence in the batch. Returns (logits, new_cache).
 
     ``table`` (B, maxp) switches full-attention layers onto the paged KV pool.
@@ -132,13 +133,15 @@ def decode_step(params, cfg: ModelConfig, batch: dict, cache: dict,
     state, ring buffers) of inactive slots: a garbage lane must never advance
     state a chunked prefill is threading through that row between ticks. The
     paged leaves don't need the freeze — inactive writes are routed to the
-    null page inside ``attention_decode_paged``."""
+    null page inside ``attention_decode_paged``. ``attn_backend`` picks the
+    paged attention compute: ``"xla"`` (dense gather oracle) or
+    ``"pallas"`` / ``"pallas_interpret"`` (the block-table Pallas kernel)."""
     x = _embed(params, cfg, batch["token"])
     if cfg.family == "audio":
         x = x + frontends.project_frontend(params["frontend"], batch["frame"])
     x, layer_caches = transformer.apply_stack_decode(
         params["stack"], x, cfg, cache["layers"], cache["pos"], bias=router_bias,
-        table=table, active=active)
+        table=table, active=active, attn_backend=attn_backend)
     if active is not None:
         def freeze(kind, new, old):
             if kind in ("attn", "moe"):
@@ -229,6 +232,43 @@ def prefill_chunk(params, cfg: ModelConfig, batch: dict, pool: dict,
     logits = _head(params, cfg,
                    jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1))
     return logits, {"layers": layer_caches, "pos": pool["pos"]}
+
+
+def prefill_chunk_multi(params, cfg: ModelConfig, batch: dict, pool: dict,
+                        tables: Array, p0s: Array, last_idx: Array,
+                        router_bias: Optional[Array] = None):
+    """J concurrent prefill chunks (one in-flight job per lane) in one call.
+
+    ``batch["tokens"]`` is (J, C); ``tables`` (J, maxp) each lane's block-table
+    row; ``p0s`` (J,) each chunk's first absolute position; ``last_idx`` (J,)
+    the in-chunk index of each prompt's final token (meaningful on a lane's
+    last chunk — the logits there seed its decoding). Attention-stack configs
+    only: lanes share no slot-row state, so J jobs cost one dispatch instead
+    of J without changing any lane's math. Padding lanes carry an all-null
+    table. The pool's ``pos`` is untouched; the engine activates each slot as
+    its final chunk lands."""
+    x = _embed(params, cfg, batch["tokens"])
+    x, layer_caches = transformer.apply_stack_prefill_chunk_multi(
+        params["stack"], x, cfg, pool["layers"], tables, p0s, bias=router_bias)
+    sel = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)   # (J, 1, d)
+    logits = _head(params, cfg, sel)
+    return logits, {"layers": layer_caches, "pos": pool["pos"]}
+
+
+def copy_page_paged(pool: dict, cfg: ModelConfig, src: Array, dst: Array) -> dict:
+    """Copy-on-write fork: duplicate physical page ``src`` into ``dst`` across
+    every paged (full-attention) layer pool. The caller then redirects the
+    forking slot's block table to ``dst`` and overwrites the tail; entries
+    beyond the shared prefix carry the donor's stale K/V, which is only ever
+    read masked (or overwritten by the fork owner's own writes)."""
+    def cp(kind, full_d):
+        if kind in ("attn", "moe"):
+            return jax.tree.map(lambda full: full.at[:, dst].set(full[:, src]),
+                                full_d)
+        return full_d
+
+    return {"layers": transformer.map_block_caches(cfg, cp, pool["layers"]),
+            "pos": pool["pos"]}
 
 
 def param_count(params) -> int:

@@ -97,17 +97,20 @@ def apply_block(p, x: Array, cfg: ModelConfig, kind: str,
 def apply_block_decode(p, x: Array, cfg: ModelConfig, kind: str, cache, pos,
                        bias: Optional[Array] = None,
                        table: Optional[Array] = None,
-                       active: Optional[Array] = None):
+                       active: Optional[Array] = None,
+                       attn_backend: str = "xla"):
     """One-token block step. Returns (x, new_cache, moe_stats | None).
     ``table``/``active`` switch full-attention layers onto the paged KV path
     (serving engine); sliding-window and recurrent layers keep their slot-row
-    caches either way."""
+    caches either way. ``attn_backend`` selects the paged attention compute
+    (XLA gather oracle vs the Pallas block-table kernel)."""
     stats = None
     h = rmsnorm(p["norm1"], x, cfg)
     if kind in ("attn", "moe"):
         if table is not None:
             y, cache = layers.attention_decode_paged(p["mixer"], h, cfg, cache,
-                                                     pos, table, active)
+                                                     pos, table, active,
+                                                     backend=attn_backend)
         else:
             y, cache = layers.attention_decode(p["mixer"], h, cfg, cache, pos)
         x = x + y
@@ -176,6 +179,28 @@ def apply_block_prefill_chunk(p, x: Array, cfg: ModelConfig, kind: str, cache,
         return x + y, cache, None
     else:
         raise NotImplementedError(f"chunked prefill unsupported for {kind!r}")
+    if kind == "moe":
+        y, stats = moe.moe_ffn(p["moe"], rmsnorm(p["norm2"], x, cfg), cfg, bias)
+        x = x + y
+    else:
+        x = x + layers.mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg), cfg)
+    return x, cache, stats
+
+
+def apply_block_prefill_chunk_multi(p, x: Array, cfg: ModelConfig, kind: str,
+                                    cache, tables: Array, p0s: Array,
+                                    bias: Optional[Array] = None):
+    """J concurrent prefill-chunk block steps against the paged pool in one
+    call — attention-stack kinds only (attn/moe carry no slot-row cache, so
+    lanes are fully independent; recurrent kinds stay on the one-job path)."""
+    if kind not in ("attn", "moe"):
+        raise NotImplementedError(f"batched chunk prefill unsupported for "
+                                  f"{kind!r}")
+    stats = None
+    h = rmsnorm(p["norm1"], x, cfg)
+    y, cache = layers.attention_prefill_paged_multi(p["mixer"], h, cfg, cache,
+                                                    tables, p0s)
+    x = x + y
     if kind == "moe":
         y, stats = moe.moe_ffn(p["moe"], rmsnorm(p["norm2"], x, cfg), cfg, bias)
         x = x + y
@@ -344,9 +369,11 @@ def apply_stack_prefill(stack_params: list, x: Array, cfg: ModelConfig, caches: 
 def apply_stack_decode(stack_params: list, x: Array, cfg: ModelConfig, caches: list,
                        pos: Array, bias: Optional[Array] = None,
                        table: Optional[Array] = None,
-                       active: Optional[Array] = None):
+                       active: Optional[Array] = None,
+                       attn_backend: str = "xla"):
     """One-token pass. Returns (x, new_caches). ``table``/``active`` select the
-    paged KV path for full-attention layers (closed over, same for every layer)."""
+    paged KV path for full-attention layers (closed over, same for every layer);
+    ``attn_backend`` picks its compute (XLA gather vs Pallas kernel)."""
     li = 0
     new_caches = []
     for (pattern, reps), seg_params, seg_cache in zip(segments(cfg), stack_params,
@@ -365,7 +392,8 @@ def apply_stack_decode(stack_params: list, x: Array, cfg: ModelConfig, caches: l
                 bi = None if b is None else b[pi]
                 xc, c2, _ = apply_block_decode(lp[pi], xc, cfg, kind, cs[pi], pos,
                                                bias=bi, table=table,
-                                               active=active)
+                                               active=active,
+                                               attn_backend=attn_backend)
                 new_cs.append(c2)
             return xc, new_cs
 
@@ -412,5 +440,40 @@ def apply_stack_prefill_chunk(stack_params: list, x: Array, cfg: ModelConfig,
                   full, row.astype(full.dtype), slot, axis=1), cs, c2)
               if kind not in ("attn", "moe") else c2
               for kind, cs, c2 in zip(pattern, seg_cache, nc)]
+        new_caches.append(nc)
+    return x, new_caches
+
+
+def apply_stack_prefill_chunk_multi(stack_params: list, x: Array,
+                                    cfg: ModelConfig, caches: list,
+                                    tables: Array, p0s: Array,
+                                    bias: Optional[Array] = None):
+    """J concurrent prefill chunks (one lane per in-flight job) in a single
+    pass against the paged pool — attn/moe stacks only, so there is no
+    slot-row state to slice and every lane is independent. Padding lanes carry
+    an all-null block table (writes land on the trash page, outputs are
+    discarded by the host). Returns (x, new_caches)."""
+    li = 0
+    new_caches = []
+    for (pattern, reps), seg_params, seg_cache in zip(segments(cfg), stack_params,
+                                                      caches):
+        npos = len(pattern)
+        seg_bias = None
+        if bias is not None:
+            seg_bias = bias[li:li + reps * npos].reshape(reps, npos, -1)
+        li += reps * npos
+
+        def body(carry, inp, pattern=pattern):
+            xc = carry
+            lp, cs, b = inp
+            new_cs = []
+            for pi, kind in enumerate(pattern):
+                bi = None if b is None else b[pi]
+                xc, c2, _ = apply_block_prefill_chunk_multi(
+                    lp[pi], xc, cfg, kind, cs[pi], tables, p0s, bias=bi)
+                new_cs.append(c2)
+            return xc, new_cs
+
+        x, nc = jax.lax.scan(body, x, (seg_params, seg_cache, seg_bias))
         new_caches.append(nc)
     return x, new_caches

@@ -29,6 +29,24 @@ Memory plane — the page-table layout:
     sliding-window ring buffers are O(1)/O(window) per slot and stay
     slot-indexed — only full attention carries a sequence-length reservation
     worth paging.
+  * **Prefix sharing** (``EngineConfig.prefix_sharing``): the allocator keeps
+    a refcounted index of full prompt pages keyed by their token content.
+    Admission walks a new prompt through it and *adopts* every hit —
+    refcount++ on a resident physical page instead of reserving and
+    re-prefilling it — so a thousand requests behind one system prompt hold
+    ONE copy of its KV and only pay prefill for their unshared tails:
+    O(unique tokens), not O(total), in both compute and pages. This is the
+    paper's immune memory applied to KV state — work the population has
+    already seen is recognized and not re-paid. A partial last-page hit is
+    adopted too and **copy-on-write forked** (fresh page + on-device copy of
+    the shared entries) before the slot's first write into it; shared full
+    pages are never written (decode writes land past the prompt), so only the
+    fork ever copies. Sharing is gated to configs where K/V is a pure function
+    of the token prefix (text-only attention/dropless-MoE stacks with chunked
+    prefill); recurrent state, frontend-conditioned and one-shot-prefill
+    families never share. Admission charges only the *unshared* pages against
+    ``available()``, so a prefix-hot request is admissible even when the pool
+    could not hold its worst case from the free list alone.
 
 Compute plane — chunked prefill (``EngineConfig.prefill_chunk > 0``): long
 prompts are sliced into decode-tick-sized chunks written straight into the
@@ -37,7 +55,14 @@ a long prefill no longer stalls occupied slots, and the engine compiles ONE
 chunk shape instead of one prefill shape per prompt length. Chunking applies
 where it is bitwise-exact (attention stacks; MoE at dropless expert capacity;
 SSM via state-resume when lengths align to ``ssm_chunk``); VLM prefix-LM,
-finite-capacity MoE, and RG-LRU hybrids fall back to one-shot prefill.
+finite-capacity MoE, and RG-LRU hybrids fall back to one-shot prefill. With
+``prefill_streams > 1`` (attention stacks only), up to that many in-flight
+prefill jobs advance per tick in ONE batched compiled call — concurrent long
+prompts no longer serialize chunk-per-tick behind each other. Decode runs the
+paged attention through ``EngineConfig.attn_backend``: the XLA gather
+fallback, or the ``kernels.paged_attention`` Pallas kernel ("pallas" on TPU,
+"pallas_interpret" anywhere) whose scalar-prefetch block-table index maps turn
+the gather into the DMA schedule itself.
 
 Admission is the immune loop applied to serving, per the anticipation argument
 of Boulmier et al. (PAPERS.md) — schedule on *remembered* cost, not
@@ -158,17 +183,23 @@ class EngineConfig(NamedTuple):
     #                                   fully provisioned (slots*maxp + 1),
     #                                   admission-equivalent to fixed rows
     prefill_chunk: int = 0            # >0: chunked prefill, one chunk per tick
+    prefix_sharing: bool = True       # refcounted prompt-prefix page sharing
+    attn_backend: str = "xla"         # "xla" | "pallas" | "pallas_interpret"
+    prefill_streams: int = 1          # >1: batch that many prefill jobs/tick
 
 
 @dataclass
 class _PrefillJob:
-    """An in-flight chunked prefill: one chunk lands per engine tick while the
-    other slots keep decoding; the slot activates when the last chunk lands."""
+    """An in-flight chunked prefill: chunks land tick by tick while the other
+    slots keep decoding; the slot activates when the last chunk lands. ``p0``
+    starts past the shared prefix when admission adopted resident pages —
+    only the unshared tail is ever computed."""
     req: Request
     slot: int
     p0: int          # next chunk's first absolute position
-    total: int       # padded prompt length (multiple of prefill_chunk)
+    total: int       # padded prompt end (p0 grid aligned to prefill_chunk)
     length: int      # true prompt length (incl. any frontend prefix)
+    share: bool = False   # register this prompt's full pages on completion
 
 
 # ---------------------------------------------------------------------------
@@ -204,6 +235,25 @@ def _prefill_chunk(params, cfg: ModelConfig, chunk: dict, pool, table_row, p0,
     return greedy(logits), pool
 
 
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(3,))
+def _prefill_chunks(params, cfg: ModelConfig, chunk: dict, pool, tables, p0s,
+                    last_idxs, router_bias):
+    """Land one chunk of up to ``prefill_streams`` concurrent prefill jobs in
+    ONE compiled call (attention stacks only); lanes beyond the live job count
+    are padding with all-null tables. Returns ((J, 1) greedy tokens, pool)."""
+    logits, pool = model.prefill_chunk_multi(params, cfg, chunk, pool, tables,
+                                             p0s, last_idxs,
+                                             router_bias=router_bias)
+    return greedy(logits), pool
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+def _copy_page(pool, src, dst, cfg: ModelConfig):
+    """Copy-on-write fork: duplicate physical page ``src`` into ``dst`` across
+    every paged layer before the forking slot's first write into it."""
+    return model.copy_page_paged(pool, cfg, src, dst)
+
+
 @partial(jax.jit, donate_argnums=(0, 1))
 def _activate(pool, last, active, slot, first, length):
     """Final chunk landed: set the slot's position, first token, active bit."""
@@ -222,21 +272,25 @@ def _release(pool, active, slot, cfg: ModelConfig):
 # pool and last are donated: the engine rebinds both from the return value each
 # tick, and without donation every decoded token would pay a fresh copy of the
 # whole pooled KV cache (the scan carry in decode._decode_loop gets this free)
-@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2, 3))
+@partial(jax.jit, static_argnames=("cfg", "attn_backend"),
+         donate_argnums=(2, 3))
 def _decode_tick(params, cfg: ModelConfig, pool, last, active, table,
-                 router_bias, frames):
+                 router_bias, frames, attn_backend="xla"):
     """One token for every slot (occupied or not) — the single compiled decode
     step. Inactive slots advance neither position nor state; their lane
     computes a garbage token that the host discards (paged K/V writes of
     inactive lanes are routed to the null page, slot-row caches are frozen),
     which keeps the step shape independent of occupancy AND keeps garbage
-    lanes from dirtying pages a mid-flight chunked prefill already owns."""
+    lanes from dirtying pages a mid-flight chunked prefill already owns.
+    ``attn_backend`` selects the paged attention compute (XLA gather vs the
+    Pallas block-table kernel)."""
     batch = {"token": last}
     if cfg.family == "audio":
         batch["frame"] = frames
     logits, new_pool = model.decode_step(params, cfg, batch, pool,
                                          router_bias=router_bias,
-                                         table=table, active=active)
+                                         table=table, active=active,
+                                         attn_backend=attn_backend)
     nxt = greedy(logits)                             # (S, 1)
     pos = jnp.where(active, new_pool["pos"], pool["pos"])
     last = jnp.where(active[:, None], nxt, last)
@@ -324,6 +378,8 @@ class Engine:
         if ecfg.prefill_chunk and ecfg.max_cache % ecfg.prefill_chunk:
             raise ValueError(f"max_cache {ecfg.max_cache} must be a multiple "
                              f"of prefill_chunk {ecfg.prefill_chunk}")
+        if ecfg.attn_backend not in ("xla", "pallas", "pallas_interpret"):
+            raise ValueError(f"unknown attn_backend {ecfg.attn_backend!r}")
         self.params, self.cfg, self.ecfg = params, cfg, ecfg
         self.router_bias = router_bias
         # MoE: the decode tick runs every slot, occupied or not, and expert
@@ -339,7 +395,20 @@ class Engine:
         self.maxp = ecfg.max_cache // ecfg.page_size
         num_pages = ecfg.num_pages if ecfg.num_pages is not None \
             else s * self.maxp + 1
-        self.alloc = PageAllocator(num_pages, ecfg.page_size, s, self.maxp)
+        self.alloc = PageAllocator(num_pages, ecfg.page_size, s, self.maxp,
+                                   share_prefix=ecfg.prefix_sharing)
+        kinds = set(transformer.layer_kinds(cfg))
+        # prefix sharing is only sound where a position's K/V is a pure
+        # function of the token prefix AND the unshared tail can run through
+        # chunked prefill: text-only attention/dropless-MoE stacks
+        self._share_ok = (ecfg.prefix_sharing and ecfg.prefill_chunk > 0
+                          and kinds <= {"attn", "moe"}
+                          and not cfg.frontend_dim and not cfg.frontend_tokens)
+        # batched prefill streams need lanes with no slot-row state and no
+        # per-position frontend inputs — same attention-stack gate
+        self._multi_prefill = (ecfg.prefill_streams > 1
+                               and kinds <= {"attn", "moe"}
+                               and cfg.family not in ("audio", "vlm"))
         self.pool = model.init_slot_cache_paged(cfg, s, ecfg.max_cache,
                                                 num_pages, ecfg.page_size)
         self.last = jnp.zeros((s, 1), jnp.int32)
@@ -360,7 +429,11 @@ class Engine:
         self.mid_stream_admissions = 0     # admissions while other slots decode
         self.unsubmitted = 0               # run() arrivals never reached
         self.concurrency_hw = 0            # max simultaneously occupied slots
-        self.chunked_prefill_chunks = 0    # chunk calls landed
+        self.chunked_prefill_chunks = 0    # chunk lanes landed
+        self.prefill_batch_calls = 0       # batched multi-job prefill dispatches
+        self.shared_pages_adopted = 0      # prefix-index hits turned refcount++
+        self.prefill_positions_skipped = 0  # prompt positions never recomputed
+        self.sharable_prompt_pages = 0     # hit-rate denominator (sharable reqs)
         self._admitted_this_tick = 0
         self._decoding_before_admit = False
 
@@ -405,23 +478,67 @@ class Engine:
             return len(req.tokens) % c == 0 and c % self.cfg.ssm_chunk == 0
         return False
 
-    def _need_pages(self, req: Request) -> int:
+    def _sharable(self, req: Request) -> bool:
+        """Prefix sharing needs both exactness conditions at once: K/V a pure
+        function of the token prefix (no frontend inputs, no recurrent state
+        that would be missing the shared positions) and a chunked tail prefill
+        to land only the unshared suffix."""
+        return self._share_ok and self._chunkable(req)
+
+    def _match(self, req: Request):
+        """Prefix-index match for ``req``, capped so the padded chunk tail
+        stays inside ``max_cache``. Returns ``(full_hits, partial, shared_len)``
+        — ``shared_len`` prompt positions already resident (never the last
+        prompt token: it is always recomputed to seed decoding)."""
+        if not self._sharable(req):
+            return [], None, 0
+        full, partial = self.alloc.match_prefix(req.tokens)
+        plen = len(req.tokens)
+        c, ps = self.ecfg.prefill_chunk, self.ecfg.page_size
+
+        def padded_end(sl):
+            return sl + -(-(plen - sl) // c) * c
+
+        sl = len(full) * ps + (partial[1] if partial else 0)
+        while sl and padded_end(sl) > self.ecfg.max_cache:
+            if partial is not None:       # degrade: drop the partial page,
+                partial = None            # then whole full pages, until the
+            else:                         # padded tail fits the block table
+                full = full[:-1]
+            sl = len(full) * ps
+        return full, partial, sl
+
+    def _need_pages(self, req: Request, shared_len: int = 0) -> int:
         """Worst-case pages this request can ever hold: prompt (+ chunk
-        padding) plus its full decode budget."""
+        padding of the unshared tail) plus its full decode budget."""
         plen = len(req.tokens) + self.cfg.frontend_tokens
         cover = plen + req.max_new_tokens
         if self._chunkable(req):
             c = self.ecfg.prefill_chunk
-            cover = max(cover, -(-plen // c) * c)
+            cover = max(cover, shared_len + -(-(plen - shared_len) // c) * c)
         return pages_for(cover, self.ecfg.page_size)
 
     def _table_row(self, slot: int) -> Array:
         return jnp.asarray(self.alloc.table()[slot])
 
     # -- admission -----------------------------------------------------------
-    def _admit_into(self, req: Request, slot: int):
-        self.alloc.reserve(slot, self._need_pages(req))
+    def _admit_into(self, req: Request, slot: int) -> bool:
+        """Try to admit ``req`` into ``slot``; False = not enough free pages
+        *after* prefix-share credit (the caller defers the request). A full-
+        page prefix hit is adopted (refcount++), never charged — only the
+        unshared pages reserve from the free pool."""
+        full, partial, sl = self._match(req)
+        charge = self._need_pages(req, sl) - len(full)
+        if not self.alloc.can_admit(charge):
+            return False
+        self.alloc.reserve(slot, charge)
+        if full:
+            self.alloc.adopt(slot, full)
         plen = len(req.tokens) + self.cfg.frontend_tokens
+        if self._sharable(req):
+            self.sharable_prompt_pages += pages_for(plen, self.ecfg.page_size)
+            self.shared_pages_adopted += len(full) + (1 if partial else 0)
+            self.prefill_positions_skipped += sl
         req.slot, req.admit_tick = slot, self.tick
         self.slots[slot] = req
         if self._decoding_before_admit:
@@ -429,10 +546,20 @@ class Engine:
         self._admitted_this_tick += 1
         c = self.ecfg.prefill_chunk
         if self._chunkable(req):
-            total = -(-plen // c) * c
-            self.jobs.append(_PrefillJob(req=req, slot=slot, p0=0, total=total,
-                                         length=plen))
-            return
+            if partial is not None:
+                # the unshared tail starts mid-page: adopt the donor's page,
+                # then immediately CoW-fork it (tail prefill writes into it
+                # this very admission) — the device copy replaces recomputing
+                # the shared positions
+                self.alloc.adopt(slot, [partial[0]])
+                src, dst = self.alloc.cow_fork(slot, len(full))
+                self.pool = _copy_page(self.pool, jnp.asarray(src),
+                                       jnp.asarray(dst), self.cfg)
+            total = sl + -(-(plen - sl) // c) * c
+            self.jobs.append(_PrefillJob(req=req, slot=slot, p0=sl, total=total,
+                                         length=plen,
+                                         share=self._sharable(req)))
+            return True
         first, one = _prefill_one(self.params, self.cfg, req.prompts(),
                                   self.ecfg.max_cache, self.router_bias)
         self.alloc.ensure(slot, pages_for(plen, self.ecfg.page_size))
@@ -442,6 +569,7 @@ class Engine:
         self.active_host[slot] = True
         self.pos_host[slot] = plen
         req.out_tokens.append(int(first[0, 0]))
+        return True
 
     def _admit(self):
         self._admitted_this_tick = 0
@@ -453,9 +581,10 @@ class Engine:
             return
         if self.admission is None:                      # FIFO baseline
             while free and self.queue:
-                if not self.alloc.can_admit(self._need_pages(self.queue[0])):
+                if not self._admit_into(self.queue[0], free[0]):
                     break     # strict FIFO: an unfit head blocks the line
-                self._admit_into(self.queue.popleft(), free.pop(0))
+                self.queue.popleft()
+                free.pop(0)
             return
         adm = self.admission
         # tolerance turned shedding: requests of anergic classes are rejected
@@ -476,10 +605,10 @@ class Engine:
         for req in candidates:
             if not free:
                 break
-            if not self.alloc.can_admit(self._need_pages(req)):
+            if not self._admit_into(req, free[0]):
                 continue
             self.queue.remove(req)
-            self._admit_into(req, free.pop(0))
+            free.pop(0)
 
     def _predicted_costs(self) -> np.ndarray:
         """Per-class cost estimate: the EMA memory, floored by what currently
@@ -493,14 +622,63 @@ class Engine:
         return cost
 
     # -- chunked prefill ------------------------------------------------------
+    def _finish_job(self, job: _PrefillJob, first):
+        """Final chunk landed: activate the slot and (for sharable prompts)
+        register its full prompt pages in the prefix index, so later
+        admissions can adopt them — the pages' K/V is now fully resident."""
+        self.pool, self.last, self.active = _activate(
+            self.pool, self.last, self.active, jnp.asarray(job.slot),
+            first, jnp.asarray(job.length, jnp.int32))
+        self.active_host[job.slot] = True
+        self.pos_host[job.slot] = job.length
+        job.req.out_tokens.append(int(first[0, 0]))
+        if job.share:
+            self.alloc.register_prefix(job.slot, job.req.tokens)
+
     def _prefill_tick(self):
-        """Land one chunk of the front prefill job (if any). One chunk per
-        engine tick: the job's slot stays inactive while the other slots
-        decode, so a long prompt never stalls the pool."""
+        """Land one chunk of up to ``prefill_streams`` front prefill jobs (one
+        batched compiled call on attention stacks; one job per tick
+        otherwise). The jobs' slots stay inactive while the other slots
+        decode, so long prompts never stall the pool — and with multiple
+        streams they no longer serialize behind each other either."""
         if not self.jobs:
             return
-        job = self.jobs[0]
         c, page = self.ecfg.prefill_chunk, self.ecfg.page_size
+        if self._multi_prefill:
+            j = self.ecfg.prefill_streams
+            take = [self.jobs.popleft()
+                    for _ in range(min(len(self.jobs), j))]
+            toks = np.zeros((j, c), np.int32)
+            tables = np.zeros((j, self.maxp), np.int32)   # padding lanes: null
+            p0s = np.zeros((j,), np.int32)
+            last_idxs = np.zeros((j,), np.int32)
+            for lane, job in enumerate(take):
+                end = job.p0 + c
+                self.alloc.ensure(job.slot, pages_for(end, page))
+                seg = job.req.tokens[job.p0:min(end, len(job.req.tokens))]
+                toks[lane, :len(seg)] = seg
+                p0s[lane] = job.p0
+                last_idxs[lane] = min(max(job.length - 1 - job.p0, 0), c - 1)
+            tbl = self.alloc.table()          # one snapshot after the ensures
+            for lane, job in enumerate(take):
+                tables[lane] = tbl[job.slot]
+            firsts, self.pool = _prefill_chunks(
+                self.params, self.cfg, {"tokens": jnp.asarray(toks)},
+                self.pool, jnp.asarray(tables), jnp.asarray(p0s),
+                jnp.asarray(last_idxs), self.router_bias)
+            self.chunked_prefill_chunks += len(take)
+            self.prefill_batch_calls += 1
+            unfinished = []
+            for lane, job in enumerate(take):
+                job.p0 += c
+                if job.p0 >= job.total:
+                    self._finish_job(job, firsts[lane:lane + 1])
+                else:
+                    unfinished.append(job)
+            for job in reversed(unfinished):      # keep front-of-queue order
+                self.jobs.appendleft(job)
+            return
+        job = self.jobs[0]
         end = job.p0 + c
         self.alloc.ensure(job.slot, pages_for(end, page))
         toks = np.zeros((c,), np.int32)
@@ -512,7 +690,7 @@ class Engine:
             fseg = job.req.frames[job.p0:min(end, len(job.req.frames))]
             fr[:len(fseg)] = fseg
             chunk["frames"] = jnp.asarray(fr)[None]
-        last_idx = min(job.length - 1 - job.p0, c - 1)
+        last_idx = min(max(job.length - 1 - job.p0, 0), c - 1)
         first, self.pool = _prefill_chunk(
             self.params, self.cfg, chunk, self.pool, self._table_row(job.slot),
             jnp.asarray(job.p0, jnp.int32), jnp.asarray(last_idx, jnp.int32),
@@ -521,12 +699,7 @@ class Engine:
         job.p0 = end
         if end >= job.total:
             self.jobs.popleft()
-            self.pool, self.last, self.active = _activate(
-                self.pool, self.last, self.active, jnp.asarray(job.slot),
-                first, jnp.asarray(job.length, jnp.int32))
-            self.active_host[job.slot] = True
-            self.pos_host[job.slot] = job.length
-            job.req.out_tokens.append(int(first[0, 0]))
+            self._finish_job(job, first)
 
     # -- retirement ----------------------------------------------------------
     def _finished(self, req: Request) -> bool:
@@ -571,7 +744,8 @@ class Engine:
                                   pages_for(int(self.pos_host[slot]) + 1, page))
             nxt, self.last, self.pool = _decode_tick(
                 self.params, self.cfg_decode, self.pool, self.last, self.active,
-                jnp.asarray(self.alloc.table()), self.router_bias, self.frames)
+                jnp.asarray(self.alloc.table()), self.router_bias, self.frames,
+                attn_backend=self.ecfg.attn_backend)
             nxt_host = np.asarray(nxt[:, 0])
             for slot, req in enumerate(self.slots):
                 if req is not None and self.active_host[slot] \
@@ -645,6 +819,17 @@ class Engine:
             "pages_hw": self.alloc.high_water,
             "concurrency_hw": self.concurrency_hw,
             "chunked_prefill_chunks": self.chunked_prefill_chunks,
+            "prefill_batch_calls": self.prefill_batch_calls,
+            # prefix-sharing telemetry: adopted = refcount++ instead of
+            # reserve+prefill; hit rate over the prompt pages of sharable
+            # admissions; skipped = prompt positions never re-forwarded
+            "attn_backend": self.ecfg.attn_backend,
+            "prefix_sharing": bool(self.ecfg.prefix_sharing),
+            "shared_pages_adopted": self.shared_pages_adopted,
+            "cow_forks": self.alloc.cow_forks,
+            "prefill_positions_skipped": self.prefill_positions_skipped,
+            "prefix_hit_rate": self.shared_pages_adopted
+            / max(self.sharable_prompt_pages, 1),
         }
 
 
@@ -681,6 +866,37 @@ def synthetic_trace(cfg: ModelConfig, num_requests: int = 40, seed: int = 0,
             max_new_tokens=int(steps),
             rclass=rclass,
             arrival=burst * burst_every + int(rng.integers(0, 3)),
+        )
+        reqs.append(attach_modality_inputs(req, cfg, rng))
+    return reqs
+
+
+def shared_prefix_trace(cfg: ModelConfig, num_requests: int = 32,
+                        num_prefixes: int = 2, prefix_len: int = 32,
+                        suffix_lens: tuple = (4, 8),
+                        decode_lens: tuple = (6, 10),
+                        arrival_every: int = 2, seed: int = 0) -> list[Request]:
+    """System-prompt traffic: ``num_prefixes`` fixed prefixes, each followed by
+    a per-request random suffix — the workload where prefix page sharing turns
+    O(total tokens) of prefill + KV into O(unique tokens). Request class =
+    prefix id (the immune memory then tracks cost per system prompt). Suffix
+    and decode lengths come from tiny bucket sets so the engine compiles a
+    bounded number of shapes."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, cfg.vocab_size, size=prefix_len)
+                .astype(np.int32) for _ in range(num_prefixes)]
+    reqs = []
+    for rid in range(num_requests):
+        pfx = prefixes[rid % num_prefixes]
+        sfx = rng.integers(0, cfg.vocab_size,
+                           size=int(suffix_lens[rid % len(suffix_lens)])
+                           ).astype(np.int32)
+        req = Request(
+            rid=rid,
+            tokens=np.concatenate([pfx, sfx]),
+            max_new_tokens=int(decode_lens[rid % len(decode_lens)]),
+            rclass=rid % num_prefixes,
+            arrival=rid * arrival_every,
         )
         reqs.append(attach_modality_inputs(req, cfg, rng))
     return reqs

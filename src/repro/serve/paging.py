@@ -1,4 +1,5 @@
-"""Host-side block-table allocator for the paged KV cache (vLLM-style).
+"""Host-side block-table allocator for the paged KV cache (vLLM-style), with
+**refcounted prefix sharing** and copy-on-write forking.
 
 The device holds one physical page pool per attention layer, shaped
 ``(num_pages, page_size, kv_heads, head_dim)``; this module owns the *mapping*:
@@ -6,26 +7,52 @@ which physical pages belong to which decode slot, in logical order. The device
 side never sees the free list — only the dense ``(num_slots, max_pages_per_slot)``
 block table produced by :meth:`PageAllocator.table`.
 
+Ownership is **refcounted**: a physical page may appear in several slots' block
+tables at once when those slots share a prompt prefix. A host-side **prefix
+index** maps chains of *full pages of prompt token ids* to the physical page
+already holding their K/V: admission walks the new prompt's pages through the
+index and adopts every hit with ``refcount++`` instead of reserving and
+re-prefilling it (``adopt``). K/V at a position is a pure function of the token
+prefix for text-only stacks, so adopted pages are bitwise what the request's
+own prefill would have written — the caller gates sharing to such configs. The
+index is keyed by (interned chain-prefix id, full page token tuple) — content
+equality, not hashing — so a chain hit can never be a collision.
+
+A shared page is immutable to its adopters. When a slot must write into one —
+the unshared tail of its prompt starts mid-page after a partial-page hit — it
+**copy-on-write forks** it first (``cow_fork``): a fresh page replaces the
+shared one in this slot's chain, the shared page's refcount drops, and the
+caller copies the shared prefix entries on device before writing. A fork target
+always comes off the free list, so a fork can never alias a still-shared page.
+
 Layout invariants (the hypothesis suite in ``tests/test_paging.py`` churns these):
 
   * page 0 is the **null page**: never allocated, permanently parked. Unmapped
     block-table entries point at it, and the decode step routes the writes of
     inactive slots there, so it doubles as the trash page. Reads of it are
-    always masked (its logical positions are beyond every slot's ``pos``), so
-    its contents are irrelevant as long as they stay finite.
-  * no physical page is ever owned by two live slots;
-  * ``free + sum(owned) == num_pages - 1`` (conservation, null page excluded);
+    always masked, so its contents are irrelevant as long as they stay finite.
+  * ``sum(refcounts) == total live block-table entries`` — every owner of a
+    page is counted, and nothing else is;
+  * no page is ever on the free list while its refcount is > 0, and a page
+    whose refcount hits zero is freed immediately (free-on-zero) and dropped
+    from the prefix index — index entries only ever point at live pages;
+  * ``free + distinct live pages == num_pages - 1`` (conservation, null page
+    excluded — a shared page counts once, which is the memory win);
   * ``available()`` never goes negative: admission *reserves* a request's
-    worst-case page count up front (``reserve``), then pages are physically
-    appended lazily (``ensure``) as prefill chunks land and decode crosses page
-    boundaries — so a slot can never deadlock mid-decode waiting for a page
-    another slot might never release.
+    private (unshared) page count up front (``reserve``), then pages are
+    physically appended lazily (``ensure``) as prefill chunks land and decode
+    crosses page boundaries — so a slot can never deadlock mid-decode waiting
+    for a page another slot might never release. Adopted pages are never
+    charged against the reservation; a CoW fork draws one page from it.
 
-Reservation is per-request worst case (``ceil((prompt + decode budget)/page)``)
-— far smaller than the fixed-row engine's ``max_cache`` row, which is the whole
-point: mixed-length requests admit without the worst-case reservation.
+Reservation is per-request worst case over its *private* pages
+(``ceil((prompt + decode budget)/page) - shared full-page hits``) — with a hot
+shared prefix this is far below the unshared worst case, which is the point:
+prefix-heavy traffic admits O(unique tokens) of KV memory, not O(total).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import numpy as np
 
@@ -38,24 +65,44 @@ def pages_for(tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Free-list page allocator with per-slot reservations.
+    """Refcounted free-list page allocator with per-slot reservations and a
+    prefix-sharing index.
 
     ``num_pages`` counts the null page, so ``num_pages - 1`` pages are usable.
+    ``share_prefix=False`` disables the index (every page single-owner, the
+    pre-sharing behavior) without changing any other semantics.
     """
 
     def __init__(self, num_pages: int, page_size: int, num_slots: int,
-                 max_pages_per_slot: int):
+                 max_pages_per_slot: int, share_prefix: bool = True):
         if num_pages < 2:
             raise ValueError("need at least one usable page beyond the null page")
         self.num_pages = num_pages
         self.page_size = page_size
         self.num_slots = num_slots
         self.max_pages_per_slot = max_pages_per_slot
+        self.share_prefix = share_prefix
         # pop() order is ascending page id — cosmetic, but makes traces readable
         self._free = list(range(num_pages - 1, NULL_PAGE, -1))
         self._owned: list[list[int]] = [[] for _ in range(num_slots)]
         self._reserved = np.zeros(num_slots, np.int64)
+        self._ref = np.zeros(num_pages, np.int64)
+        # prefix index: a page holding the i-th full page of a prompt is keyed
+        # by (chain node id of pages 0..i-1, its own page_size token ids).
+        # Node ids *intern* chain prefixes — one id per distinct content path,
+        # assigned at registration — so a hit is still full-content equality
+        # (never a hash collision), but each dict access hashes O(page_size)
+        # instead of rehashing the whole nested prefix: index walks stay
+        # linear in the prompt length. Node id 0 is the empty chain.
+        self._index: dict[tuple, tuple] = {}    # (parent id, pt) -> (node, page)
+        # partial-match candidates, bucketed by (parent node, first token) so
+        # a busy divergence point (e.g. many distinct prompts under the root)
+        # never costs a linear scan over all its children
+        self._children: dict[tuple, set] = {}
+        self._page_key: dict[int, tuple] = {}   # page id -> its index key
+        self._next_node = 1
         self.high_water = 0
+        self.cow_forks = 0
 
     # -- accounting ----------------------------------------------------------
     @property
@@ -69,16 +116,115 @@ class PageAllocator:
     def owned(self, slot: int) -> list[int]:
         return list(self._owned[slot])
 
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def live_refs(self) -> int:
+        """Sum of all refcounts == total block-table entries across slots."""
+        return int(self._ref.sum())
+
     def available(self) -> int:
         """Pages neither allocated nor promised to a live slot."""
         return len(self._free) - int(self._reserved.sum())
 
     def can_admit(self, need_pages: int) -> bool:
+        """``need_pages`` is the request's *private* page count — full-page
+        prefix hits ride on adopted refcounts and are not charged here."""
         return need_pages <= min(self.available(), self.max_pages_per_slot)
+
+    # -- prefix index --------------------------------------------------------
+    @staticmethod
+    def _page_tokens(tokens, i: int, page_size: int) -> tuple:
+        return tuple(int(t) for t in tokens[i * page_size:(i + 1) * page_size])
+
+    def match_prefix(self, tokens) -> tuple[list, Optional[tuple]]:
+        """Walk ``tokens``'s full pages through the index.
+
+        Returns ``(full_hits, partial)``: ``full_hits`` are the physical pages
+        holding the longest indexed chain of full prompt pages; ``partial`` is
+        ``(page, r)`` when a child page of that chain additionally matches the
+        next ``r`` (< page_size) prompt tokens — adoptable, but the adopter
+        must ``cow_fork`` it before writing position ``r`` or beyond. The last
+        prompt token is never matched (capped at ``len(tokens) - 1``): the
+        caller always recomputes it to produce the first logits."""
+        if not self.share_prefix:
+            return [], None
+        ps = self.page_size
+        limit = len(tokens) - 1
+        full: list[int] = []
+        parent = 0
+        while (len(full) + 1) * ps <= limit:
+            pt = self._page_tokens(tokens, len(full), ps)
+            hit = self._index.get((parent, pt))
+            if hit is None:
+                break
+            parent, pid = hit
+            full.append(pid)
+        partial = None
+        rem = tuple(int(t) for t in tokens[len(full) * ps:limit])
+        if rem:
+            best, best_r = None, 0
+            for pid in self._children.get((parent, rem[0]), ()):
+                _, pt = self._page_key[pid]
+                r = 0
+                for a, b in zip(pt, rem):
+                    if a != b:
+                        break
+                    r += 1
+                if r > best_r:
+                    best, best_r = pid, r
+            if best is not None:
+                partial = (best, best_r)
+        return full, partial
+
+    def register_prefix(self, slot: int, tokens) -> int:
+        """Index ``slot``'s full prompt pages so later admissions can adopt
+        them. Call once the pages' K/V is fully resident (prefill complete);
+        only pages entirely covered by the prompt are registrable — they are
+        never written again (decode writes land at positions >= len(tokens)).
+        Pages already indexed (adopted from a donor, or a concurrent duplicate)
+        are left alone. Returns the number of pages newly indexed."""
+        if not self.share_prefix:
+            return 0
+        ps = self.page_size
+        parent = 0
+        n = 0
+        for i in range(len(tokens) // ps):
+            pt = self._page_tokens(tokens, i, ps)
+            pid = self._owned[slot][i]
+            hit = self._index.get((parent, pt))
+            if hit is not None:
+                parent = hit[0]       # adopted (or concurrent-duplicate) page:
+                continue              # keep walking the existing chain
+            if pid in self._page_key:
+                break                 # page busy under another chain: stop
+            node = self._next_node
+            self._next_node += 1
+            self._index[(parent, pt)] = (node, pid)
+            self._children.setdefault((parent, pt[0]), set()).add(pid)
+            self._page_key[pid] = (parent, pt)
+            parent = node
+            n += 1
+        return n
+
+    def _unindex(self, page: int) -> None:
+        # a chain node dies with its page; its children are always unindexed
+        # first (every owner of a child page also refcounts its ancestors, and
+        # release frees deepest-first), so no dangling parent links survive
+        key = self._page_key.pop(page, None)
+        if key is not None:
+            self._index.pop(key)
+            bucket = (key[0], key[1][0])
+            kids = self._children.get(bucket)
+            if kids is not None:
+                kids.discard(page)
+                if not kids:
+                    del self._children[bucket]
 
     # -- lifecycle -----------------------------------------------------------
     def reserve(self, slot: int, need_pages: int) -> None:
-        """Promise ``need_pages`` to ``slot`` (its worst case); call at admission."""
+        """Promise ``need_pages`` *private* pages to ``slot`` (its worst case
+        net of full-page prefix hits); call at admission, before ``adopt``."""
         if self._owned[slot] or self._reserved[slot]:
             raise RuntimeError(f"slot {slot} already holds pages/reservation")
         if not self.can_admit(need_pages):
@@ -86,32 +232,74 @@ class PageAllocator:
                                f"available {self.available()}")
         self._reserved[slot] = need_pages
 
+    def adopt(self, slot: int, pages) -> None:
+        """Append already-resident ``pages`` to ``slot``'s chain with
+        refcount++ — the prefix-sharing admission path. Free pages are not
+        adoptable (free-on-zero means a page with owners is never free)."""
+        for p in pages:
+            if p == NULL_PAGE or self._ref[p] <= 0:
+                raise RuntimeError(f"adopt({slot}, {p}): page is not live")
+            self._ref[p] += 1
+            self._owned[slot].append(p)
+
     def ensure(self, slot: int, npages: int) -> None:
-        """Grow ``slot`` to at least ``npages`` physical pages (within its
-        reservation). Called before a prefill chunk lands or a decode write
-        crosses a page boundary."""
+        """Grow ``slot`` to at least ``npages`` logical pages (within its
+        reservation; adopted pages count toward the total). Called before a
+        prefill chunk lands or a decode write crosses a page boundary."""
         if npages > self.max_pages_per_slot:
             raise RuntimeError(f"slot {slot}: {npages} pages exceeds "
                                f"max_pages_per_slot {self.max_pages_per_slot}")
         while len(self._owned[slot]) < npages:
             if self._reserved[slot] <= 0:
                 raise RuntimeError(f"slot {slot} grew past its reservation")
-            self._owned[slot].append(self._free.pop())
+            page = self._free.pop()
+            self._ref[page] = 1
+            self._owned[slot].append(page)
             self._reserved[slot] -= 1
             self.high_water = max(self.high_water, self.pages_in_use)
 
+    def cow_fork(self, slot: int, logical_idx: int) -> tuple[int, int]:
+        """Copy-on-write: replace the shared page at ``slot``'s chain position
+        ``logical_idx`` with a fresh private page (drawn from the slot's
+        reservation) and drop one ref on the shared page. Returns
+        ``(src, dst)``; the caller must copy the shared prefix entries
+        ``src -> dst`` on device *before* dispatching any write that could
+        recycle ``src``. The fork target comes off the free list, so it can
+        never alias a still-shared page."""
+        src = self._owned[slot][logical_idx]
+        if src == NULL_PAGE or self._ref[src] <= 0:
+            raise RuntimeError(f"cow_fork({slot}, {logical_idx}): no live page")
+        if self._reserved[slot] <= 0:
+            raise RuntimeError(f"slot {slot}: fork exceeds its reservation")
+        dst = self._free.pop()
+        self._reserved[slot] -= 1
+        self._ref[dst] = 1
+        self._ref[src] -= 1
+        if self._ref[src] == 0:
+            self._unindex(src)
+            self._free.append(src)
+        self._owned[slot][logical_idx] = dst
+        self.cow_forks += 1
+        self.high_water = max(self.high_water, self.pages_in_use)
+        return src, dst
+
     def release(self, slot: int) -> None:
-        """Retire ``slot``: return its pages (and any unused reservation — an
-        early EOS leaves some) to the pool. No zeroing: stale page contents are
-        only ever read masked."""
-        self._free.extend(reversed(self._owned[slot]))
+        """Retire ``slot``: drop one ref on each of its pages (free-on-zero —
+        pages still shared by other slots stay resident and indexed) and return
+        any unused reservation. No zeroing: stale page contents are only ever
+        read masked."""
+        for p in reversed(self._owned[slot]):
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._unindex(p)
+                self._free.append(p)
         self._owned[slot] = []
         self._reserved[slot] = 0
 
     # -- device view ---------------------------------------------------------
     def table(self) -> np.ndarray:
         """(num_slots, max_pages_per_slot) int32 block table; unmapped entries
-        point at the null page."""
+        point at the null page. Shared pages appear in several rows at once."""
         t = np.full((self.num_slots, self.max_pages_per_slot), NULL_PAGE,
                     np.int32)
         for slot, pages in enumerate(self._owned):

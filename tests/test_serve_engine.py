@@ -173,6 +173,148 @@ class TestDecodeParity:
             assert req.out_tokens == oracle, f"{arch} request {req.rid} diverged"
 
 
+def _shared_prefix_family(cfg, seed=0):
+    """A crafted shared-prefix request family: a 48-token donor, a follower
+    whose prompt is a strict prefix of it (full-page hits + a partial-page hit
+    that must CoW-fork), a same-prompt twin, and two requests behind a second
+    prefix — every sharing path in one trace."""
+    rng = np.random.default_rng(seed)
+    donor = rng.integers(0, cfg.vocab_size, size=48).astype(np.int32)
+    other = rng.integers(0, cfg.vocab_size, size=32).astype(np.int32)
+    mk = eng_mod.Request
+    return [
+        mk(rid=0, tokens=donor.copy(), max_new_tokens=12, arrival=0),
+        # donor[:40]: 2 full-page hits + partial (page 2, 7 tokens) -> CoW
+        mk(rid=1, tokens=donor[:40].copy(), max_new_tokens=6, arrival=8),
+        # identical prompt: 2 full-page hits + partial (page 2, 15) -> CoW
+        mk(rid=2, tokens=donor.copy(), max_new_tokens=5, arrival=10),
+        mk(rid=3, tokens=np.concatenate([other, rng.integers(
+            0, cfg.vocab_size, size=6).astype(np.int32)]),
+           max_new_tokens=6, arrival=12),
+        mk(rid=4, tokens=np.concatenate([other, rng.integers(
+            0, cfg.vocab_size, size=9).astype(np.int32)]),
+           max_new_tokens=5, arrival=20),
+    ]
+
+
+class TestPrefixSharing:
+    """Refcounted prefix sharing: adopted pages and CoW forks must be invisible
+    in the tokens (bitwise the one-shot oracle's) and visible in the stats."""
+
+    def test_shared_prefix_admission_token_identical(self):
+        """System-prompt traffic through sharing + batched prefill streams:
+        full-page hits skip their prefill entirely, and every request still
+        emits exactly the one-shot oracle's tokens."""
+        cfg = _smoke_cfg("smollm-360m")
+        params = _params(cfg)
+        ecfg = eng_mod.EngineConfig(num_slots=4, max_cache=64, policy="fifo",
+                                    prefill_chunk=8, prefill_streams=2)
+        reqs = eng_mod.shared_prefix_trace(cfg, num_requests=10,
+                                           num_prefixes=2, prefix_len=32,
+                                           suffix_lens=(4, 8),
+                                           decode_lens=(6, 10),
+                                           arrival_every=2)
+        eng = eng_mod.Engine(params, cfg, ecfg)
+        stats = eng.run(reqs, max_ticks=500)
+        assert stats["completed"] == 10
+        # the sharing actually happened: followers adopted the two full
+        # prefix pages instead of re-prefilling 32 positions each
+        assert stats["shared_pages_adopted"] >= 8
+        assert stats["prefill_positions_skipped"] >= 100
+        assert stats["prefix_hit_rate"] > 0
+        assert stats["prefill_batch_calls"] > 0
+        # drained clean: refcounts back to zero, all pages on the free list
+        assert stats["pages_in_use"] == 0 and eng.alloc.live_refs() == 0
+        for req in eng.completed:
+            oracle = _oracle_tokens(params, cfg, req, ecfg.max_cache, None)
+            assert req.out_tokens == oracle, \
+                f"request {req.rid} diverged over shared pages"
+
+    def test_cow_fork_partial_page_token_identical(self):
+        """Partial-page hits adopt the donor's page and CoW-fork it before the
+        tail prefill writes — the copy replaces recomputing the shared
+        positions, and the tokens stay bitwise the oracle's."""
+        cfg = _smoke_cfg("smollm-360m")
+        params = _params(cfg)
+        ecfg = eng_mod.EngineConfig(num_slots=3, max_cache=64, policy="fifo",
+                                    prefill_chunk=8)
+        reqs = _shared_prefix_family(cfg)
+        eng = eng_mod.Engine(params, cfg, ecfg)
+        stats = eng.run(reqs, max_ticks=300)
+        assert stats["completed"] == 5
+        assert stats["cow_forks"] >= 2          # rid 1 and rid 2
+        assert stats["shared_pages_adopted"] >= 6
+        # rid 1 (40-token prompt, 39 positions shared) lands in ONE tail chunk
+        # instead of 5 — the O(unique tokens) prefill claim, measurably
+        assert stats["chunked_prefill_chunks"] <= 6 + 1 + 1 + 5 + 2
+        assert stats["pages_in_use"] == 0 and eng.alloc.live_refs() == 0
+        for req in eng.completed:
+            oracle = _oracle_tokens(params, cfg, req, ecfg.max_cache, None)
+            assert req.out_tokens == oracle, \
+                f"request {req.rid} diverged over CoW-forked pages"
+
+    def test_sharing_admits_beyond_free_pool(self):
+        """The accounting fix, end to end: at a page budget that worst-case
+        fits ONE request, a prefix-twin admits concurrently because it only
+        charges its unshared pages — and with sharing off it must wait."""
+        cfg = _smoke_cfg("smollm-360m")
+        params = _params(cfg)
+        rng = np.random.default_rng(0)
+        prefix = rng.integers(0, cfg.vocab_size, size=32).astype(np.int32)
+
+        def reqs():
+            return [eng_mod.Request(
+                rid=i, tokens=np.concatenate([prefix, rng.integers(
+                    0, cfg.vocab_size, size=4).astype(np.int32)]),
+                max_new_tokens=6, arrival=(0, 8)[i]) for i in range(2)]
+
+        stats = {}
+        for share in (True, False):
+            # each request worst-cases 3 pages; 4 usable pages total
+            ecfg = eng_mod.EngineConfig(num_slots=2, max_cache=64,
+                                        policy="fifo", prefill_chunk=8,
+                                        num_pages=5, prefix_sharing=share)
+            eng = eng_mod.Engine(params, cfg, ecfg)
+            stats[share] = eng.run(reqs(), max_ticks=200)
+            assert stats[share]["completed"] == 2
+            for req in eng.completed:
+                oracle = _oracle_tokens(params, cfg, req, ecfg.max_cache, None)
+                assert req.out_tokens == oracle
+        assert stats[True]["concurrency_hw"] == 2, \
+            "prefix-hot twin was spuriously deferred despite full-page hits"
+        assert stats[False]["concurrency_hw"] == 1, \
+            "share-off engine admitted past its page budget"
+        assert stats[True]["pages_hw"] <= 4
+
+
+class TestPallasBackend:
+    """attn_backend='pallas_interpret' runs the kernels.paged_attention
+    scalar-prefetch kernel on the live decode path; tokens must match the XLA
+    gather fallback exactly — including slots decoding over shared and
+    CoW-forked pages — across GQA and MHA head layouts."""
+
+    @pytest.mark.parametrize("kv_heads", [2, 4])  # GQA (4/2) and MHA (4/4)
+    def test_engine_decode_token_identical_vs_xla(self, kv_heads):
+        cfg = dataclasses.replace(_smoke_cfg("smollm-360m"),
+                                  num_kv_heads=kv_heads)
+        params = _params(cfg)
+        outs = {}
+        for backend in ("xla", "pallas_interpret"):
+            ecfg = eng_mod.EngineConfig(num_slots=3, max_cache=64,
+                                        policy="fifo", prefill_chunk=8,
+                                        attn_backend=backend)
+            eng = eng_mod.Engine(params, cfg, ecfg)
+            stats = eng.run(_shared_prefix_family(cfg), max_ticks=300)
+            assert stats["completed"] == 5
+            assert stats["cow_forks"] >= 2       # decode covered forked pages
+            outs[backend] = {r.rid: r.out_tokens for r in eng.completed}
+            for req in eng.completed:
+                oracle = _oracle_tokens(params, cfg, req, ecfg.max_cache, None)
+                assert req.out_tokens == oracle, \
+                    f"[{backend}] request {req.rid} diverged from the oracle"
+        assert outs["pallas_interpret"] == outs["xla"]
+
+
 class TestEngineMechanics:
     @pytest.fixture(scope="class")
     def dense(self):
