@@ -28,6 +28,14 @@ pages (or the same concurrency into fewer). Every share-on completion is also
 replayed through one-shot ``decode.generate`` — the tokens must be bitwise
 identical, and the JSON records that bit.
 
+**Sampling comparison** — the same bursty trace served all-greedy vs
+all-seeded-sampled (temperature 0.8 / top-p 0.9) at identical occupancy:
+identical scheduling by construction, so the delta is the sampling lane in
+the compiled decode step. Sampled completions are replayed through the
+one-shot ``serve.api.generate`` facade and must be token-identical
+(``sampling_parity_exact`` in the JSON) — same seed, same stream, either
+backend.
+
 Latencies are in engine *ticks* (one decode step for the whole slot pool), so
 results are deterministic and hardware-independent. Results go to a CSV and to
 a machine-readable ``BENCH_serve.json`` (see benchmarks/README.md) so the perf
@@ -48,6 +56,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import model
+from repro.serve import api, traces
 from repro.serve import decode as decode_mod
 from repro.serve import engine as eng_mod
 
@@ -92,7 +101,7 @@ def run(arch: str = "smollm-360m", num_requests: int = 40, budget_slots: int = 4
                 # heavy class: long prompt (chunked prefill) + a decode that
                 # alone blows the latency budget; 24 + 28 = 52 tokens -> a
                 # whole fixed row but only ceil(52/16) = 4 fine pages
-                trace = eng_mod.synthetic_trace(
+                trace = traces.synthetic_trace(
                     cfg, num_requests=num_requests, seed=seed,
                     heavy_prompt=24, heavy_tokens=28)
                 eng = eng_mod.Engine(params, cfg, ecfg)
@@ -186,7 +195,7 @@ def run_prefix(arch: str = "smollm-360m", num_requests: int = 28,
                 page_size=page_size, num_pages=budget_pages + 1,
                 prefill_chunk=page_size, prefill_streams=2,
                 prefix_sharing=share)
-            trace = eng_mod.shared_prefix_trace(
+            trace = traces.shared_prefix_trace(
                 cfg, num_requests=num_requests, num_prefixes=2, prefix_len=32,
                 suffix_lens=(4, 8), decode_lens=(6, 10), arrival_every=1,
                 seed=seed)
@@ -242,6 +251,86 @@ def run_prefix(arch: str = "smollm-360m", num_requests: int = 28,
     return {"rows": rows, "summary": summary}
 
 
+def run_sampling(arch: str = "smollm-360m", num_requests: int = 20,
+                 num_slots: int = 4, max_cache: int = 64,
+                 seeds: tuple = (0, 1)) -> dict:
+    """Greedy vs seeded-sampled serving on the *same* bursty trace at equal
+    occupancy: identical arrivals, prompts, and token budgets, so the two
+    runs schedule identically and the only difference is the sampling lane in
+    the compiled decode step. The JSON records tick- and wall-clock
+    throughput for both, plus ``sampling_parity_exact``: every sampled
+    completion replayed through the one-shot ``api.generate`` facade must be
+    token-identical (same seed => same stream, either backend)."""
+    import time
+
+    cfg = configs.get_config(arch).smoke()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+
+    rows = []
+    parity_exact = True
+    for seed in seeds:
+        for mode, temp in (("greedy", 0.0), ("sampled", 0.8)):
+            ecfg = eng_mod.EngineConfig(num_slots=num_slots,
+                                        max_cache=max_cache, policy="fifo",
+                                        prefill_chunk=16)
+            trace = traces.synthetic_trace(
+                cfg, num_requests=num_requests, seed=seed, temperature=temp,
+                top_p=0.9, sample_seed=1000 * seed)
+            eng = eng_mod.Engine(params, cfg, ecfg)
+            t0 = time.perf_counter()
+            s = eng.run(trace, max_ticks=50 * num_requests)
+            dt = time.perf_counter() - t0
+            s.update(seed=seed, engine=mode,
+                     wall_s=dt, wall_tok_s=s["tokens"] / max(dt, 1e-9))
+            rows.append(s)
+            if mode == "sampled":        # EVERY sampled completion replays
+                for req in eng.completed:
+                    eng_toks = list(req.out_tokens)
+                    # fresh record, same prompt/params INCLUDING any frontend
+                    # inputs (vlm patches / audio frames ride the request)
+                    probe = api.ServeRequest(rid=req.rid, tokens=req.tokens,
+                                             params=req.params,
+                                             patches=req.patches,
+                                             frames=req.frames)
+                    out = api.generate(params, cfg, probe,
+                                       max_cache=max_cache)
+                    if out.tokens != eng_toks:
+                        parity_exact = False
+        by = {r["engine"]: r for r in rows if r["seed"] == seed}
+        g, sm = by["greedy"], by["sampled"]
+        print(f"seed {seed}: sampled {sm['throughput']:.2f} tok/tick "
+              f"({sm['wall_tok_s']:.0f} tok/s) vs greedy "
+              f"{g['throughput']:.2f} ({g['wall_tok_s']:.0f} tok/s) | "
+              f"concurrency {sm['concurrency_hw']} vs {g['concurrency_hw']} | "
+              f"{sm['sampled_requests']} sampled requests")
+
+    def mean(engine, key):
+        return float(np.mean([r[key] for r in rows if r["engine"] == engine]))
+
+    summary = {
+        "greedy_throughput": mean("greedy", "throughput"),
+        "sampled_throughput": mean("sampled", "throughput"),
+        "greedy_wall_tok_s": mean("greedy", "wall_tok_s"),
+        "sampled_wall_tok_s": mean("sampled", "wall_tok_s"),
+        "greedy_concurrency_hw": mean("greedy", "concurrency_hw"),
+        "sampled_concurrency_hw": mean("sampled", "concurrency_hw"),
+        "sampling_parity_exact": parity_exact,
+    }
+    summary["checks"] = {
+        # seeded engine tokens == one-shot facade tokens, bit for bit
+        "sampling_parity_exact": parity_exact,
+        # both modes served the whole trace...
+        "all_completed": all(r["completed"] == num_requests for r in rows),
+        # ...at the same occupancy (identical arrivals/budgets => identical
+        # scheduling: sampling must not perturb admission or retirement)
+        "equal_occupancy": summary["sampled_concurrency_hw"]
+        == summary["greedy_concurrency_hw"],
+        "tick_throughput_equal": abs(summary["sampled_throughput"]
+                                     - summary["greedy_throughput"]) < 1e-9,
+    }
+    return {"rows": rows, "summary": summary}
+
+
 def main():
     jax.config.update("jax_platform_name", "cpu")
     ap = argparse.ArgumentParser()
@@ -259,6 +348,9 @@ def main():
               out_json=None)                  # single JSON write, below
     res["prefix_sharing"] = run_prefix(
         arch=args.arch, num_requests=16 if args.smoke else 28,
+        seeds=tuple(args.seeds)[:2])
+    res["sampling"] = run_sampling(
+        arch=args.arch, num_requests=12 if args.smoke else 20,
         seeds=tuple(args.seeds)[:2])
     with open(args.json, "w") as fh:
         json.dump(res, fh, indent=1)
@@ -278,6 +370,15 @@ def main():
           f"hit rate {p['prefix_hit_rate']:.2f} | parity "
           f"{'exact' if p['share_parity_exact'] else 'BROKEN'} | checks "
           f"{'OK' if pok else 'REGRESSION'}: {json.dumps(p['checks'])}")
+    sm = res["sampling"]["summary"]
+    sok = all(sm["checks"].values())
+    print(f"sampling: {sm['sampled_throughput']:.2f} tok/tick sampled vs "
+          f"{sm['greedy_throughput']:.2f} greedy at equal occupancy "
+          f"({sm['sampled_concurrency_hw']:.1f} slots) | "
+          f"{sm['sampled_wall_tok_s']:.0f} vs {sm['greedy_wall_tok_s']:.0f} "
+          f"tok/s wall | engine-vs-oneshot parity "
+          f"{'exact' if sm['sampling_parity_exact'] else 'BROKEN'} | checks "
+          f"{'OK' if sok else 'REGRESSION'}: {json.dumps(sm['checks'])}")
 
 
 if __name__ == "__main__":

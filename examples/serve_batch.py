@@ -12,8 +12,13 @@ resident prefix pages with refcount++ instead of re-prefilling them;
 ``--attn-backend pallas_interpret`` decodes through the Pallas block-table
 kernel instead of the XLA gather.
 
+With ``--temperature`` the odd request ids decode through seeded per-slot
+sampling lanes (``SamplingParams``) inside the same compiled step while the
+even ids stay exact greedy — mixed traffic, one decode dispatch.
+
     PYTHONPATH=src python examples/serve_batch.py --engine [--arch qwen3-4b] \
-        [--no-prefix-sharing] [--attn-backend pallas_interpret]
+        [--temperature 0.8] [--no-prefix-sharing] \
+        [--attn-backend pallas_interpret]
 """
 import argparse
 import os
@@ -44,6 +49,9 @@ def main():
     ap.add_argument("--attn-backend", default="xla",
                     choices=("xla", "pallas", "pallas_interpret"),
                     help="paged decode attention backend for the engine")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="engine demo: per-request sampling temperature for "
+                         "the odd request ids (0 = all greedy)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch).smoke()
@@ -83,6 +91,8 @@ def _engine_demo(params, cfg, args):
     import numpy as np
 
     from repro.serve import engine as eng_mod
+    from repro.serve import traces
+    from repro.serve.api import SamplingParams, ServeRequest
 
     bias = (jnp.zeros((cfg.num_layers, cfg.num_experts))
             if cfg.num_experts else None)
@@ -96,6 +106,7 @@ def _engine_demo(params, cfg, args):
     rng = np.random.default_rng(0)
     # half the requests ride a common "system prompt" prefix: with sharing on,
     # its pages are prefilled once and adopted (refcount++) by every follower
+    # — and the odd rids sample (seeded) while the even ones stay greedy
     prefix = rng.integers(0, cfg.vocab_size,
                           size=args.prompt_len).astype(np.int32)
     reqs = []
@@ -104,11 +115,14 @@ def _engine_demo(params, cfg, args):
         toks = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
         if rid % 2:
             toks = np.concatenate([prefix, toks[:4]])
-        req = eng_mod.Request(
+        req = ServeRequest(
             rid=rid, tokens=toks,
-            max_new_tokens=(args.steps // 4, args.steps // 2)[rid % 2],
+            params=SamplingParams(
+                temperature=args.temperature if rid % 2 else 0.0,
+                top_p=0.9 if rid % 2 else 1.0, seed=rid,
+                max_new_tokens=(args.steps // 4, args.steps // 2)[rid % 2]),
             rclass=rid % 2, arrival=2 * rid)
-        reqs.append(eng_mod.attach_modality_inputs(req, cfg, rng))
+        reqs.append(traces.attach_modality_inputs(req, cfg, rng))
 
     eng = eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
     t0 = time.perf_counter()
@@ -127,8 +141,10 @@ def _engine_demo(params, cfg, args):
           f"{stats['cow_forks']} CoW forks, "
           f"{stats['prefill_positions_skipped']} prefill positions skipped")
     for r in sorted(eng.completed, key=lambda r: r.rid):
-        print(f"  req {r.rid}: slot {r.slot}, ticks {r.admit_tick}"
-              f"-{r.finish_tick}: {r.out_tokens[:12]}"
+        mode = "greedy" if r.params.is_greedy \
+            else f"T={r.params.temperature} seed={r.params.seed}"
+        print(f"  req {r.rid} ({mode}): slot {r.slot}, ticks {r.admit_tick}"
+              f"-{r.finish_tick} [{r.finish_reason}]: {r.out_tokens[:12]}"
               f"{'...' if len(r.out_tokens) > 12 else ''}")
 
 

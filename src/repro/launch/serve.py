@@ -8,10 +8,14 @@ restoring trained parameters from a checkpoint directory.
 engine driven by a synthetic open-loop arrival trace (bursty, heterogeneous
 request classes — or ``--trace shared-prefix`` for system-prompt traffic that
 exercises refcounted prefix page sharing), with admission governed by the
-immune primitives:
+immune primitives. The engine is driven through ``Engine.stream()``: per-token
+``RequestOutput`` deltas print as they are emitted (first ``--show-stream``
+request ids), and ``--temperature/--top-p/--top-k/--sample-seed`` give every
+request a seeded sampling lane instead of greedy:
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
         --stream --requests 40 --slots 4 [--policy fifo] \
+        [--temperature 0.8 --top-p 0.9 --sample-seed 7] \
         [--trace shared-prefix] [--no-prefix-sharing] \
         [--attn-backend pallas_interpret] [--prefill-streams 2]
 """
@@ -71,6 +75,18 @@ def main():
                     help="synthetic arrival trace: bursty heterogeneous, or "
                          "system-prompt traffic (a few prefixes x many "
                          "suffixes) that exercises prefix sharing")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature; 0 = exact greedy")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 disables)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k logits filter (0 disables)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base sampling seed; request rid offsets it, so a "
+                         "trace replays token-identically")
+    ap.add_argument("--show-stream", type=int, default=4,
+                    help="print per-token stream deltas for this many "
+                         "request ids (0 silences the stream)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -97,6 +113,7 @@ def main():
         import math
 
         from repro.serve import engine as eng_mod
+        from repro.serve import traces
         lcm = math.lcm(args.page_size, args.prefill_chunk or 1)
         raw = args.prompt_len + args.steps + 48
         ecfg = eng_mod.EngineConfig(
@@ -109,18 +126,33 @@ def main():
             prefix_sharing=args.prefix_sharing,
             attn_backend=args.attn_backend,
             prefill_streams=args.prefill_streams)
+        sampling = dict(temperature=args.temperature, top_p=args.top_p,
+                        top_k=args.top_k, sample_seed=args.sample_seed)
         if args.trace == "shared-prefix":
-            trace = eng_mod.shared_prefix_trace(
+            trace = traces.shared_prefix_trace(
                 cfg, num_requests=args.requests,
                 prefix_len=max(args.prompt_len, 2 * args.page_size),
-                decode_lens=(args.steps // 2, args.steps))
+                decode_lens=(args.steps // 2, args.steps), **sampling)
         else:
-            trace = eng_mod.synthetic_trace(cfg, num_requests=args.requests,
-                                            heavy_tokens=args.steps + 8)
+            trace = traces.synthetic_trace(cfg, num_requests=args.requests,
+                                           heavy_tokens=args.steps + 8,
+                                           **sampling)
         eng = eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
         with mesh:
             t0 = time.perf_counter()
-            stats = eng.run(trace, max_ticks=50 * args.requests)
+            # the streaming front door: RequestOutput deltas per tick, the
+            # terminal one carrying the finish reason + latency accounting
+            for out in eng.stream(trace, max_ticks=50 * args.requests):
+                if out.rid >= args.show_stream or \
+                        (not out.new_tokens and not out.finished):
+                    continue
+                tail = f" [{out.finish_reason}, {out.latency_ticks} ticks, " \
+                       f"{out.wall_latency_s * 1e3:.0f} ms]" \
+                    if out.finished and out.latency_ticks is not None \
+                    else (f" [{out.finish_reason}]" if out.finished else "")
+                print(f"  tick {out.tick:4d} req {out.rid} "
+                      f"+= {out.new_tokens}{tail}")
+            stats = eng.stats()
         dt = time.perf_counter() - t0
         print(f"[{args.policy}] {stats['completed']} completed / "
               f"{stats['shed']} shed / {stats['rejected']} rejected of "
@@ -128,8 +160,12 @@ def main():
               f"{stats['ticks']} ticks ({dt:.1f}s wall incl. compile)")
         print(f"  throughput {stats['throughput']:.2f} tok/tick | "
               f"p50 {stats['p50_latency']:.0f} / p99 {stats['p99_latency']:.0f} "
-              f"ticks | goodput {stats['goodput']:.2f} | "
+              f"ticks | p99 wall {stats['p99_wall_ms']:.0f} ms | "
+              f"goodput {stats['goodput']:.2f} | "
               f"{stats['mid_stream_admissions']} mid-stream admissions")
+        print(f"  sampling: {stats['sampled_requests']} sampled requests "
+              f"(temperature {args.temperature}, top-p {args.top_p}, "
+              f"top-k {args.top_k}, seed {args.sample_seed})")
         print(f"  paged KV: {stats['pages_hw']}/{stats['pages_budget']} pages "
               f"high-water x {stats['page_size']} tokens | up to "
               f"{stats['concurrency_hw']} concurrent | "

@@ -29,6 +29,20 @@ class TrainOut(NamedTuple):
     logits_mean_abs: Array         # cheap NaN/scale canary
 
 
+class SamplingSpec(NamedTuple):
+    """Per-lane sampling arrays for a batch of decode lanes (jit-friendly).
+
+    One row per lane — a slot of the serving engine's pool or a sequence of a
+    one-shot batch. Both backends feed the same rows through the same
+    ``sample_tokens`` lane, which is what makes engine-vs-oneshot token parity
+    hold bitwise for seeded sampling."""
+
+    keys: Array         # (B, 2) uint32 per-lane base PRNG keys
+    temperature: Array  # (B,) f32; 0 => exact argmax (the greedy lane)
+    top_k: Array        # (B,) i32; 0 => disabled
+    top_p: Array        # (B,) f32; 1.0 => disabled
+
+
 def init_params(key, cfg: ModelConfig) -> dict:
     ks = jax.random.split(key, 4)
     p = {
@@ -98,6 +112,40 @@ def train_loss(params, cfg: ModelConfig, batch: dict,
         loss = loss + cfg.aux_loss_coef * aux
     return TrainOut(loss=loss, aux_loss=aux, load_frac=load, drop_frac=drop,
                     logits_mean_abs=jnp.mean(jnp.abs(lg)))
+
+
+def sample_tokens(logits: Array, spec: SamplingSpec, step) -> Array:
+    """Sample one token per lane from last-position ``logits`` ((B, V) or
+    (B, T, V), last position used) under per-lane ``SamplingSpec`` rows.
+
+    The per-step key is ``fold_in(lane key, step)`` where ``step`` is the
+    index of the token being emitted (scalar or (B,) — the engine passes each
+    slot's emitted-token count, the one-shot loop its scan index), so a
+    request's key stream is a function of its params and its own progress
+    only, never of what shares the batch. Each lane is row-wise — scale by
+    temperature, full descending sort, top-k rank mask, top-p cumulative-mass
+    mask (the top token always survives), Gumbel draw over the survivors — so
+    a lane's token is bitwise independent of batch composition; temperature-0
+    lanes short out to the exact ``argmax`` the greedy path takes."""
+    lg = logits[:, -1] if logits.ndim == 3 else logits          # (B, V) fp32
+    b, v = lg.shape
+    greedy_tok = jnp.argmax(lg, axis=-1)
+    keys = jax.vmap(jax.random.fold_in)(
+        spec.keys, jnp.broadcast_to(jnp.asarray(step, jnp.int32), (b,)))
+
+    def lane(row, key, temp, k, p):
+        scaled = row / jnp.maximum(temp, jnp.float32(1e-6))
+        vals, idx = jax.lax.top_k(scaled, v)                    # full sort
+        keep_k = jnp.arange(v) < jnp.where(k > 0, k, v)
+        probs = jax.nn.softmax(vals)
+        mass_before = jnp.cumsum(probs) - probs
+        masked = jnp.where(keep_k & (mass_before < p), vals, -jnp.inf)
+        return idx[jax.random.categorical(key, masked)]
+
+    sampled = jax.vmap(lane)(lg, keys, spec.temperature, spec.top_k,
+                             spec.top_p)
+    tok = jnp.where(spec.temperature > 0, sampled, greedy_tok)
+    return tok[:, None].astype(jnp.int32)                       # (B, 1)
 
 
 def init_cache(cfg: ModelConfig, batch: int, s_max: int) -> dict:

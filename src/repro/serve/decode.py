@@ -1,8 +1,16 @@
 """Batched serving: prefill + greedy/sampled decode over a fixed slot batch.
 
 ``serve_step`` (one token for the whole batch against the KV cache) is the function
-the decode-shape dry-runs lower; ``generate`` is the end-to-end driver used by the
-serving example (prefill once, then N decode steps under jit).
+the decode-shape dry-runs lower; ``generate`` is the end-to-end driver behind the
+one-shot side of the serving API (``serve.api.generate`` wraps it per request).
+
+``sampling`` (a ``models.model.SamplingSpec`` of per-lane arrays) switches the
+loop from argmax to the masked top-k/top-p sampling lane — the *same*
+``model.sample_tokens`` the engine's compiled decode tick runs, with the same
+key discipline (lane key folded with the index of the token being emitted), so
+seeded output here is bitwise what the engine emits for the same request.
+``return_logits`` additionally returns every emitted token's pre-sampling
+logits row — the logits-level parity oracle the engine is checked against.
 """
 from __future__ import annotations
 
@@ -34,9 +42,28 @@ def greedy(logits: Array) -> Array:
     return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("cfg", "steps"))
+def null_spec(batch: int) -> model.SamplingSpec:
+    """All-greedy placeholder lanes (traced but unused when not sampling)."""
+    return model.SamplingSpec(
+        keys=jnp.zeros((batch, 2), jnp.uint32),
+        temperature=jnp.zeros((batch,), jnp.float32),
+        top_k=jnp.zeros((batch,), jnp.int32),
+        top_p=jnp.ones((batch,), jnp.float32))
+
+
+@jax.jit
+def _sample_first(logits, spec):
+    """The prompt's last-position logits seed decoding: token index 0, so the
+    lane key folds with 0 — exactly what the engine does at slot activation."""
+    return model.sample_tokens(logits, spec, 0)
+
+
+@partial(jax.jit,
+         static_argnames=("cfg", "steps", "do_sample", "return_logits"))
 def _decode_loop(params, cfg: ModelConfig, first_token: Array, cache: dict,
-                 steps: int, router_bias=None, frames=None):
+                 steps: int, spec: model.SamplingSpec, router_bias=None,
+                 frames=None, do_sample: bool = False,
+                 return_logits: bool = False):
     def body(carry, t):
         tok, cache = carry
         batch = {"token": tok}
@@ -44,26 +71,44 @@ def _decode_loop(params, cfg: ModelConfig, first_token: Array, cache: dict,
             batch["frame"] = frames[:, t][:, None]
         logits, cache = serve_step(params, cfg, batch, cache,
                                    router_bias=router_bias)
-        nxt = greedy(logits)
-        return (nxt, cache), nxt[:, 0]
+        # token t of the loop is emitted token t+1 overall (the prefill-seeded
+        # first token is index 0) — the fold_in index both backends agree on
+        nxt = model.sample_tokens(logits, spec, t + 1) if do_sample \
+            else greedy(logits)
+        out = (nxt[:, 0], logits[:, -1]) if return_logits else (nxt[:, 0],)
+        return (nxt, cache), out
 
-    (_, cache), toks = jax.lax.scan(body, (first_token, cache),
+    (_, cache), outs = jax.lax.scan(body, (first_token, cache),
                                     jnp.arange(steps))
-    return jnp.moveaxis(toks, 0, 1), cache           # (B, steps)
+    toks = jnp.moveaxis(outs[0], 0, 1)                   # (B, steps)
+    lseq = jnp.moveaxis(outs[1], 0, 1) if return_logits else None
+    return toks, cache, lseq
 
 
 def generate(params, cfg: ModelConfig, prompts: dict, max_cache: int, steps: int,
-             router_bias: Optional[Array] = None):
-    """Prefill the prompt batch, then greedily decode ``steps`` tokens."""
+             router_bias: Optional[Array] = None,
+             sampling: Optional[model.SamplingSpec] = None,
+             return_logits: bool = False):
+    """Prefill the prompt batch, then decode ``steps`` tokens — argmax by
+    default, per-lane sampled under ``sampling``. Returns ``(tokens, cache)``,
+    plus the per-token logits rows ``(B, steps, V)`` when ``return_logits``."""
     b = prompts["tokens"].shape[0]
     cache = model.init_cache(cfg, b, max_cache)
-    logits, cache = model.prefill(params, cfg, prompts, cache,
-                                  router_bias=router_bias)
-    first = greedy(logits)
+    logits0, cache = model.prefill(params, cfg, prompts, cache,
+                                   router_bias=router_bias)
+    first = greedy(logits0) if sampling is None \
+        else _sample_first(logits0, sampling)
     frames = None
     if cfg.family == "audio":
         frames = jnp.zeros((b, steps, cfg.frontend_dim),
                            prompts["frames"].dtype)
-    toks, cache = _decode_loop(params, cfg, first, cache, steps,
-                               router_bias=router_bias, frames=frames)
-    return jnp.concatenate([first, toks[:, :-1]], axis=1), cache
+    toks, cache, lseq = _decode_loop(
+        params, cfg, first, cache, steps,
+        sampling if sampling is not None else null_spec(b),
+        router_bias=router_bias, frames=frames,
+        do_sample=sampling is not None, return_logits=return_logits)
+    out = jnp.concatenate([first, toks[:, :-1]], axis=1)
+    if return_logits:
+        logits_seq = jnp.concatenate([logits0, lseq[:, :-1]], axis=1)
+        return out, cache, logits_seq
+    return out, cache

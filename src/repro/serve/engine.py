@@ -87,6 +87,19 @@ in ``stats()['rejected']``, against goodput) instead of raising; a request that
 fits but finds no free pages is simply deferred in the queue until pages free
 up — out-of-pages backpressure, not an error.
 
+Requests arrive as ``serve.api.ServeRequest`` — prompt + ``SamplingParams``
+(temperature/top-p/top-k/seed, token budget, stop ids) + scheduling metadata —
+and progress leaves as ``serve.api.RequestOutput`` deltas from ``stream()``.
+Sampling runs *inside* the one compiled decode step: per-slot lane arrays
+(``models.model.SamplingSpec``) ride next to ``last``/``active``, each lane's
+key folds with its slot's emitted-token count, and ``model.sample_tokens``
+applies the masked top-k/top-p draw on the logits lane — the same lane math
+(and key discipline) as one-shot ``serve.api.generate``, so a seeded request
+emits identical tokens on either backend and temperature-0 lanes stay bitwise
+argmax. Retirement is per-request: token budget or any of the request's stop
+ids (``Engine._finished`` records the ``finish_reason``), and pages free the
+same tick.
+
 The FIFO policy (``EngineConfig(policy="fifo")``) is the baseline the
 benchmark compares against; ``page_size == max_cache`` degenerates to the
 fixed-row engine (one page per slot, reserved whole at admission) for
@@ -95,10 +108,11 @@ equal-memory comparisons.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import Iterator, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -107,62 +121,12 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core import immune
 from ..models import model, transformer
-from .decode import greedy
+from .api import (RequestOutput, SamplingParams, ServeRequest,  # noqa: F401
+                  spec_for)
+from .decode import greedy, null_spec
 from .paging import PageAllocator, pages_for
 
 Array = jax.Array
-
-
-# ---------------------------------------------------------------------------
-# request / config types
-# ---------------------------------------------------------------------------
-@dataclass
-class Request:
-    """One serving request. ``tokens`` is the prompt; ``rclass`` buckets requests
-    into the classes the immune admission controller remembers (e.g. endpoint,
-    tenant, or prompt-shape bucket)."""
-
-    rid: int
-    tokens: np.ndarray                  # (L,) int32 prompt
-    max_new_tokens: int
-    rclass: int = 0
-    arrival: int = 0                    # tick the request enters the queue
-    eos_id: Optional[int] = None
-    patches: Optional[np.ndarray] = None   # vlm prefix embeddings (P, Fd)
-    frames: Optional[np.ndarray] = None    # audio frame embeddings (L, Fd)
-
-    # filled in by the engine
-    out_tokens: list = field(default_factory=list)
-    admit_tick: int = -1
-    finish_tick: int = -1
-    slot: int = -1
-
-    @property
-    def latency(self) -> int:
-        return self.finish_tick - self.arrival
-
-    def prompts(self) -> dict:
-        """The prefill batch-of-1 for this request — the single source of truth
-        for what the engine feeds the model (the parity oracle reuses it)."""
-        p = {"tokens": jnp.asarray(self.tokens, jnp.int32)[None]}
-        if self.patches is not None:
-            p["patches"] = jnp.asarray(self.patches)[None]
-        if self.frames is not None:
-            p["frames"] = jnp.asarray(self.frames)[None]
-        return p
-
-
-def attach_modality_inputs(req: Request, cfg: ModelConfig, rng) -> Request:
-    """Give a request the frontend inputs its family needs (random stand-ins
-    for the stub frontends) — shared by the trace generator, the examples, and
-    the tests so the shapes can't drift apart."""
-    if cfg.family == "vlm":
-        req.patches = rng.standard_normal(
-            (cfg.frontend_tokens, cfg.frontend_dim)).astype(np.float32)
-    if cfg.family == "audio":
-        req.frames = rng.standard_normal(
-            (len(req.tokens), cfg.frontend_dim)).astype(np.float32)
-    return req
 
 
 class EngineConfig(NamedTuple):
@@ -186,6 +150,8 @@ class EngineConfig(NamedTuple):
     prefix_sharing: bool = True       # refcounted prompt-prefix page sharing
     attn_backend: str = "xla"         # "xla" | "pallas" | "pallas_interpret"
     prefill_streams: int = 1          # >1: batch that many prefill jobs/tick
+    capture_logits: bool = False      # record per-token logits rows on each
+    #                                   request (the logits parity oracle)
 
 
 @dataclass
@@ -194,7 +160,7 @@ class _PrefillJob:
     slots keep decoding; the slot activates when the last chunk lands. ``p0``
     starts past the shared prefix when admission adopted resident pages —
     only the unshared tail is ever computed."""
-    req: Request
+    req: ServeRequest
     slot: int
     p0: int          # next chunk's first absolute position
     total: int       # padded prompt end (p0 grid aligned to prefill_chunk)
@@ -209,12 +175,22 @@ class _PrefillJob:
 def _prefill_one(params, cfg: ModelConfig, prompts: dict, max_cache: int,
                  router_bias):
     """Prefill a batch-of-1 prompt into a fresh dense cache; returns
-    (first_token, cache). Identical math to the first stage of
-    ``decode.generate`` — the parity anchor for the one-shot admission path."""
+    (last-position logits, cache). Identical math to the first stage of
+    ``decode.generate`` — the parity anchor for the one-shot admission path;
+    the logits seed decoding through ``_seed_token``."""
     cache = model.init_cache(cfg, 1, max_cache)
     logits, cache = model.prefill(params, cfg, prompts, cache,
                                   router_bias=router_bias)
-    return greedy(logits), cache
+    return logits, cache
+
+
+@partial(jax.jit, static_argnames=("do_sample",))
+def _seed_token(logits, spec, do_sample: bool):
+    """First emitted token from a prompt's last-position logits: exact argmax
+    on the greedy path, else the request's sampling lane at fold index 0 —
+    the same draw one-shot ``decode.generate`` takes for its first token."""
+    return model.sample_tokens(logits, spec, 0) if do_sample \
+        else greedy(logits)
 
 
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 5))
@@ -228,11 +204,12 @@ def _splice(pool, one, slot, table_row, first, last, active, cfg: ModelConfig):
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(3,))
 def _prefill_chunk(params, cfg: ModelConfig, chunk: dict, pool, table_row, p0,
                    last_idx, slot, router_bias):
-    """Land one prefill chunk in the slot's pages; returns (greedy token of the
-    chunk's last real position, pool). One compiled shape per config."""
+    """Land one prefill chunk in the slot's pages; returns (logits of the
+    chunk's last real position, pool). One compiled shape per config; the
+    logits only matter on the final chunk, where they seed decoding."""
     logits, pool = model.prefill_chunk(params, cfg, chunk, pool, table_row, p0,
                                        last_idx, slot, router_bias=router_bias)
-    return greedy(logits), pool
+    return logits, pool
 
 
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(3,))
@@ -240,11 +217,11 @@ def _prefill_chunks(params, cfg: ModelConfig, chunk: dict, pool, tables, p0s,
                     last_idxs, router_bias):
     """Land one chunk of up to ``prefill_streams`` concurrent prefill jobs in
     ONE compiled call (attention stacks only); lanes beyond the live job count
-    are padding with all-null tables. Returns ((J, 1) greedy tokens, pool)."""
+    are padding with all-null tables. Returns ((J, 1, V) logits, pool)."""
     logits, pool = model.prefill_chunk_multi(params, cfg, chunk, pool, tables,
                                              p0s, last_idxs,
                                              router_bias=router_bias)
-    return greedy(logits), pool
+    return logits, pool
 
 
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
@@ -272,10 +249,12 @@ def _release(pool, active, slot, cfg: ModelConfig):
 # pool and last are donated: the engine rebinds both from the return value each
 # tick, and without donation every decoded token would pay a fresh copy of the
 # whole pooled KV cache (the scan carry in decode._decode_loop gets this free)
-@partial(jax.jit, static_argnames=("cfg", "attn_backend"),
+@partial(jax.jit,
+         static_argnames=("cfg", "attn_backend", "do_sample", "return_logits"),
          donate_argnums=(2, 3))
 def _decode_tick(params, cfg: ModelConfig, pool, last, active, table,
-                 router_bias, frames, attn_backend="xla"):
+                 router_bias, frames, spec, steps_done, attn_backend="xla",
+                 do_sample=False, return_logits=False):
     """One token for every slot (occupied or not) — the single compiled decode
     step. Inactive slots advance neither position nor state; their lane
     computes a garbage token that the host discards (paged K/V writes of
@@ -283,7 +262,12 @@ def _decode_tick(params, cfg: ModelConfig, pool, last, active, table,
     which keeps the step shape independent of occupancy AND keeps garbage
     lanes from dirtying pages a mid-flight chunked prefill already owns.
     ``attn_backend`` selects the paged attention compute (XLA gather vs the
-    Pallas block-table kernel)."""
+    Pallas block-table kernel). With ``do_sample``, per-slot sampling runs on
+    the logits lane in this same compiled step: ``spec`` carries each slot's
+    key/temperature/top-k/top-p row and ``steps_done`` its emitted-token
+    count (the fold_in index), so a lane's draw depends only on its own
+    request — never on what shares the pool. The raw logits are returned for
+    the capture-logits parity oracle."""
     batch = {"token": last}
     if cfg.family == "audio":
         batch["frame"] = frames
@@ -291,10 +275,15 @@ def _decode_tick(params, cfg: ModelConfig, pool, last, active, table,
                                          router_bias=router_bias,
                                          table=table, active=active,
                                          attn_backend=attn_backend)
-    nxt = greedy(logits)                             # (S, 1)
+    nxt = model.sample_tokens(logits, spec, steps_done) if do_sample \
+        else greedy(logits)                          # (S, 1)
     pos = jnp.where(active, new_pool["pos"], pool["pos"])
     last = jnp.where(active[:, None], nxt, last)
-    return nxt, last, {"layers": new_pool["layers"], "pos": pos}
+    # the (S, 1, V) logits are a jit output only when the parity oracle wants
+    # them — otherwise returning them would materialize a vocab-sized buffer
+    # per decoded token just for the host to drop
+    return (nxt, last, {"layers": new_pool["layers"], "pos": pos},
+            logits if return_logits else None)
 
 
 # ---------------------------------------------------------------------------
@@ -323,12 +312,15 @@ class ImmuneAdmission:
     def remembered_cost(self, rclass: int) -> float:
         return float(self.memory.value[rclass])
 
-    def observe_completion(self, rclass: int, cost: float, latency: float):
+    def observe_completion(self, rclass: int, cost: float, latency: float,
+                           budget: Optional[float] = None):
         # per-class EMA: observing `value` for the untouched classes leaves them
         # unchanged under ImmuneMemory's decay*v + (1-decay)*obs update
         self.memory = self.memory.update(
             self.memory.value.at[rclass].set(cost))
-        if latency > self.ecfg.latency_budget:
+        if budget is None:
+            budget = self.ecfg.latency_budget
+        if latency > budget:
             self._blown[rclass] += 1.0
         else:
             self._ok[rclass] += 1.0
@@ -415,15 +407,28 @@ class Engine:
         self.active = jnp.zeros((s,), bool)
         self.frames = (jnp.zeros((s, 1, cfg.frontend_dim), jnp.float32)
                        if cfg.family == "audio" else None)
-        self.slots: list[Optional[Request]] = [None] * s
+        self.slots: list[Optional[ServeRequest]] = [None] * s
         self.jobs: deque[_PrefillJob] = deque()
         self.pos_host = np.zeros(s, np.int64)      # per-slot next write index
         self.active_host = np.zeros(s, bool)
-        self.queue: deque[Request] = deque()
+        # per-slot sampling lanes (SamplingSpec rows); free slots hold the
+        # greedy row (temperature 0), so their garbage lane costs argmax only
+        self.samp_keys = np.zeros((s, 2), np.uint32)
+        self.samp_temp = np.zeros((s,), np.float32)
+        self.samp_topk = np.zeros((s,), np.int32)
+        self.samp_topp = np.ones((s,), np.float32)
+        self._spec_cache = None            # device copy of the samp_* rows
+        self._null_spec = null_spec(s)     # all-greedy lanes, built once
+        self.queue: deque[ServeRequest] = deque()
         self.tick = 0
-        self.completed: list[Request] = []
-        self.shed: list[Request] = []      # rejected while their class was anergic
-        self.rejected: list[Request] = []  # can never fit a slot (submit-time)
+        self.completed: list[ServeRequest] = []
+        self.shed: list[ServeRequest] = []    # admission-refused (anergic class)
+        self.rejected: list[ServeRequest] = []  # can never fit a slot (submit)
+        # refusal high-water marks for stream(): persistent, so refusals that
+        # predate the stream are still reported (once) and a second stream()
+        # call does not re-report earlier ones
+        self._reported_rejected = 0
+        self._reported_shed = 0
         self.admission = ImmuneAdmission(ecfg) if ecfg.policy == "immune" \
             else None
         self.mid_stream_admissions = 0     # admissions while other slots decode
@@ -438,7 +443,7 @@ class Engine:
         self._decoding_before_admit = False
 
     # -- queue ---------------------------------------------------------------
-    def submit(self, req: Request):
+    def submit(self, req: ServeRequest):
         """Queue a request. A prompt+decode budget that can never fit a slot is
         *rejected* (recorded, counted against goodput) rather than raised: an
         open-loop server sheds what it cannot serve, it does not crash."""
@@ -446,6 +451,7 @@ class Engine:
                 self.ecfg.num_classes:
             raise ValueError(f"request {req.rid}: rclass {req.rclass} outside "
                              f"[0, {self.ecfg.num_classes})")
+        req.submit_time = time.perf_counter()
         need = len(req.tokens) + self.cfg.frontend_tokens + req.max_new_tokens
         if need > self.ecfg.max_cache \
                 or self._need_pages(req) > self.alloc.usable_pages:
@@ -453,8 +459,37 @@ class Engine:
             return                          # let it camp in the queue forever
         self.queue.append(req)
 
+    # -- sampling lanes ------------------------------------------------------
+    def _pool_spec(self) -> model.SamplingSpec:
+        """The slot pool's per-lane sampling rows. Lanes only change at
+        admission (``_seed_slot``) and retirement (``_retire``), so the device
+        arrays are cached between those events rather than re-uploaded per
+        decoded token."""
+        if self._spec_cache is None:
+            self._spec_cache = model.SamplingSpec(
+                keys=jnp.asarray(self.samp_keys),
+                temperature=jnp.asarray(self.samp_temp),
+                top_k=jnp.asarray(self.samp_topk),
+                top_p=jnp.asarray(self.samp_topp))
+        return self._spec_cache
+
+    def _seed_slot(self, req: ServeRequest, logits) -> Array:
+        """Sample/argmax the request's first token from its prefill logits and
+        bind its sampling lane to the slot (capture the logits row if the
+        parity oracle asked for it). ``api.spec_for`` builds the batch-of-1
+        lane, so the seed-token draw is bitwise the one-shot facade's."""
+        self.samp_keys[req.slot] = req.params.key()
+        self.samp_temp[req.slot] = req.params.temperature
+        self.samp_topk[req.slot] = req.params.top_k
+        self.samp_topp[req.slot] = req.params.top_p
+        self._spec_cache = None
+        if self.ecfg.capture_logits:
+            req.out_logits.append(np.asarray(logits)[0, -1].copy())
+        return _seed_token(logits, spec_for([req.params]),
+                           do_sample=not req.params.is_greedy)
+
     # -- paging --------------------------------------------------------------
-    def _chunkable(self, req: Request) -> bool:
+    def _chunkable(self, req: ServeRequest) -> bool:
         """Chunked prefill only where it is bitwise-exact vs one-shot prefill:
         attention stacks always; MoE only at dropless expert capacity (capacity
         is per-call, so a finite capacity factor can drop different tokens per
@@ -478,14 +513,14 @@ class Engine:
             return len(req.tokens) % c == 0 and c % self.cfg.ssm_chunk == 0
         return False
 
-    def _sharable(self, req: Request) -> bool:
+    def _sharable(self, req: ServeRequest) -> bool:
         """Prefix sharing needs both exactness conditions at once: K/V a pure
         function of the token prefix (no frontend inputs, no recurrent state
         that would be missing the shared positions) and a chunked tail prefill
         to land only the unshared suffix."""
         return self._share_ok and self._chunkable(req)
 
-    def _match(self, req: Request):
+    def _match(self, req: ServeRequest):
         """Prefix-index match for ``req``, capped so the padded chunk tail
         stays inside ``max_cache``. Returns ``(full_hits, partial, shared_len)``
         — ``shared_len`` prompt positions already resident (never the last
@@ -508,7 +543,7 @@ class Engine:
             sl = len(full) * ps
         return full, partial, sl
 
-    def _need_pages(self, req: Request, shared_len: int = 0) -> int:
+    def _need_pages(self, req: ServeRequest, shared_len: int = 0) -> int:
         """Worst-case pages this request can ever hold: prompt (+ chunk
         padding of the unshared tail) plus its full decode budget."""
         plen = len(req.tokens) + self.cfg.frontend_tokens
@@ -522,7 +557,7 @@ class Engine:
         return jnp.asarray(self.alloc.table()[slot])
 
     # -- admission -----------------------------------------------------------
-    def _admit_into(self, req: Request, slot: int) -> bool:
+    def _admit_into(self, req: ServeRequest, slot: int) -> bool:
         """Try to admit ``req`` into ``slot``; False = not enough free pages
         *after* prefix-share credit (the caller defers the request). A full-
         page prefix hit is adopted (refcount++), never charged — only the
@@ -560,8 +595,9 @@ class Engine:
                                          length=plen,
                                          share=self._sharable(req)))
             return True
-        first, one = _prefill_one(self.params, self.cfg, req.prompts(),
-                                  self.ecfg.max_cache, self.router_bias)
+        logits, one = _prefill_one(self.params, self.cfg, req.prompts(),
+                                   self.ecfg.max_cache, self.router_bias)
+        first = self._seed_slot(req, logits)
         self.alloc.ensure(slot, pages_for(plen, self.ecfg.page_size))
         self.pool, self.last, self.active = _splice(
             self.pool, one, jnp.asarray(slot), self._table_row(slot), first,
@@ -622,10 +658,12 @@ class Engine:
         return cost
 
     # -- chunked prefill ------------------------------------------------------
-    def _finish_job(self, job: _PrefillJob, first):
-        """Final chunk landed: activate the slot and (for sharable prompts)
-        register its full prompt pages in the prefix index, so later
-        admissions can adopt them — the pages' K/V is now fully resident."""
+    def _finish_job(self, job: _PrefillJob, logits):
+        """Final chunk landed: sample/argmax the first token from its logits,
+        activate the slot, and (for sharable prompts) register its full prompt
+        pages in the prefix index, so later admissions can adopt them — the
+        pages' K/V is now fully resident."""
+        first = self._seed_slot(job.req, logits)
         self.pool, self.last, self.active = _activate(
             self.pool, self.last, self.active, jnp.asarray(job.slot),
             first, jnp.asarray(job.length, jnp.int32))
@@ -662,7 +700,7 @@ class Engine:
             tbl = self.alloc.table()          # one snapshot after the ensures
             for lane, job in enumerate(take):
                 tables[lane] = tbl[job.slot]
-            firsts, self.pool = _prefill_chunks(
+            logits_j, self.pool = _prefill_chunks(
                 self.params, self.cfg, {"tokens": jnp.asarray(toks)},
                 self.pool, jnp.asarray(tables), jnp.asarray(p0s),
                 jnp.asarray(last_idxs), self.router_bias)
@@ -672,7 +710,7 @@ class Engine:
             for lane, job in enumerate(take):
                 job.p0 += c
                 if job.p0 >= job.total:
-                    self._finish_job(job, firsts[lane:lane + 1])
+                    self._finish_job(job, logits_j[lane:lane + 1])
                 else:
                     unfinished.append(job)
             for job in reversed(unfinished):      # keep front-of-queue order
@@ -691,7 +729,7 @@ class Engine:
             fr[:len(fseg)] = fseg
             chunk["frames"] = jnp.asarray(fr)[None]
         last_idx = min(max(job.length - 1 - job.p0, 0), c - 1)
-        first, self.pool = _prefill_chunk(
+        logits, self.pool = _prefill_chunk(
             self.params, self.cfg, chunk, self.pool, self._table_row(job.slot),
             jnp.asarray(job.p0, jnp.int32), jnp.asarray(last_idx, jnp.int32),
             jnp.asarray(job.slot, jnp.int32), self.router_bias)
@@ -699,14 +737,28 @@ class Engine:
         job.p0 = end
         if end >= job.total:
             self.jobs.popleft()
-            self._finish_job(job, first)
+            self._finish_job(job, logits)
 
     # -- retirement ----------------------------------------------------------
-    def _finished(self, req: Request) -> bool:
-        if len(req.out_tokens) >= req.max_new_tokens:
+    def _budget(self, req: ServeRequest) -> float:
+        """The latency bar this request is held to: its own declared deadline
+        when it has one, else the engine-wide budget."""
+        return req.deadline if req.deadline is not None \
+            else self.ecfg.latency_budget
+
+    def _finished(self, req: ServeRequest) -> bool:
+        """Per-request retirement: any of the request's stop-token ids ends it
+        the tick the token is emitted (the token is kept, like the old
+        ``eos_id``); otherwise its own ``max_new_tokens`` budget does. Records
+        the ``finish_reason`` the RequestOutput stream reports."""
+        p = req.params
+        if p.stop and req.out_tokens and req.out_tokens[-1] in p.stop:
+            req.finish_reason = "stop"
             return True
-        return req.eos_id is not None and req.out_tokens and \
-            req.out_tokens[-1] == req.eos_id
+        if len(req.out_tokens) >= p.max_new_tokens:
+            req.finish_reason = "length"
+            return True
+        return False
 
     def _retire(self):
         for slot, req in enumerate(self.slots):
@@ -714,18 +766,23 @@ class Engine:
                     or not self._finished(req):
                 continue
             req.finish_tick = self.tick
+            req.finish_time = time.perf_counter()
             self.completed.append(req)
             self.slots[slot] = None
             self.pool, self.active = _release(self.pool, self.active,
                                               jnp.asarray(slot), self.cfg)
-            self.alloc.release(slot)           # incl. unused reservation (eos)
+            self.alloc.release(slot)          # incl. unused reservation (stop)
             self.active_host[slot] = False
             self.pos_host[slot] = 0
+            self.samp_temp[slot] = 0.0        # free lane back to the argmax row
+            self.samp_topk[slot] = 0
+            self.samp_topp[slot] = 1.0
+            self._spec_cache = None
             if self.admission is not None:
                 # cost = slot-ticks consumed; feeds the anticipation memory
                 self.admission.observe_completion(
                     req.rclass, cost=float(len(req.out_tokens)),
-                    latency=float(req.latency))
+                    latency=float(req.latency), budget=self._budget(req))
 
     # -- one tick ------------------------------------------------------------
     def step(self):
@@ -742,15 +799,31 @@ class Engine:
                 # decode writes at pos: append the page lazily at the boundary
                 self.alloc.ensure(int(slot),
                                   pages_for(int(self.pos_host[slot]) + 1, page))
-            nxt, self.last, self.pool = _decode_tick(
+            # each lane's fold_in index is its request's emitted-token count —
+            # the same index the one-shot loop uses for that token
+            counts = jnp.asarray(
+                [len(r.out_tokens) if r is not None else 0
+                 for r in self.slots], jnp.int32)
+            # sample only when a resident request asks to: both do_sample
+            # variants of the compiled step stay in jit's cache, so all-greedy
+            # stretches run the pure argmax step even after sampled traffic
+            do_sample = any(r is not None and not r.params.is_greedy
+                            for r in self.slots)
+            spec = self._pool_spec() if do_sample else self._null_spec
+            nxt, self.last, self.pool, logits = _decode_tick(
                 self.params, self.cfg_decode, self.pool, self.last, self.active,
                 jnp.asarray(self.alloc.table()), self.router_bias, self.frames,
-                attn_backend=self.ecfg.attn_backend)
+                spec, counts, attn_backend=self.ecfg.attn_backend,
+                do_sample=do_sample,
+                return_logits=self.ecfg.capture_logits)
             nxt_host = np.asarray(nxt[:, 0])
+            lg_host = np.asarray(logits[:, -1]) if logits is not None else None
             for slot, req in enumerate(self.slots):
                 if req is not None and self.active_host[slot] \
                         and not self._finished(req):
                     req.out_tokens.append(int(nxt_host[slot]))
+                    if lg_host is not None:
+                        req.out_logits.append(lg_host[slot].copy())
             self.pos_host[self.active_host] += 1
         self._retire()
         if self.admission is not None:
@@ -762,30 +835,95 @@ class Engine:
         self.tick += 1
 
     # -- driver --------------------------------------------------------------
-    def run(self, requests: list[Request], max_ticks: int = 10_000) -> dict:
-        """Open-loop drive: submit each request at its ``arrival`` tick, run
-        until everything completes (or ``max_ticks``); returns ``stats()``."""
-        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    def _output_for(self, req: ServeRequest, tick: int, new_tokens: list,
+                    finished: bool,
+                    reason: Optional[str] = None) -> RequestOutput:
+        done = finished and reason is None
+        return RequestOutput(
+            rid=req.rid, new_tokens=new_tokens, tokens=list(req.out_tokens),
+            finished=finished,
+            finish_reason=reason if reason is not None
+            else (req.finish_reason if done else None),
+            tick=tick, arrival=req.arrival, admit_tick=req.admit_tick,
+            finish_tick=req.finish_tick,
+            latency_ticks=req.latency if done else None,
+            wall_latency_s=req.wall_latency_s if done else None,
+            deadline_met=(req.latency <= self._budget(req)) if done else None)
+
+    def stream(self, requests: Optional[list] = None,
+               max_ticks: int = 10_000) -> Iterator[RequestOutput]:
+        """Open-loop drive as an iterator: submit each request at its
+        ``arrival`` tick, step until everything completes (or ``max_ticks``),
+        and yield a ``RequestOutput`` per request per tick of progress —
+        ``new_tokens`` is the delta since the previous output for that rid,
+        and the terminal output carries the finish reason and the
+        tick/wall-clock latency accounting. Requests the engine refuses are
+        reported too (finish_reason "rejected" / "shed", including refusals
+        from ``submit()`` calls made before the stream started), and requests
+        still queued or in-flight when the ``max_ticks`` backstop fires get a
+        final ``finish_reason="timeout"`` output (``finished=False`` — the
+        engine still holds them and can be stepped further), so the stream is
+        a complete account of every submission's fate."""
+        pending = sorted(requests or [], key=lambda r: (r.arrival, r.rid))
         i = 0
+        sent: dict = {}                      # rid -> tokens already yielded
         while True:
             while i < len(pending) and pending[i].arrival <= self.tick:
                 self.submit(pending[i])
                 i += 1
+            # kept current every iteration (not just on drain): a consumer
+            # may break out of the stream early, and arrivals never let in
+            # must still count as demand in stats() — otherwise a policy that
+            # stalls into the backstop flatters its goodput
+            self.unsubmitted = len(pending) - i
+            t = self.tick
+            for req in self.rejected[self._reported_rejected:]:
+                yield self._output_for(req, t, [], True, reason="rejected")
+            self._reported_rejected = len(self.rejected)
             drained = (i == len(pending) and not self.queue
                        and all(r is None for r in self.slots))
-            if drained or self.tick >= max_ticks:
+            if drained or t >= max_ticks:
+                if not drained:              # backstop: account for the rest
+                    live = [r for r in self.slots if r is not None]
+                    for req in live + list(self.queue):
+                        k = sent.get(req.rid, 0)
+                        yield self._output_for(
+                            req, t, list(req.out_tokens[k:]), False,
+                            reason="timeout")
                 break
+            ndone = len(self.completed)
             self.step()
-        # arrivals the max_ticks backstop never let in still count as demand —
-        # otherwise a policy that stalls into the backstop flatters its stats
-        self.unsubmitted = len(pending) - i
+            for req in self.shed[self._reported_shed:]:  # anergy refusals
+                yield self._output_for(req, t, [], True, reason="shed")
+            self._reported_shed = len(self.shed)
+            live = [r for r in self.slots if r is not None]
+            for req in live + self.completed[ndone:]:
+                n = len(req.out_tokens)
+                k = sent.get(req.rid, 0)
+                finished = req.finish_tick == t
+                if n == k and not finished:
+                    continue
+                sent[req.rid] = n
+                yield self._output_for(req, t, list(req.out_tokens[k:n]),
+                                       finished)
+
+    def run(self, requests: list, max_ticks: int = 10_000) -> dict:
+        """Open-loop drive: submit each request at its ``arrival`` tick, run
+        until everything completes (or ``max_ticks``); returns ``stats()``.
+        ``stream()`` with the outputs discarded."""
+        for _ in self.stream(requests, max_ticks=max_ticks):
+            pass
         return self.stats()
 
     def stats(self) -> dict:
         lat = np.asarray([r.latency for r in self.completed], np.float64)
+        wall = np.asarray([r.wall_latency_s for r in self.completed
+                           if r.wall_latency_s is not None], np.float64) * 1e3
         toks = int(sum(len(r.out_tokens) for r in self.completed))
-        in_budget = int((lat <= self.ecfg.latency_budget).sum()) if lat.size \
-            else 0
+        # goodput bar is per-request: a request's own deadline when declared,
+        # the engine-wide budget otherwise
+        in_budget = sum(1 for r in self.completed
+                        if r.latency <= self._budget(r))
         in_flight = sum(r is not None for r in self.slots)
         # every request the trace produced, wherever it ended up — the goodput
         # denominator, so a policy that stalls into the max_ticks backstop
@@ -830,73 +968,14 @@ class Engine:
             "prefill_positions_skipped": self.prefill_positions_skipped,
             "prefix_hit_rate": self.shared_pages_adopted
             / max(self.sharable_prompt_pages, 1),
+            # request-facing API telemetry: wall-clock latency over
+            # completions (ms) and how much of the traffic asked to sample
+            "p50_wall_ms": float(np.percentile(wall, 50)) if wall.size
+            else empty,
+            "p99_wall_ms": float(np.percentile(wall, 99)) if wall.size
+            else empty,
+            "sampled_requests": sum(1 for r in self.completed
+                                    if not r.params.is_greedy),
+            "deadline_requests": sum(1 for r in self.completed
+                                     if r.deadline is not None),
         }
-
-
-# ---------------------------------------------------------------------------
-# synthetic open-loop traffic
-# ---------------------------------------------------------------------------
-def synthetic_trace(cfg: ModelConfig, num_requests: int = 40, seed: int = 0,
-                    burst_every: int = 10, burst_size: int = 8,
-                    light_tokens: int = 5, heavy_tokens: int = 40,
-                    heavy_frac: float = 0.15,
-                    prompt_lens: tuple = (8, 16),
-                    heavy_prompt: Optional[int] = None) -> list[Request]:
-    """Bursty heterogeneous arrivals: mostly light requests plus a heavy class
-    whose decode length alone blows a chat-style latency budget. Classes:
-    0..len(prompt_lens)-1 are light (one per prompt-length bucket); the last
-    class is heavy. Prompt lengths come from a tiny bucket set so the engine
-    compiles a bounded number of prefill shapes. ``heavy_prompt`` gives the
-    heavy class a long prompt of its own (exercises chunked prefill and the
-    paged pool's mixed-length admission)."""
-    rng = np.random.default_rng(seed)
-    reqs = []
-    n_light_classes = len(prompt_lens)
-    for rid in range(num_requests):
-        burst = rid // burst_size
-        heavy = rng.random() < heavy_frac
-        plen = int(prompt_lens[rid % n_light_classes])
-        if heavy and heavy_prompt is not None:
-            plen = int(heavy_prompt)
-        rclass = n_light_classes if heavy else rid % n_light_classes
-        steps = heavy_tokens if heavy else light_tokens + rid % 3
-        req = Request(
-            rid=rid,
-            tokens=rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
-            max_new_tokens=int(steps),
-            rclass=rclass,
-            arrival=burst * burst_every + int(rng.integers(0, 3)),
-        )
-        reqs.append(attach_modality_inputs(req, cfg, rng))
-    return reqs
-
-
-def shared_prefix_trace(cfg: ModelConfig, num_requests: int = 32,
-                        num_prefixes: int = 2, prefix_len: int = 32,
-                        suffix_lens: tuple = (4, 8),
-                        decode_lens: tuple = (6, 10),
-                        arrival_every: int = 2, seed: int = 0) -> list[Request]:
-    """System-prompt traffic: ``num_prefixes`` fixed prefixes, each followed by
-    a per-request random suffix — the workload where prefix page sharing turns
-    O(total tokens) of prefill + KV into O(unique tokens). Request class =
-    prefix id (the immune memory then tracks cost per system prompt). Suffix
-    and decode lengths come from tiny bucket sets so the engine compiles a
-    bounded number of shapes."""
-    rng = np.random.default_rng(seed)
-    prefixes = [rng.integers(0, cfg.vocab_size, size=prefix_len)
-                .astype(np.int32) for _ in range(num_prefixes)]
-    reqs = []
-    for rid in range(num_requests):
-        pfx = prefixes[rid % num_prefixes]
-        sfx = rng.integers(0, cfg.vocab_size,
-                           size=int(suffix_lens[rid % len(suffix_lens)])
-                           ).astype(np.int32)
-        req = Request(
-            rid=rid,
-            tokens=np.concatenate([pfx, sfx]),
-            max_new_tokens=int(decode_lens[rid % len(decode_lens)]),
-            rclass=rid % num_prefixes,
-            arrival=rid * arrival_every,
-        )
-        reqs.append(attach_modality_inputs(req, cfg, rng))
-    return reqs

@@ -1,0 +1,113 @@
+"""Synthetic open-loop arrival traces for the serving engine.
+
+Benchmark fixtures, not engine machinery — they emit ``ServeRequest``s for
+``Engine.submit``/``run``/``stream`` and the benchmarks, so ``serve.engine``
+stays a scheduler and the traffic shapes live here. Every trace takes the
+sampling knobs (``temperature``/``top_p``/``top_k``/``sample_seed``) so the
+same arrival process can be replayed greedy vs sampled: per-request seeds
+derive deterministically from ``sample_seed + rid``, which keeps a sampled
+trace reproducible run over run (and engine-vs-oneshot, since the seed rides
+in the request's ``SamplingParams``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .api import SamplingParams, ServeRequest
+
+
+def attach_modality_inputs(req: ServeRequest, cfg: ModelConfig,
+                           rng) -> ServeRequest:
+    """Give a request the frontend inputs its family needs (random stand-ins
+    for the stub frontends) — shared by the trace generators, the examples,
+    and the tests so the shapes can't drift apart."""
+    if cfg.family == "vlm":
+        req.patches = rng.standard_normal(
+            (cfg.frontend_tokens, cfg.frontend_dim)).astype(np.float32)
+    if cfg.family == "audio":
+        req.frames = rng.standard_normal(
+            (len(req.tokens), cfg.frontend_dim)).astype(np.float32)
+    return req
+
+
+def _params(max_new_tokens: int, temperature: float, top_p: float, top_k: int,
+            sample_seed: int, rid: int) -> SamplingParams:
+    return SamplingParams(temperature=temperature, top_p=top_p, top_k=top_k,
+                          seed=sample_seed + rid,
+                          max_new_tokens=int(max_new_tokens))
+
+
+def synthetic_trace(cfg: ModelConfig, num_requests: int = 40, seed: int = 0,
+                    burst_every: int = 10, burst_size: int = 8,
+                    light_tokens: int = 5, heavy_tokens: int = 40,
+                    heavy_frac: float = 0.15,
+                    prompt_lens: tuple = (8, 16),
+                    heavy_prompt: Optional[int] = None,
+                    temperature: float = 0.0, top_p: float = 1.0,
+                    top_k: int = 0, sample_seed: int = 0
+                    ) -> list:
+    """Bursty heterogeneous arrivals: mostly light requests plus a heavy class
+    whose decode length alone blows a chat-style latency budget. Classes:
+    0..len(prompt_lens)-1 are light (one per prompt-length bucket); the last
+    class is heavy. Prompt lengths come from a tiny bucket set so the engine
+    compiles a bounded number of prefill shapes. ``heavy_prompt`` gives the
+    heavy class a long prompt of its own (exercises chunked prefill and the
+    paged pool's mixed-length admission)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    n_light_classes = len(prompt_lens)
+    for rid in range(num_requests):
+        burst = rid // burst_size
+        heavy = rng.random() < heavy_frac
+        plen = int(prompt_lens[rid % n_light_classes])
+        if heavy and heavy_prompt is not None:
+            plen = int(heavy_prompt)
+        rclass = n_light_classes if heavy else rid % n_light_classes
+        steps = heavy_tokens if heavy else light_tokens + rid % 3
+        req = ServeRequest(
+            rid=rid,
+            tokens=rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
+            params=_params(steps, temperature, top_p, top_k, sample_seed, rid),
+            rclass=rclass,
+            arrival=burst * burst_every + int(rng.integers(0, 3)),
+        )
+        reqs.append(attach_modality_inputs(req, cfg, rng))
+    return reqs
+
+
+def shared_prefix_trace(cfg: ModelConfig, num_requests: int = 32,
+                        num_prefixes: int = 2, prefix_len: int = 32,
+                        suffix_lens: tuple = (4, 8),
+                        decode_lens: tuple = (6, 10),
+                        arrival_every: int = 2, seed: int = 0,
+                        temperature: float = 0.0, top_p: float = 1.0,
+                        top_k: int = 0, sample_seed: int = 0
+                        ) -> list:
+    """System-prompt traffic: ``num_prefixes`` fixed prefixes, each followed by
+    a per-request random suffix — the workload where prefix page sharing turns
+    O(total tokens) of prefill + KV into O(unique tokens). Request class =
+    prefix id (the immune memory then tracks cost per system prompt). Suffix
+    and decode lengths come from tiny bucket sets so the engine compiles a
+    bounded number of shapes."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, cfg.vocab_size, size=prefix_len)
+                .astype(np.int32) for _ in range(num_prefixes)]
+    reqs = []
+    for rid in range(num_requests):
+        pfx = prefixes[rid % num_prefixes]
+        sfx = rng.integers(0, cfg.vocab_size,
+                           size=int(suffix_lens[rid % len(suffix_lens)])
+                           ).astype(np.int32)
+        req = ServeRequest(
+            rid=rid,
+            tokens=np.concatenate([pfx, sfx]),
+            params=_params(decode_lens[rid % len(decode_lens)], temperature,
+                           top_p, top_k, sample_seed, rid),
+            rclass=rid % num_prefixes,
+            arrival=rid * arrival_every,
+        )
+        reqs.append(attach_modality_inputs(req, cfg, rng))
+    return reqs

@@ -26,8 +26,9 @@ import pytest
 
 from repro import configs
 from repro.models import model
-from repro.serve import decode
+from repro.serve import decode, traces
 from repro.serve import engine as eng_mod
+from repro.serve.api import SamplingParams, ServeRequest
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -53,13 +54,13 @@ def _make_requests(cfg, n, seed=0, prompt_lens=(6, 10), steps=(5, 8),
     reqs = []
     for rid in range(n):
         plen = prompt_lens[rid % len(prompt_lens)]
-        req = eng_mod.Request(
+        req = ServeRequest(
             rid=rid,
             tokens=rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
-            max_new_tokens=steps[rid % len(steps)],
+            params=SamplingParams(max_new_tokens=steps[rid % len(steps)]),
             rclass=rid % 2,
             arrival=rid * stagger)
-        reqs.append(eng_mod.attach_modality_inputs(req, cfg, rng))
+        reqs.append(traces.attach_modality_inputs(req, cfg, rng))
     return reqs
 
 
@@ -181,7 +182,9 @@ def _shared_prefix_family(cfg, seed=0):
     rng = np.random.default_rng(seed)
     donor = rng.integers(0, cfg.vocab_size, size=48).astype(np.int32)
     other = rng.integers(0, cfg.vocab_size, size=32).astype(np.int32)
-    mk = eng_mod.Request
+    def mk(rid, tokens, max_new_tokens, arrival):
+        return ServeRequest(rid=rid, tokens=tokens, arrival=arrival,
+                            params=SamplingParams(max_new_tokens=max_new_tokens))
     return [
         mk(rid=0, tokens=donor.copy(), max_new_tokens=12, arrival=0),
         # donor[:40]: 2 full-page hits + partial (page 2, 7 tokens) -> CoW
@@ -209,7 +212,7 @@ class TestPrefixSharing:
         params = _params(cfg)
         ecfg = eng_mod.EngineConfig(num_slots=4, max_cache=64, policy="fifo",
                                     prefill_chunk=8, prefill_streams=2)
-        reqs = eng_mod.shared_prefix_trace(cfg, num_requests=10,
+        reqs = traces.shared_prefix_trace(cfg, num_requests=10,
                                            num_prefixes=2, prefix_len=32,
                                            suffix_lens=(4, 8),
                                            decode_lens=(6, 10),
@@ -263,10 +266,11 @@ class TestPrefixSharing:
         prefix = rng.integers(0, cfg.vocab_size, size=32).astype(np.int32)
 
         def reqs():
-            return [eng_mod.Request(
+            return [ServeRequest(
                 rid=i, tokens=np.concatenate([prefix, rng.integers(
                     0, cfg.vocab_size, size=4).astype(np.int32)]),
-                max_new_tokens=6, arrival=(0, 8)[i]) for i in range(2)]
+                params=SamplingParams(max_new_tokens=6),
+                arrival=(0, 8)[i]) for i in range(2)]
 
         stats = {}
         for share in (True, False):
@@ -328,12 +332,16 @@ class TestEngineMechanics:
         eng = eng_mod.Engine(params, cfg, ecfg)
         eng.run([probe], max_ticks=50)
         assert len(probe.out_tokens) == 6
-        # rerun with eos = the 3rd emitted token: output must stop right there
+        # rerun with a stop id = the 3rd emitted token: output must stop
+        # right there, with the per-request finish reason recorded
         [again] = _make_requests(cfg, 1, steps=(6,))
-        again.eos_id = probe.out_tokens[2]
+        again.params = SamplingParams(max_new_tokens=6,
+                                      stop=(probe.out_tokens[2],))
         eng2 = eng_mod.Engine(params, cfg, ecfg)
         eng2.run([again], max_ticks=50)
         assert again.out_tokens == probe.out_tokens[:3]
+        assert again.finish_reason == "stop"
+        assert probe.finish_reason == "length"
 
     def test_single_token_request_retires_at_admission_tick(self, dense):
         cfg, params = dense
@@ -451,7 +459,7 @@ class TestImmuneVsFifo:
             ecfg = eng_mod.EngineConfig(num_slots=4, max_cache=64,
                                         policy=policy, num_classes=3,
                                         latency_budget=24.0)
-            trace = eng_mod.synthetic_trace(cfg, num_requests=24, seed=0)
+            trace = traces.synthetic_trace(cfg, num_requests=24, seed=0)
             eng = eng_mod.Engine(params, cfg, ecfg)
             stats[policy] = eng.run(trace, max_ticks=1200)
         assert stats["fifo"]["completed"] == 24
