@@ -1,0 +1,134 @@
+"""Bench-regression gate: diff a fresh ``BENCH_serve.json`` against the
+committed baseline and fail CI on a regression.
+
+Two kinds of rules, deliberately asymmetric:
+
+  * **parity bits are exact**: every ``*_parity_exact`` flag anywhere in the
+    new results must be ``True``. Token parity (engine vs one-shot oracle —
+    shared/CoW pages, seeded sampling, pinned-adopt, preempted-then-resumed)
+    is a correctness invariant, not a metric; there is no tolerance and no
+    baseline comparison, a single False fails the gate.
+  * **capacity metrics must not regress** vs the committed baseline:
+    admission depth under contention (``preemption.summary.
+    preempt_concurrency_hw``) and the pinned prefix cache's hit rate
+    (``pinning.summary.pinned_hit_rate``) must each be at least the
+    baseline's value minus a small epsilon. Improvements pass silently;
+    update the baseline when they should become the new floor.
+
+All engine ``checks`` dicts in the new results must also be green — those are
+each section's own acceptance bars (admits-deeper, p99-no-worse, 0.3x prefill
+ratio, ...), evaluated against the new run alone.
+
+Baselines live in ``benchmarks/baselines/`` (one per benchmark profile; CI
+runs ``--smoke`` so it diffs against ``BENCH_serve_smoke.json``). A baseline
+missing a section skips that comparison with a note — that is what allows the
+PR introducing a new section to also introduce its baseline.
+
+    PYTHONPATH=src python -m benchmarks.regression_gate \
+        --new BENCH_serve.json \
+        --baseline benchmarks/baselines/BENCH_serve_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# capacity metrics gated against the baseline: (json path, epsilon)
+NO_REGRESS = (
+    (("preemption", "summary", "preempt_concurrency_hw"), 0.0),
+    (("pinning", "summary", "pinned_hit_rate"), 0.01),
+)
+
+
+def _walk_parity(node, path=""):
+    """Yield (path, value) for every *_parity_exact flag in the tree."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            p = f"{path}.{k}" if path else str(k)
+            if str(k).endswith("parity_exact"):
+                yield p, v
+            else:
+                yield from _walk_parity(v, p)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from _walk_parity(v, f"{path}[{i}]")
+
+
+def _walk_checks(node, path=""):
+    """Yield (path, checks dict) for every summary-level checks dict."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            p = f"{path}.{k}" if path else str(k)
+            if k == "checks" and isinstance(v, dict):
+                yield p, v
+            else:
+                yield from _walk_checks(v, p)
+
+
+def _lookup(tree, path):
+    node = tree
+    for k in path:
+        if not isinstance(node, dict) or k not in node:
+            return None
+        node = node[k]
+    return node
+
+
+def gate(new: dict, baseline: dict) -> list:
+    """Return the list of failure messages (empty == gate passes)."""
+    failures = []
+    for path, val in _walk_parity(new):
+        if val is not True:
+            failures.append(f"parity bit {path} is {val!r} — token parity "
+                            f"broke (no tolerance)")
+    for path, checks in _walk_checks(new):
+        for name, ok in checks.items():
+            if ok is not True:
+                failures.append(f"check {path}.{name} failed in the new run")
+    for path, eps in NO_REGRESS:
+        new_v, base_v = _lookup(new, path), _lookup(baseline, path)
+        dotted = ".".join(path)
+        if new_v is None:
+            failures.append(f"metric {dotted} missing from the new results")
+            continue
+        if base_v is None:
+            print(f"note: baseline has no {dotted} — comparison skipped "
+                  f"(new value {new_v:.3f}); commit an updated baseline")
+            continue
+        if new_v < base_v - eps:
+            failures.append(f"metric {dotted} regressed: {new_v:.3f} < "
+                            f"baseline {base_v:.3f} (eps {eps})")
+        else:
+            print(f"ok: {dotted} {new_v:.3f} >= baseline {base_v:.3f} - {eps}")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--new", default="BENCH_serve.json",
+                    help="freshly generated benchmark results")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/BENCH_serve_smoke.json",
+                    help="committed baseline to diff against")
+    args = ap.parse_args()
+
+    with open(args.new) as fh:
+        new = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+
+    failures = gate(new, baseline)
+    if failures:
+        print("BENCH REGRESSION:")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    n_parity = sum(1 for _ in _walk_parity(new))
+    n_checks = sum(len(c) for _, c in _walk_checks(new))
+    print(f"bench gate OK: {n_parity} parity bits exact, {n_checks} checks "
+          f"green, no capacity regression vs {args.baseline}")
+
+
+if __name__ == "__main__":
+    main()

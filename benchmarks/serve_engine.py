@@ -36,6 +36,16 @@ one-shot ``serve.api.generate`` facade and must be token-identical
 (``sampling_parity_exact`` in the JSON) — same seed, same stream, either
 backend.
 
+**Memory-hierarchy comparisons** — two A/Bs for the persistent KV hierarchy:
+``run_pinning`` serves returning-tenant bursts (separated by full drains) with
+the pinned prefix cache on vs off at an equal page budget — later bursts must
+cost at most 0.3x the cold engine's prefill tokens, with bitwise parity on
+pinned-adopt completions; ``run_preemption`` serves one contention trace under
+worst-case reservation vs immune-priority preemption at the same undersized
+page budget — preemption must admit strictly deeper with a no-worse p99, with
+bitwise parity on preempted-then-resumed completions. ``benchmarks/
+regression_gate.py`` diffs these sections against a committed baseline in CI.
+
 Latencies are in engine *ticks* (one decode step for the whole slot pool), so
 results are deterministic and hardware-independent. Results go to a CSV and to
 a machine-readable ``BENCH_serve.json`` (see benchmarks/README.md) so the perf
@@ -182,7 +192,13 @@ def run_prefix(arch: str = "smollm-360m", num_requests: int = 28,
     """Prefix sharing on vs off on system-prompt traffic at an identical tight
     page budget. Sharing admits deeper (only unshared pages are charged), so
     the on-engine should sustain materially more concurrent slots — and its
-    tokens must stay bitwise one-shot-exact."""
+    tokens must stay bitwise one-shot-exact.
+
+    Runs under ``admission_mode="reserve"``: this A/B isolates what sharing
+    buys the *reservation* discipline (fewer pages charged at admit). Under
+    the preempt default both sides saturate the budget regardless, and the
+    sharing win moves to skipped prefill / pinned adoption — measured by the
+    ``pinning`` section instead."""
     cfg = configs.get_config(arch).smoke()
     params = model.init_params(jax.random.PRNGKey(0), cfg)
 
@@ -194,7 +210,7 @@ def run_prefix(arch: str = "smollm-360m", num_requests: int = 28,
                 num_slots=num_slots, max_cache=max_cache, policy="fifo",
                 page_size=page_size, num_pages=budget_pages + 1,
                 prefill_chunk=page_size, prefill_streams=2,
-                prefix_sharing=share)
+                prefix_sharing=share, admission_mode="reserve")
             trace = traces.shared_prefix_trace(
                 cfg, num_requests=num_requests, num_prefixes=2, prefix_len=32,
                 suffix_lens=(4, 8), decode_lens=(6, 10), arrival_every=1,
@@ -331,6 +347,167 @@ def run_sampling(arch: str = "smollm-360m", num_requests: int = 20,
     return {"rows": rows, "summary": summary}
 
 
+def run_pinning(arch: str = "smollm-360m", tenants: int = 2,
+                prefix_len: int = 48, bursts: int = 2, burst_size: int = 3,
+                gap: int = 100, num_slots: int = 3, max_cache: int = 64,
+                page_size: int = 16, pin_budget: int = 8,
+                seeds: tuple = (0, 1)) -> dict:
+    """Pinned prefix cache on vs off at an *equal* page budget on
+    returning-tenant traffic (bursts separated by full drains). With
+    ``pin_pages == 0`` every burst re-prefills each tenant's prefix from
+    scratch (refcounts hit zero in the gap); with a pin budget the later
+    bursts adopt the tenant's pinned chain and prefill only suffixes. The
+    acceptance bar: second-and-later-burst prefill tokens with pinning at most
+    0.3x pinning-off — and every pinned-adopt completion replays bitwise
+    through one-shot ``decode.generate``."""
+    cfg = configs.get_config(arch).smoke()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    budget_pages = num_slots * (max_cache // page_size)
+
+    rows = []
+    parity_exact = True
+    for seed in seeds:
+        for pin in (0, pin_budget):
+            ecfg = eng_mod.EngineConfig(
+                num_slots=num_slots, max_cache=max_cache, policy="fifo",
+                num_classes=tenants, page_size=page_size,
+                num_pages=budget_pages + 1, prefill_chunk=8,
+                pin_pages=pin)
+            trace = traces.returning_tenant_trace(
+                cfg, tenants=tenants, prefix_len=prefix_len,
+                burst_size=burst_size, bursts=bursts, gap=gap, seed=seed)
+            eng = eng_mod.Engine(params, cfg, ecfg)
+            s = eng.run(trace, max_ticks=gap * bursts + 200)
+            # burst 1 is identical in both runs (cold cache); the cache's win
+            # is everything after the first drain
+            s["later_burst_prefill_tokens"] = sum(
+                r.prefill_tokens for r in eng.completed if r.arrival >= gap)
+            s.update(seed=seed, engine="pin_on" if pin else "pin_off")
+            rows.append(s)
+            if pin and seed == seeds[0]:     # pinned-adopt parity, bit for bit
+                for req in eng.completed:
+                    toks, _ = decode_mod.generate(
+                        params, cfg, req.prompts(), max_cache=max_cache,
+                        steps=req.max_new_tokens)
+                    if req.out_tokens != [int(t) for t in np.asarray(toks[0])]:
+                        parity_exact = False
+        by = {r["engine"]: r for r in rows if r["seed"] == seed}
+        on, off = by["pin_on"], by["pin_off"]
+        print(f"seed {seed}: later-burst prefill {on['later_burst_prefill_tokens']}"
+              f" tokens pinned vs {off['later_burst_prefill_tokens']} unpinned | "
+              f"{on['pinned_pages_adopted']} pinned pages adopted | hit rate "
+              f"{on['pinned_hit_rate']:.2f} | {on['pins']} pins / "
+              f"{on['pin_evictions']} evictions | p99 {on['p99_latency']:.1f} "
+              f"vs {off['p99_latency']:.1f} ticks")
+
+    def mean(engine, key):
+        return float(np.mean([r[key] for r in rows if r["engine"] == engine]))
+
+    summary = {
+        "budget_pages": budget_pages,
+        "pin_budget": pin_budget,
+        "pin_on_later_prefill_tokens": mean("pin_on",
+                                            "later_burst_prefill_tokens"),
+        "pin_off_later_prefill_tokens": mean("pin_off",
+                                             "later_burst_prefill_tokens"),
+        "pinned_pages_adopted": mean("pin_on", "pinned_pages_adopted"),
+        "pinned_hit_rate": mean("pin_on", "pinned_hit_rate"),
+        "pin_on_p99": mean("pin_on", "p99_latency"),
+        "pin_off_p99": mean("pin_off", "p99_latency"),
+        "pin_parity_exact": parity_exact,
+    }
+    summary["checks"] = {
+        # the acceptance bar: a returning tenant's later bursts cost <= 0.3x
+        # the prefill tokens of the cold-cache engine at the same page budget
+        "pinned_prefill_at_most_0.3x": summary["pin_on_later_prefill_tokens"]
+        <= 0.3 * summary["pin_off_later_prefill_tokens"],
+        "pinned_pages_actually_adopted": summary["pinned_pages_adopted"] > 0,
+        "pin_p99_no_worse": summary["pin_on_p99"] <= summary["pin_off_p99"],
+        "pin_parity_exact": parity_exact,
+        "all_completed": all(r["completed"] == tenants * burst_size * bursts
+                             for r in rows),
+    }
+    return {"rows": rows, "summary": summary}
+
+
+def run_preemption(arch: str = "smollm-360m", num_requests: int = 24,
+                   num_slots: int = 4, max_cache: int = 64,
+                   page_size: int = 16, budget_pages: int = 6,
+                   seeds: tuple = (0, 1)) -> dict:
+    """Worst-case reservation vs immune-priority preemption on the *same*
+    contention trace at the *same* undersized page budget. Reservation admits
+    on each request's worst case (prompt + full decode budget), so the pool's
+    promise capacity gates concurrency; preemption admits on current footprint
+    and resolves decode-time exhaustion by evicting the lowest-priority slot
+    (replayed later, bitwise). The acceptance bar: preemption admits strictly
+    deeper and holds a no-worse p99 — and every preempted-then-resumed
+    completion is token-identical to its one-shot replay."""
+    cfg = configs.get_config(arch).smoke()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+
+    rows = []
+    parity_exact = True
+    for seed in seeds:
+        for mode in ("reserve", "preempt"):
+            ecfg = eng_mod.EngineConfig(
+                num_slots=num_slots, max_cache=max_cache, policy="immune",
+                num_classes=3, latency_budget=64.0, page_size=page_size,
+                num_pages=budget_pages + 1, prefill_chunk=16,
+                admission_mode=mode)
+            trace = traces.contention_trace(cfg, num_requests=num_requests,
+                                            seed=seed)
+            eng = eng_mod.Engine(params, cfg, ecfg)
+            s = eng.run(trace, max_ticks=50 * num_requests)
+            s.update(seed=seed, engine=mode)
+            rows.append(s)
+            if mode == "preempt" and seed == seeds[0]:
+                # EVERY preempted-then-resumed completion replays bitwise
+                for req in eng.completed:
+                    if req.preemptions == 0:
+                        continue
+                    probe = api.ServeRequest(rid=req.rid, tokens=req.tokens,
+                                             params=req.params)
+                    out = api.generate(params, cfg, probe, max_cache=max_cache)
+                    if out.tokens != list(req.out_tokens):
+                        parity_exact = False
+        by = {r["engine"]: r for r in rows if r["seed"] == seed}
+        p, r_ = by["preempt"], by["reserve"]
+        print(f"seed {seed}: preempt concurrency {p['concurrency_hw']} vs "
+              f"reserve {r_['concurrency_hw']} | p99 {p['p99_latency']:.1f} vs "
+              f"{r_['p99_latency']:.1f} ticks | {p['preemptions']} preemptions "
+              f"over {p['preempted_requests']} requests | "
+              f"{p['replayed_tokens']} tokens replayed | completed "
+              f"{p['completed']}+{p['shed']}s vs {r_['completed']}+{r_['shed']}s")
+
+    def mean(engine, key):
+        return float(np.mean([r[key] for r in rows if r["engine"] == engine]))
+
+    summary = {
+        "budget_pages": budget_pages,
+        "preempt_concurrency_hw": mean("preempt", "concurrency_hw"),
+        "reserve_concurrency_hw": mean("reserve", "concurrency_hw"),
+        "preempt_p99": mean("preempt", "p99_latency"),
+        "reserve_p99": mean("reserve", "p99_latency"),
+        "preempt_goodput": mean("preempt", "goodput"),
+        "reserve_goodput": mean("reserve", "goodput"),
+        "preemptions": mean("preempt", "preemptions"),
+        "replayed_tokens": mean("preempt", "replayed_tokens"),
+        "preempt_parity_exact": parity_exact,
+    }
+    summary["checks"] = {
+        # the acceptance bar: strictly deeper admission at the same budget...
+        "preempt_admits_strictly_deeper": summary["preempt_concurrency_hw"]
+        > summary["reserve_concurrency_hw"],
+        # ...with a no-worse tail
+        "preempt_p99_no_worse": summary["preempt_p99"]
+        <= summary["reserve_p99"],
+        # the machinery was actually exercised, not vacuously green
+        "preemptions_exercised": summary["preemptions"] > 0,
+        "preempt_parity_exact": parity_exact,
+    }
+    return {"rows": rows, "summary": summary}
+
+
 def main():
     jax.config.update("jax_platform_name", "cpu")
     ap = argparse.ArgumentParser()
@@ -352,6 +529,12 @@ def main():
     res["sampling"] = run_sampling(
         arch=args.arch, num_requests=12 if args.smoke else 20,
         seeds=tuple(args.seeds)[:2])
+    res["pinning"] = run_pinning(
+        arch=args.arch, bursts=2 if args.smoke else 3,
+        seeds=tuple(args.seeds)[:1 if args.smoke else 2])
+    res["preemption"] = run_preemption(
+        arch=args.arch, num_requests=16 if args.smoke else 24,
+        seeds=tuple(args.seeds)[:1 if args.smoke else 2])
     with open(args.json, "w") as fh:
         json.dump(res, fh, indent=1)
 
@@ -379,6 +562,23 @@ def main():
           f"tok/s wall | engine-vs-oneshot parity "
           f"{'exact' if sm['sampling_parity_exact'] else 'BROKEN'} | checks "
           f"{'OK' if sok else 'REGRESSION'}: {json.dumps(sm['checks'])}")
+    pn = res["pinning"]["summary"]
+    pnok = all(pn["checks"].values())
+    print(f"pinning: later-burst prefill "
+          f"{pn['pin_on_later_prefill_tokens']:.0f} vs "
+          f"{pn['pin_off_later_prefill_tokens']:.0f} tokens "
+          f"(ratio {pn['pin_on_later_prefill_tokens'] / max(pn['pin_off_later_prefill_tokens'], 1):.2f})"
+          f" | pinned-hit rate {pn['pinned_hit_rate']:.2f} | parity "
+          f"{'exact' if pn['pin_parity_exact'] else 'BROKEN'} | checks "
+          f"{'OK' if pnok else 'REGRESSION'}: {json.dumps(pn['checks'])}")
+    pe = res["preemption"]["summary"]
+    peok = all(pe["checks"].values())
+    print(f"preemption: concurrency {pe['preempt_concurrency_hw']:.1f} vs "
+          f"reserve {pe['reserve_concurrency_hw']:.1f} | p99 "
+          f"{pe['preempt_p99']:.1f} vs {pe['reserve_p99']:.1f} ticks | "
+          f"{pe['preemptions']:.1f} preemptions | parity "
+          f"{'exact' if pe['preempt_parity_exact'] else 'BROKEN'} | checks "
+          f"{'OK' if peok else 'REGRESSION'}: {json.dumps(pe['checks'])}")
 
 
 if __name__ == "__main__":

@@ -16,8 +16,9 @@ request a seeded sampling lane instead of greedy:
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
         --stream --requests 40 --slots 4 [--policy fifo] \
         [--temperature 0.8 --top-p 0.9 --sample-seed 7] \
-        [--trace shared-prefix] [--no-prefix-sharing] \
-        [--attn-backend pallas_interpret] [--prefill-streams 2]
+        [--trace shared-prefix|returning-tenant|contention] \
+        [--no-prefix-sharing] [--pin-pages 8] [--admission reserve] \
+        [--logprobs] [--attn-backend pallas_interpret] [--prefill-streams 2]
 """
 from __future__ import annotations
 
@@ -71,10 +72,25 @@ def main():
                          "kernels.paged_attention Pallas kernel (pallas = "
                          "compiled on TPU, pallas_interpret = runs anywhere)")
     ap.add_argument("--trace", default="bursty",
-                    choices=("bursty", "shared-prefix"),
-                    help="synthetic arrival trace: bursty heterogeneous, or "
-                         "system-prompt traffic (a few prefixes x many "
-                         "suffixes) that exercises prefix sharing")
+                    choices=("bursty", "shared-prefix", "returning-tenant",
+                             "contention"),
+                    help="synthetic arrival trace: bursty heterogeneous, "
+                         "system-prompt traffic (exercises prefix sharing), "
+                         "returning-tenant bursts with drain gaps (exercises "
+                         "the pinned prefix cache), or page-pool contention "
+                         "(exercises preemptive admission)")
+    ap.add_argument("--pin-pages", type=int, default=0,
+                    help="pinned prefix-cache budget in pages: refcount-zero "
+                         "indexed pages survive up to this many, evicted by "
+                         "immune-memory-weighted LRU (0 = legacy free-on-zero)")
+    ap.add_argument("--admission", default="preempt",
+                    choices=("preempt", "reserve"),
+                    help="page admission discipline: admit on current pages "
+                         "and preempt the lowest-priority slot on decode "
+                         "exhaustion, or legacy worst-case reservation")
+    ap.add_argument("--logprobs", action="store_true",
+                    help="record each chosen token's logprob (raw model "
+                         "distribution) in the streamed outputs")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-request sampling temperature; 0 = exact greedy")
     ap.add_argument("--top-p", type=float, default=1.0,
@@ -125,7 +141,9 @@ def main():
             prefill_chunk=args.prefill_chunk,
             prefix_sharing=args.prefix_sharing,
             attn_backend=args.attn_backend,
-            prefill_streams=args.prefill_streams)
+            prefill_streams=args.prefill_streams,
+            pin_pages=args.pin_pages,
+            admission_mode=args.admission)
         sampling = dict(temperature=args.temperature, top_p=args.top_p,
                         top_k=args.top_k, sample_seed=args.sample_seed)
         if args.trace == "shared-prefix":
@@ -133,10 +151,24 @@ def main():
                 cfg, num_requests=args.requests,
                 prefix_len=max(args.prompt_len, 2 * args.page_size),
                 decode_lens=(args.steps // 2, args.steps), **sampling)
+        elif args.trace == "returning-tenant":
+            trace = traces.returning_tenant_trace(
+                cfg, prefix_len=max(args.prompt_len, 2 * args.page_size),
+                bursts=max(2, args.requests // 12),
+                decode_lens=(args.steps // 2,), **sampling)
+        elif args.trace == "contention":
+            trace = traces.contention_trace(
+                cfg, num_requests=args.requests,
+                hog_prompt=2 * args.page_size,
+                hog_tokens=args.steps, **sampling)
         else:
             trace = traces.synthetic_trace(cfg, num_requests=args.requests,
                                            heavy_tokens=args.steps + 8,
                                            **sampling)
+        if args.logprobs:
+            from dataclasses import replace as _dc_replace
+            for req in trace:
+                req.params = _dc_replace(req.params, logprobs=True)
         eng = eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
         with mesh:
             t0 = time.perf_counter()
@@ -176,8 +208,17 @@ def main():
               f" hit rate {stats['prefix_hit_rate']:.2f} | "
               f"{stats['shared_pages_adopted']} pages adopted | "
               f"{stats['cow_forks']} CoW forks | "
+              f"{stats['nowrite_adoptions']} no-write adoptions | "
               f"{stats['prefill_positions_skipped']} prefill positions "
               f"skipped")
+        print(f"  memory hierarchy [{stats['admission_mode']}]: "
+              f"pin budget {stats['pin_pages']} pages | "
+              f"{stats['pages_pinned']} pinned at exit | {stats['pins']} pins "
+              f"/ {stats['pin_evictions']} evictions | pinned-hit rate "
+              f"{stats['pinned_hit_rate']:.2f} | {stats['preemptions']} "
+              f"preemptions over {stats['preempted_requests']} requests | "
+              f"{stats['replayed_tokens']} tokens replayed | "
+              f"{stats['prefill_tokens']} prefill tokens computed")
         for r in eng.completed[:4]:
             print(f"  req {r.rid} (class {r.rclass}): arrived {r.arrival}, "
                   f"admitted {r.admit_tick}, finished {r.finish_tick}: "

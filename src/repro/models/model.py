@@ -148,6 +148,19 @@ def sample_tokens(logits: Array, spec: SamplingSpec, step) -> Array:
     return tok[:, None].astype(jnp.int32)                       # (B, 1)
 
 
+def chosen_logprob(logits: Array, tok: Array) -> Array:
+    """Logprob of each lane's chosen token under the *raw* model distribution
+    (log-softmax of the unscaled fp32 logits — independent of temperature /
+    top-k / top-p, so greedy and sampled lanes report on the same scale).
+    ``logits`` (B, V) or (B, T, V) (last position used), ``tok`` (B, 1);
+    returns (B, 1) fp32. Pure row-wise math on the logits lane both backends
+    already hold, so the value is bitwise identical engine-vs-oneshot wherever
+    the logits are."""
+    lg = logits[:, -1] if logits.ndim == 3 else logits          # (B, V) fp32
+    lp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(lp, tok.astype(jnp.int32), axis=-1)
+
+
 def init_cache(cfg: ModelConfig, batch: int, s_max: int) -> dict:
     return {
         "layers": transformer.init_stack_cache(cfg, batch, s_max, dtype_of(cfg)),

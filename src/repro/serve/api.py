@@ -59,6 +59,8 @@ class SamplingParams:
     seed: int = 0
     max_new_tokens: int = 16
     stop: tuple = ()
+    logprobs: bool = False     # record each chosen token's logprob (under the
+    #                            raw model distribution, before temperature)
 
     def __post_init__(self):
         if self.temperature < 0:
@@ -115,12 +117,20 @@ class ServeRequest:
     out_tokens: list = field(default_factory=list)
     out_logits: list = field(default_factory=list)  # per-token (V,) fp32 rows
     #                                                 (capture_logits only)
+    out_logprobs: list = field(default_factory=list)  # per-token chosen-token
+    #                                                   logprob (params.logprobs)
     finish_reason: Optional[str] = None    # "stop" | "length"
     admit_tick: int = -1
     finish_tick: int = -1
     slot: int = -1
     submit_time: float = -1.0              # wall clock, perf_counter seconds
     finish_time: float = -1.0
+    preemptions: int = 0                   # times evicted from a slot mid-flight
+    requeue_ticks: int = 0                 # ticks spent re-queued after eviction
+    preempt_tick: int = -1                 # last eviction tick (-1: not evicted
+    #                                        or already re-admitted)
+    prefill_tokens: int = 0                # prompt positions actually computed
+    #                                        (prefix hits and replays excluded)
 
     @property
     def max_new_tokens(self) -> int:
@@ -175,6 +185,14 @@ class RequestOutput:
     latency_ticks: Optional[int] = None
     wall_latency_s: Optional[float] = None
     deadline_met: Optional[bool] = None
+    # chosen-token logprobs (None unless SamplingParams.logprobs): the delta
+    # aligned 1:1 with new_tokens, and the full stream aligned with tokens
+    new_logprobs: Optional[list] = None
+    logprobs: Optional[list] = None
+    # preemption accounting: how often this request was evicted mid-flight
+    # and how many ticks it spent re-queued waiting for re-admission
+    preemptions: int = 0
+    requeue_ticks: int = 0
 
 
 def _finish_oneshot(req: ServeRequest, stream: list, t0: float) -> RequestOutput:
@@ -220,12 +238,19 @@ def generate(params, cfg: ModelConfig,
         sampling = None if sp.is_greedy else spec_for([sp])
         res = decode.generate(params, cfg, req.prompts(), max_cache=max_cache,
                               steps=sp.max_new_tokens, router_bias=router_bias,
-                              sampling=sampling, return_logits=capture_logits)
+                              sampling=sampling, return_logits=capture_logits,
+                              return_logprobs=sp.logprobs)
         stream = [int(t) for t in np.asarray(res[0][0])]
         out = _finish_oneshot(req, stream, t0)
         if capture_logits:
             lg = np.asarray(res[2][0])                     # (steps, V) fp32
             req.out_logits = [lg[i].copy()
                               for i in range(len(req.out_tokens))]
+        if sp.logprobs:
+            lp = np.asarray(res[-1][0])                    # (steps,) fp32
+            req.out_logprobs = [float(lp[i])
+                                for i in range(len(req.out_tokens))]
+            out.new_logprobs = list(req.out_logprobs)
+            out.logprobs = list(req.out_logprobs)
         outs.append(out)
     return outs[0] if single else outs

@@ -59,11 +59,12 @@ def _sample_first(logits, spec):
 
 
 @partial(jax.jit,
-         static_argnames=("cfg", "steps", "do_sample", "return_logits"))
+         static_argnames=("cfg", "steps", "do_sample", "return_logits",
+                          "return_logprobs"))
 def _decode_loop(params, cfg: ModelConfig, first_token: Array, cache: dict,
                  steps: int, spec: model.SamplingSpec, router_bias=None,
                  frames=None, do_sample: bool = False,
-                 return_logits: bool = False):
+                 return_logits: bool = False, return_logprobs: bool = False):
     def body(carry, t):
         tok, cache = carry
         batch = {"token": tok}
@@ -75,23 +76,30 @@ def _decode_loop(params, cfg: ModelConfig, first_token: Array, cache: dict,
         # first token is index 0) — the fold_in index both backends agree on
         nxt = model.sample_tokens(logits, spec, t + 1) if do_sample \
             else greedy(logits)
-        out = (nxt[:, 0], logits[:, -1]) if return_logits else (nxt[:, 0],)
+        out = {"tok": nxt[:, 0]}
+        if return_logits:
+            out["logits"] = logits[:, -1]
+        if return_logprobs:
+            out["lp"] = model.chosen_logprob(logits, nxt)[:, 0]
         return (nxt, cache), out
 
     (_, cache), outs = jax.lax.scan(body, (first_token, cache),
                                     jnp.arange(steps))
-    toks = jnp.moveaxis(outs[0], 0, 1)                   # (B, steps)
-    lseq = jnp.moveaxis(outs[1], 0, 1) if return_logits else None
-    return toks, cache, lseq
+    toks = jnp.moveaxis(outs["tok"], 0, 1)               # (B, steps)
+    lseq = jnp.moveaxis(outs["logits"], 0, 1) if return_logits else None
+    lpseq = jnp.moveaxis(outs["lp"], 0, 1) if return_logprobs else None
+    return toks, cache, lseq, lpseq
 
 
 def generate(params, cfg: ModelConfig, prompts: dict, max_cache: int, steps: int,
              router_bias: Optional[Array] = None,
              sampling: Optional[model.SamplingSpec] = None,
-             return_logits: bool = False):
+             return_logits: bool = False, return_logprobs: bool = False):
     """Prefill the prompt batch, then decode ``steps`` tokens — argmax by
     default, per-lane sampled under ``sampling``. Returns ``(tokens, cache)``,
-    plus the per-token logits rows ``(B, steps, V)`` when ``return_logits``."""
+    plus the per-token logits rows ``(B, steps, V)`` when ``return_logits``,
+    plus each chosen token's raw-distribution logprob ``(B, steps)`` when
+    ``return_logprobs`` (always the last element when requested)."""
     b = prompts["tokens"].shape[0]
     cache = model.init_cache(cfg, b, max_cache)
     logits0, cache = model.prefill(params, cfg, prompts, cache,
@@ -102,13 +110,16 @@ def generate(params, cfg: ModelConfig, prompts: dict, max_cache: int, steps: int
     if cfg.family == "audio":
         frames = jnp.zeros((b, steps, cfg.frontend_dim),
                            prompts["frames"].dtype)
-    toks, cache, lseq = _decode_loop(
+    toks, cache, lseq, lpseq = _decode_loop(
         params, cfg, first, cache, steps,
         sampling if sampling is not None else null_spec(b),
         router_bias=router_bias, frames=frames,
-        do_sample=sampling is not None, return_logits=return_logits)
-    out = jnp.concatenate([first, toks[:, :-1]], axis=1)
+        do_sample=sampling is not None, return_logits=return_logits,
+        return_logprobs=return_logprobs)
+    out = (jnp.concatenate([first, toks[:, :-1]], axis=1), cache)
     if return_logits:
-        logits_seq = jnp.concatenate([logits0, lseq[:, :-1]], axis=1)
-        return out, cache, logits_seq
-    return out, cache
+        out = out + (jnp.concatenate([logits0, lseq[:, :-1]], axis=1),)
+    if return_logprobs:
+        lp0 = model.chosen_logprob(logits0, first)[:, 0:1]    # (B, 1)
+        out = out + (jnp.concatenate([lp0, lpseq[:, :-1]], axis=1),)
+    return out

@@ -21,14 +21,30 @@ Memory plane — the page-table layout:
     ``max_pages_per_slot = max_cache // page_size`` the gathered K/V length is
     exactly ``max_cache``, so the paged decode is bitwise-identical to the
     dense slot-row layout (null-page padding is masked to exact zeros).
-  * Admission *reserves* a request's worst-case page count
-    (``ceil((prompt + decode budget) / page_size)`` — its actual need, not the
-    ``max_cache`` worst case), then pages are appended lazily as prefill
-    chunks land and decode crosses page boundaries; retirement returns pages
-    to the free list with no zeroing or row compaction. Recurrent states and
+  * Admission charges pages under one of two disciplines
+    (``EngineConfig.admission_mode``). ``"reserve"`` (legacy) promises a
+    request's worst-case page count (``ceil((prompt + decode budget) /
+    page_size)``) up front, so decode can never stall — paid for in admission
+    pessimism. ``"preempt"`` (default) admits on *current* pages (the padded
+    prompt tail only); decode growth acquires pages on demand, and when the
+    pool runs dry the engine **preempts** the lowest-immune-priority resident
+    (anergic classes first, then over-budget, then highest remembered cost —
+    the paper's suppression signal as victim selection): its pages release,
+    it re-queues, and on re-admission it re-prefills its original prompt and
+    *replays* its recorded tokens through decode (same lane keys, same
+    fold_in indices), so a preempted-then-resumed request is token-bitwise-
+    identical to an unpreempted run. Either way pages are appended lazily as
+    prefill chunks land and decode crosses page boundaries; retirement
+    returns pages with no zeroing or row compaction. Recurrent states and
     sliding-window ring buffers are O(1)/O(window) per slot and stay
-    slot-indexed — only full attention carries a sequence-length reservation
-    worth paging.
+    slot-indexed — only full attention carries sequence-length paging.
+  * **Pinned prefix cache** (``EngineConfig.pin_pages > 0``): the allocator
+    keeps full prompt-page chains resident after their refcounts hit zero,
+    charged to a pin budget with immune-memory-weighted LRU eviction (the
+    per-class adoption-value EMA scores which chains stay hot). A returning
+    tenant minutes later adopts the pinned chain exactly like a live shared
+    one — its prefill is O(unique tokens) across idle gaps, not just within
+    a burst.
   * **Prefix sharing** (``EngineConfig.prefix_sharing``): the allocator keeps
     a refcounted index of full prompt pages keyed by their token content.
     Admission walks a new prompt through it and *adopts* every hit —
@@ -124,7 +140,7 @@ from ..models import model, transformer
 from .api import (RequestOutput, SamplingParams, ServeRequest,  # noqa: F401
                   spec_for)
 from .decode import greedy, null_spec
-from .paging import PageAllocator, pages_for
+from .paging import OutOfPages, PageAllocator, pages_for
 
 Array = jax.Array
 
@@ -152,6 +168,14 @@ class EngineConfig(NamedTuple):
     prefill_streams: int = 1          # >1: batch that many prefill jobs/tick
     capture_logits: bool = False      # record per-token logits rows on each
     #                                   request (the logits parity oracle)
+    # -- KV memory hierarchy -------------------------------------------------
+    admission_mode: str = "preempt"   # "preempt": admit on current pages and
+    #                                   evict the lowest-immune-priority slot
+    #                                   when decode would stall; "reserve":
+    #                                   legacy worst-case page reservation
+    pin_pages: int = 0                # persistent prefix-cache budget: full
+    #                                   prompt-page chains survive refcount
+    #                                   zero as pinned entries (0 = off)
 
 
 @dataclass
@@ -191,6 +215,13 @@ def _seed_token(logits, spec, do_sample: bool):
     the same draw one-shot ``decode.generate`` takes for its first token."""
     return model.sample_tokens(logits, spec, 0) if do_sample \
         else greedy(logits)
+
+
+@jax.jit
+def _chosen_lp(logits, tok):
+    """Chosen-token logprob of a seed token (the per-request admission path;
+    decoded tokens get theirs inside the compiled decode tick)."""
+    return model.chosen_logprob(logits, tok)
 
 
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 5))
@@ -250,11 +281,12 @@ def _release(pool, active, slot, cfg: ModelConfig):
 # tick, and without donation every decoded token would pay a fresh copy of the
 # whole pooled KV cache (the scan carry in decode._decode_loop gets this free)
 @partial(jax.jit,
-         static_argnames=("cfg", "attn_backend", "do_sample", "return_logits"),
+         static_argnames=("cfg", "attn_backend", "do_sample", "return_logits",
+                          "return_logprobs"),
          donate_argnums=(2, 3))
 def _decode_tick(params, cfg: ModelConfig, pool, last, active, table,
                  router_bias, frames, spec, steps_done, attn_backend="xla",
-                 do_sample=False, return_logits=False):
+                 do_sample=False, return_logits=False, return_logprobs=False):
     """One token for every slot (occupied or not) — the single compiled decode
     step. Inactive slots advance neither position nor state; their lane
     computes a garbage token that the host discards (paged K/V writes of
@@ -281,9 +313,12 @@ def _decode_tick(params, cfg: ModelConfig, pool, last, active, table,
     last = jnp.where(active[:, None], nxt, last)
     # the (S, 1, V) logits are a jit output only when the parity oracle wants
     # them — otherwise returning them would materialize a vocab-sized buffer
-    # per decoded token just for the host to drop
+    # per decoded token just for the host to drop. Chosen-token logprobs ride
+    # in-step on the logits lane already resident (no extra vocab pass on the
+    # host side) when any resident request asked for them.
     return (nxt, last, {"layers": new_pool["layers"], "pos": pos},
-            logits if return_logits else None)
+            logits if return_logits else None,
+            model.chosen_logprob(logits, nxt) if return_logprobs else None)
 
 
 # ---------------------------------------------------------------------------
@@ -372,6 +407,8 @@ class Engine:
                              f"of prefill_chunk {ecfg.prefill_chunk}")
         if ecfg.attn_backend not in ("xla", "pallas", "pallas_interpret"):
             raise ValueError(f"unknown attn_backend {ecfg.attn_backend!r}")
+        if ecfg.admission_mode not in ("preempt", "reserve"):
+            raise ValueError(f"unknown admission_mode {ecfg.admission_mode!r}")
         self.params, self.cfg, self.ecfg = params, cfg, ecfg
         self.router_bias = router_bias
         # MoE: the decode tick runs every slot, occupied or not, and expert
@@ -387,8 +424,11 @@ class Engine:
         self.maxp = ecfg.max_cache // ecfg.page_size
         num_pages = ecfg.num_pages if ecfg.num_pages is not None \
             else s * self.maxp + 1
-        self.alloc = PageAllocator(num_pages, ecfg.page_size, s, self.maxp,
-                                   share_prefix=ecfg.prefix_sharing)
+        self.alloc = PageAllocator(
+            num_pages, ecfg.page_size, s, self.maxp,
+            share_prefix=ecfg.prefix_sharing, pin_pages=ecfg.pin_pages,
+            num_classes=ecfg.num_classes, pin_decay=ecfg.mem_decay,
+            require_reservation=(ecfg.admission_mode == "reserve"))
         kinds = set(transformer.layer_kinds(cfg))
         # prefix sharing is only sound where a position's K/V is a pure
         # function of the token prefix AND the unshared tail can run through
@@ -411,6 +451,10 @@ class Engine:
         self.jobs: deque[_PrefillJob] = deque()
         self.pos_host = np.zeros(s, np.int64)      # per-slot next write index
         self.active_host = np.zeros(s, bool)
+        # per-slot tokens computed since (re-)admission, seed included — the
+        # decode fold_in index. Diverges from len(out_tokens) only while a
+        # preempted request replays its recorded history through decode.
+        self.emitted = np.zeros(s, np.int64)
         # per-slot sampling lanes (SamplingSpec rows); free slots hold the
         # greedy row (temperature 0), so their garbage lane costs argmax only
         self.samp_keys = np.zeros((s, 2), np.uint32)
@@ -439,6 +483,11 @@ class Engine:
         self.shared_pages_adopted = 0      # prefix-index hits turned refcount++
         self.prefill_positions_skipped = 0  # prompt positions never recomputed
         self.sharable_prompt_pages = 0     # hit-rate denominator (sharable reqs)
+        self.preemptions = 0               # slot evictions under page pressure
+        self.preempted_rids: set = set()   # distinct requests ever preempted
+        self.replayed_tokens = 0           # recorded tokens re-derived by decode
+        self.nowrite_adoptions = 0         # full-last-page adoptions (no fork)
+        self.prefill_tokens = 0            # prompt positions actually computed
         self._admitted_this_tick = 0
         self._decoding_before_admit = False
 
@@ -483,10 +532,22 @@ class Engine:
         self.samp_topk[req.slot] = req.params.top_k
         self.samp_topp[req.slot] = req.params.top_p
         self._spec_cache = None
-        if self.ecfg.capture_logits:
+        if self.ecfg.capture_logits and not req.out_tokens:
             req.out_logits.append(np.asarray(logits)[0, -1].copy())
         return _seed_token(logits, spec_for([req.params]),
                            do_sample=not req.params.is_greedy)
+
+    def _emit_seed(self, req: ServeRequest, logits, first) -> None:
+        """Record the prefill-seeded first token. A request resuming from
+        preemption already holds its history — the seed (bitwise identical by
+        the fold-index discipline) is re-derived, not re-recorded."""
+        if req.out_tokens:
+            self.replayed_tokens += 1
+            return
+        req.out_tokens.append(int(first[0, 0]))
+        if req.params.logprobs:
+            req.out_logprobs.append(
+                float(np.asarray(_chosen_lp(logits, first))[0, 0]))
 
     # -- paging --------------------------------------------------------------
     def _chunkable(self, req: ServeRequest) -> bool:
@@ -558,38 +619,80 @@ class Engine:
 
     # -- admission -----------------------------------------------------------
     def _admit_into(self, req: ServeRequest, slot: int) -> bool:
-        """Try to admit ``req`` into ``slot``; False = not enough free pages
-        *after* prefix-share credit (the caller defers the request). A full-
-        page prefix hit is adopted (refcount++), never charged — only the
-        unshared pages reserve from the free pool."""
+        """Try to admit ``req`` into ``slot``; False = not enough pages *after*
+        prefix-share credit (the caller defers the request). A full-page
+        prefix hit — live or pinned — is adopted (refcount++), never charged.
+
+        Under ``admission_mode="reserve"`` the request's worst case (prompt +
+        full decode budget) reserves up front; under ``"preempt"`` only its
+        *current* footprint (the padded prompt tail) is charged — decode
+        growth acquires pages on demand and preempts a lower-priority slot if
+        the pool runs dry. A preempted request re-enters here unchanged: it
+        re-prefills its original prompt and re-derives its recorded tokens by
+        replaying decode (same lane key, same fold indices — bitwise the same
+        tokens), because prefill-computed and decode-computed logits are not
+        interchangeable bitwise."""
         full, partial, sl = self._match(req)
-        charge = self._need_pages(req, sl) - len(full)
-        if not self.alloc.can_admit(charge):
-            return False
-        self.alloc.reserve(slot, charge)
-        if full:
-            self.alloc.adopt(slot, full)
         plen = len(req.tokens) + self.cfg.frontend_tokens
+        c, ps = self.ecfg.prefill_chunk, self.ecfg.page_size
+        chunkable = self._chunkable(req)
+        # no-write last page: the prompt ends exactly on the shared page's
+        # boundary and only its final token is unshared — the single write the
+        # tail chunk makes into the shared page (position plen-1) is bitwise
+        # what the page already holds (same token prefix, same position), so
+        # the page is adopted as-is and the CoW fork is skipped entirely
+        nowrite = (partial is not None and chunkable
+                   and sl == plen - 1 and plen % ps == 0)
+        if self.ecfg.admission_mode == "reserve":
+            base = self._need_pages(req, sl)
+        else:
+            cover = sl + -(-(plen - sl) // c) * c if chunkable else plen
+            # a resumed request's footprint is *proven*, not worst-case: replay
+            # re-derives every recorded token before any new work, so admit it
+            # only once pages for prompt + recorded tokens are actually there —
+            # re-entering on the prompt cover alone stalls mid-replay, gets
+            # re-evicted, and churns the pool (re-prefilling the prompt each
+            # lap) without the tail ever progressing
+            cover = max(cover, plen + len(req.out_tokens))
+            base = pages_for(cover, ps)
+        charge = base - len(full) - (1 if nowrite else 0)
+        # adoption of a pinned chain consumes reclaimable capacity the charge
+        # would otherwise count on — net the matched pinned pages out first
+        matched = full + ([partial[0]] if partial else [])
+        avail = self.alloc.available() - self.alloc.pinned_among(matched)
+        if charge > min(avail, self.maxp):
+            return False
+        if full:
+            self.alloc.adopt(slot, full, rclass=req.rclass)
+        if self.ecfg.admission_mode == "reserve":
+            self.alloc.reserve(slot, charge)
         if self._sharable(req):
-            self.sharable_prompt_pages += pages_for(plen, self.ecfg.page_size)
+            self.sharable_prompt_pages += pages_for(plen, ps)
             self.shared_pages_adopted += len(full) + (1 if partial else 0)
             self.prefill_positions_skipped += sl
-        req.slot, req.admit_tick = slot, self.tick
+        req.slot = slot
+        if req.admit_tick < 0:
+            req.admit_tick = self.tick
+        if req.preempt_tick >= 0:          # resuming after preemption
+            req.requeue_ticks += self.tick - req.preempt_tick
+            req.preempt_tick = -1
         self.slots[slot] = req
         if self._decoding_before_admit:
             self.mid_stream_admissions += 1
         self._admitted_this_tick += 1
-        c = self.ecfg.prefill_chunk
-        if self._chunkable(req):
+        if chunkable:
             if partial is not None:
-                # the unshared tail starts mid-page: adopt the donor's page,
-                # then immediately CoW-fork it (tail prefill writes into it
-                # this very admission) — the device copy replaces recomputing
-                # the shared positions
-                self.alloc.adopt(slot, [partial[0]])
-                src, dst = self.alloc.cow_fork(slot, len(full))
-                self.pool = _copy_page(self.pool, jnp.asarray(src),
-                                       jnp.asarray(dst), self.cfg)
+                self.alloc.adopt(slot, [partial[0]], rclass=req.rclass)
+                if nowrite:
+                    self.nowrite_adoptions += 1
+                else:
+                    # the unshared tail starts mid-page: CoW-fork the donor's
+                    # page (tail prefill writes divergent data into it this
+                    # very admission) — the device copy replaces recomputing
+                    # the shared positions
+                    src, dst = self.alloc.cow_fork(slot, len(full))
+                    self.pool = _copy_page(self.pool, jnp.asarray(src),
+                                           jnp.asarray(dst), self.cfg)
             total = sl + -(-(plen - sl) // c) * c
             self.jobs.append(_PrefillJob(req=req, slot=slot, p0=sl, total=total,
                                          length=plen,
@@ -598,14 +701,99 @@ class Engine:
         logits, one = _prefill_one(self.params, self.cfg, req.prompts(),
                                    self.ecfg.max_cache, self.router_bias)
         first = self._seed_slot(req, logits)
-        self.alloc.ensure(slot, pages_for(plen, self.ecfg.page_size))
+        self.alloc.ensure(slot, pages_for(plen, ps))
         self.pool, self.last, self.active = _splice(
             self.pool, one, jnp.asarray(slot), self._table_row(slot), first,
             self.last, self.active, self.cfg)
         self.active_host[slot] = True
         self.pos_host[slot] = plen
-        req.out_tokens.append(int(first[0, 0]))
+        self.emitted[slot] = 1
+        req.prefill_tokens += plen
+        self.prefill_tokens += plen
+        self._emit_seed(req, logits, first)
         return True
+
+    # -- preemption ----------------------------------------------------------
+    def _victim_score(self, req: ServeRequest) -> tuple:
+        """Preemption priority, highest evicted first: anergic classes, then
+        classes already over their latency budget, then the highest remembered
+        cost, then the *latest arrival* (within an immune-equal group the
+        oldest resident is never evicted, so it always runs to completion and
+        frees its pages — the classic livelock-free discipline; scoring by
+        progress or preemption count instead lets pressure either starve one
+        victim or rotate across the whole pool, both of which blow up the
+        tail); least progress / rid break remaining ties (FIFO engines score
+        on arrival/progress alone), so victim choice is always
+        deterministic."""
+        over = 1.0 if (self.tick - req.arrival) > self._budget(req) else 0.0
+        if self.admission is not None:
+            anergy = float(self.admission.anergy.level[req.rclass])
+            cost = self.admission.remembered_cost(req.rclass)
+        else:
+            anergy = cost = 0.0
+        return (anergy, over, cost, req.arrival,
+                -len(req.out_tokens), req.rid)
+
+    def _pick_victim(self) -> Optional[int]:
+        """The occupied slot preemption should evict first (the stalling slot
+        itself is a candidate — if it is the lowest-priority resident, it
+        self-preempts rather than evicting more deserving work)."""
+        best, best_score = None, None
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            score = self._victim_score(req)
+            if best_score is None or score > best_score:
+                best, best_score = slot, score
+        return best
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot``'s request: drop its pages (refcount--; shared and
+        pinnable chains stay resident) and any in-flight prefill job, and
+        re-queue it at the front for exact re-entry — re-admission re-prefills
+        the original prompt and replays its recorded tokens through decode,
+        reproducing them bitwise."""
+        req = self.slots[slot]
+        self.jobs = deque(j for j in self.jobs if j.slot != slot)
+        self.pool, self.active = _release(self.pool, self.active,
+                                          jnp.asarray(slot), self.cfg)
+        self.alloc.release(slot)
+        self.slots[slot] = None
+        self.active_host[slot] = False
+        self.pos_host[slot] = 0
+        self.emitted[slot] = 0
+        self.samp_temp[slot] = 0.0
+        self.samp_topk[slot] = 0
+        self.samp_topp[slot] = 1.0
+        self._spec_cache = None
+        req.slot = -1
+        req.preemptions += 1
+        req.preempt_tick = self.tick
+        self.preemptions += 1
+        self.preempted_rids.add(req.rid)
+        self.queue.appendleft(req)
+
+    def _acquire(self, slot: int, npages: int) -> bool:
+        """Grow ``slot`` to ``npages``, resolving page exhaustion by
+        preemption (admission_mode="preempt"). Returns False when the slot's
+        own request was the lowest-priority resident and preempted itself —
+        the caller must stop driving that slot. Each eviction releases a
+        resident's refcounts, so the loop strictly shrinks occupancy and
+        terminates; a lone request always fits (submit() rejects anything
+        whose worst case exceeds the pool)."""
+        if self.ecfg.admission_mode == "reserve":
+            self.alloc.ensure(slot, npages)       # covered by the reservation
+            return True
+        while True:
+            try:
+                self.alloc.ensure(slot, npages)
+                return True
+            except OutOfPages:
+                victim = self._pick_victim()
+                if victim is None or victim == slot:
+                    self._preempt(slot)
+                    return False
+                self._preempt(victim)
 
     def _admit(self):
         self._admitted_this_tick = 0
@@ -669,9 +857,11 @@ class Engine:
             first, jnp.asarray(job.length, jnp.int32))
         self.active_host[job.slot] = True
         self.pos_host[job.slot] = job.length
-        job.req.out_tokens.append(int(first[0, 0]))
+        self.emitted[job.slot] = 1
+        self._emit_seed(job.req, logits, first)
         if job.share:
-            self.alloc.register_prefix(job.slot, job.req.tokens)
+            self.alloc.register_prefix(job.slot, job.req.tokens,
+                                       rclass=job.req.rclass)
 
     def _prefill_tick(self):
         """Land one chunk of up to ``prefill_streams`` front prefill jobs (one
@@ -684,20 +874,30 @@ class Engine:
         c, page = self.ecfg.prefill_chunk, self.ecfg.page_size
         if self._multi_prefill:
             j = self.ecfg.prefill_streams
-            take = [self.jobs.popleft()
-                    for _ in range(min(len(self.jobs), j))]
+            take: list[_PrefillJob] = []
+            while self.jobs and len(take) < j:
+                job = self.jobs.popleft()
+                if not self._acquire(job.slot, pages_for(job.p0 + c, page)):
+                    continue          # the job's own request self-preempted
+                # that acquire may have preempted a job already taken: keep
+                # only lanes whose slot still belongs to their request
+                take = [t for t in take if self.slots[t.slot] is t.req]
+                take.append(job)
+            if not take:
+                return
             toks = np.zeros((j, c), np.int32)
             tables = np.zeros((j, self.maxp), np.int32)   # padding lanes: null
             p0s = np.zeros((j,), np.int32)
             last_idxs = np.zeros((j,), np.int32)
             for lane, job in enumerate(take):
                 end = job.p0 + c
-                self.alloc.ensure(job.slot, pages_for(end, page))
                 seg = job.req.tokens[job.p0:min(end, len(job.req.tokens))]
                 toks[lane, :len(seg)] = seg
                 p0s[lane] = job.p0
                 last_idxs[lane] = min(max(job.length - 1 - job.p0, 0), c - 1)
-            tbl = self.alloc.table()          # one snapshot after the ensures
+                job.req.prefill_tokens += len(seg)
+                self.prefill_tokens += len(seg)
+            tbl = self.alloc.table()          # one snapshot after the acquires
             for lane, job in enumerate(take):
                 tables[lane] = tbl[job.slot]
             logits_j, self.pool = _prefill_chunks(
@@ -718,10 +918,13 @@ class Engine:
             return
         job = self.jobs[0]
         end = job.p0 + c
-        self.alloc.ensure(job.slot, pages_for(end, page))
+        if not self._acquire(job.slot, pages_for(end, page)):
+            return                    # the job's request was requeued
         toks = np.zeros((c,), np.int32)
         seg = job.req.tokens[job.p0:min(end, len(job.req.tokens))]
         toks[:len(seg)] = seg
+        job.req.prefill_tokens += len(seg)
+        self.prefill_tokens += len(seg)
         chunk = {"tokens": jnp.asarray(toks)[None]}
         if self.cfg.family == "audio":
             fr = np.zeros((c, self.cfg.frontend_dim), np.float32)
@@ -774,6 +977,7 @@ class Engine:
             self.alloc.release(slot)          # incl. unused reservation (stop)
             self.active_host[slot] = False
             self.pos_host[slot] = 0
+            self.emitted[slot] = 0
             self.samp_temp[slot] = 0.0        # free lane back to the argmax row
             self.samp_topk[slot] = 0
             self.samp_topp[slot] = 1.0
@@ -793,37 +997,51 @@ class Engine:
         self._prefill_tick()
         self.concurrency_hw = max(self.concurrency_hw,
                                   sum(r is not None for r in self.slots))
+        page = self.ecfg.page_size
+        for slot in np.flatnonzero(self.active_host):
+            slot = int(slot)
+            if not self.active_host[slot]:
+                continue              # preempted by an earlier slot's growth
+            # decode writes at pos: append the page lazily at the boundary,
+            # preempting the lowest-priority resident if the pool is dry
+            self._acquire(slot, pages_for(int(self.pos_host[slot]) + 1, page))
         if self.active_host.any():
-            page = self.ecfg.page_size
-            for slot in np.flatnonzero(self.active_host):
-                # decode writes at pos: append the page lazily at the boundary
-                self.alloc.ensure(int(slot),
-                                  pages_for(int(self.pos_host[slot]) + 1, page))
-            # each lane's fold_in index is its request's emitted-token count —
-            # the same index the one-shot loop uses for that token
-            counts = jnp.asarray(
-                [len(r.out_tokens) if r is not None else 0
-                 for r in self.slots], jnp.int32)
+            # each lane's fold_in index is its request's emitted-token count
+            # since admission (seed included) — identical to the one-shot
+            # loop's index, and during post-preemption replay it re-walks
+            # 0..n-1 so the re-derived tokens are bitwise the recorded ones
+            counts = jnp.asarray(self.emitted, jnp.int32)
             # sample only when a resident request asks to: both do_sample
             # variants of the compiled step stay in jit's cache, so all-greedy
             # stretches run the pure argmax step even after sampled traffic
             do_sample = any(r is not None and not r.params.is_greedy
                             for r in self.slots)
+            want_lp = any(r is not None and r.params.logprobs
+                          for r in self.slots)
             spec = self._pool_spec() if do_sample else self._null_spec
-            nxt, self.last, self.pool, logits = _decode_tick(
+            nxt, self.last, self.pool, logits, lps = _decode_tick(
                 self.params, self.cfg_decode, self.pool, self.last, self.active,
                 jnp.asarray(self.alloc.table()), self.router_bias, self.frames,
                 spec, counts, attn_backend=self.ecfg.attn_backend,
                 do_sample=do_sample,
-                return_logits=self.ecfg.capture_logits)
+                return_logits=self.ecfg.capture_logits,
+                return_logprobs=want_lp)
             nxt_host = np.asarray(nxt[:, 0])
             lg_host = np.asarray(logits[:, -1]) if logits is not None else None
+            lp_host = np.asarray(lps[:, 0]) if lps is not None else None
             for slot, req in enumerate(self.slots):
-                if req is not None and self.active_host[slot] \
-                        and not self._finished(req):
+                if req is None or not self.active_host[slot] \
+                        or self._finished(req):
+                    continue
+                if self.emitted[slot] >= len(req.out_tokens):
                     req.out_tokens.append(int(nxt_host[slot]))
                     if lg_host is not None:
                         req.out_logits.append(lg_host[slot].copy())
+                    if lp_host is not None and req.params.logprobs:
+                        req.out_logprobs.append(float(lp_host[slot]))
+                else:
+                    self.replayed_tokens += 1   # replaying recorded history
+                self.emitted[slot] += 1
             self.pos_host[self.active_host] += 1
         self._retire()
         if self.admission is not None:
@@ -839,6 +1057,11 @@ class Engine:
                     finished: bool,
                     reason: Optional[str] = None) -> RequestOutput:
         done = finished and reason is None
+        new_lp = full_lp = None
+        if req.params.logprobs:
+            n = len(req.out_tokens)
+            new_lp = list(req.out_logprobs[n - len(new_tokens):n])
+            full_lp = list(req.out_logprobs)
         return RequestOutput(
             rid=req.rid, new_tokens=new_tokens, tokens=list(req.out_tokens),
             finished=finished,
@@ -848,7 +1071,9 @@ class Engine:
             finish_tick=req.finish_tick,
             latency_ticks=req.latency if done else None,
             wall_latency_s=req.wall_latency_s if done else None,
-            deadline_met=(req.latency <= self._budget(req)) if done else None)
+            deadline_met=(req.latency <= self._budget(req)) if done else None,
+            new_logprobs=new_lp, logprobs=full_lp,
+            preemptions=req.preemptions, requeue_ticks=req.requeue_ticks)
 
     def stream(self, requests: Optional[list] = None,
                max_ticks: int = 10_000) -> Iterator[RequestOutput]:
@@ -968,6 +1193,20 @@ class Engine:
             "prefill_positions_skipped": self.prefill_positions_skipped,
             "prefix_hit_rate": self.shared_pages_adopted
             / max(self.sharable_prompt_pages, 1),
+            "prefill_tokens": self.prefill_tokens,
+            "nowrite_adoptions": self.nowrite_adoptions,
+            # KV memory hierarchy: pinned prefix cache + preemption telemetry
+            "admission_mode": self.ecfg.admission_mode,
+            "pin_pages": self.alloc.pin_pages,
+            "pages_pinned": self.alloc.pages_pinned,
+            "pins": self.alloc.pins,
+            "pinned_pages_adopted": self.alloc.pinned_hits,
+            "pin_evictions": self.alloc.evictions,
+            "pinned_hit_rate": self.alloc.pinned_hits
+            / max(self.sharable_prompt_pages, 1),
+            "preemptions": self.preemptions,
+            "preempted_requests": len(self.preempted_rids),
+            "replayed_tokens": self.replayed_tokens,
             # request-facing API telemetry: wall-clock latency over
             # completions (ms) and how much of the traffic asked to sample
             "p50_wall_ms": float(np.percentile(wall, 50)) if wall.size

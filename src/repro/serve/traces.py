@@ -78,6 +78,77 @@ def synthetic_trace(cfg: ModelConfig, num_requests: int = 40, seed: int = 0,
     return reqs
 
 
+def returning_tenant_trace(cfg: ModelConfig, tenants: int = 2,
+                           prefix_len: int = 48, suffix_lens: tuple = (4,),
+                           burst_size: int = 3, bursts: int = 2,
+                           gap: int = 120, decode_lens: tuple = (6,),
+                           seed: int = 0, temperature: float = 0.0,
+                           top_p: float = 1.0, top_k: int = 0,
+                           sample_seed: int = 0) -> list:
+    """Returning-tenant traffic: each tenant owns a fixed system prompt and
+    sends ``bursts`` bursts of ``burst_size`` requests, with a ``gap`` between
+    bursts long enough for the engine to fully drain. Without a persistent
+    prefix cache every burst re-prefills the tenant's prefix from scratch
+    (refcounts hit zero between bursts); with pinning the second and later
+    bursts adopt the tenant's pages out of the pinned cache and prefill only
+    their suffixes. Request class = tenant id, so the pin memory learns
+    per-tenant adoption value."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, cfg.vocab_size, size=prefix_len)
+                .astype(np.int32) for _ in range(tenants)]
+    reqs, rid = [], 0
+    for b in range(bursts):
+        for t in range(tenants):
+            for i in range(burst_size):
+                sfx = rng.integers(
+                    0, cfg.vocab_size,
+                    size=int(suffix_lens[rid % len(suffix_lens)])
+                ).astype(np.int32)
+                req = ServeRequest(
+                    rid=rid,
+                    tokens=np.concatenate([prefixes[t], sfx]),
+                    params=_params(decode_lens[rid % len(decode_lens)],
+                                   temperature, top_p, top_k, sample_seed, rid),
+                    rclass=t,
+                    arrival=b * gap + 2 * i,
+                )
+                reqs.append(attach_modality_inputs(req, cfg, rng))
+                rid += 1
+    return reqs
+
+
+def contention_trace(cfg: ModelConfig, num_requests: int = 24,
+                     prompt_lens: tuple = (8, 16), hog_prompt: int = 32,
+                     light_tokens: int = 4, hog_tokens: int = 24,
+                     hog_every: int = 4, arrival_every: int = 1,
+                     seed: int = 0, temperature: float = 0.0,
+                     top_p: float = 1.0, top_k: int = 0,
+                     sample_seed: int = 0) -> list:
+    """Page-pool contention: a dense arrival stream mixing short interactive
+    requests with a hog class (long prompt, long decode) whose KV growth eats
+    pages mid-flight. Run it against an undersized page pool: worst-case
+    reservation keeps admission shallow, while preempt-mode admission fills
+    slots on current footprint and resolves decode-time exhaustion by evicting
+    the lowest-immune-priority slot. Hog requests are class ``len(prompt_lens)``
+    (every ``hog_every``-th rid); light classes rotate over prompt buckets."""
+    rng = np.random.default_rng(seed)
+    n_light = len(prompt_lens)
+    reqs = []
+    for rid in range(num_requests):
+        hog = hog_every > 0 and rid % hog_every == hog_every - 1
+        plen = hog_prompt if hog else int(prompt_lens[rid % n_light])
+        req = ServeRequest(
+            rid=rid,
+            tokens=rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
+            params=_params(hog_tokens if hog else light_tokens + rid % 2,
+                           temperature, top_p, top_k, sample_seed, rid),
+            rclass=n_light if hog else rid % n_light,
+            arrival=rid * arrival_every,
+        )
+        reqs.append(attach_modality_inputs(req, cfg, rng))
+    return reqs
+
+
 def shared_prefix_trace(cfg: ModelConfig, num_requests: int = 32,
                         num_prefixes: int = 2, prefix_len: int = 32,
                         suffix_lens: tuple = (4, 8),

@@ -1,0 +1,59 @@
+"""The bench-regression gate's rules, exercised on synthetic result trees:
+parity bits are exact (no tolerance), per-section checks must be green, and
+the capacity metrics (admission depth, pinned-hit rate) must not regress vs
+the baseline — a missing baseline section skips with a note so the PR that
+introduces a section can also introduce its baseline."""
+from benchmarks.regression_gate import gate
+
+BASELINE = {
+    "pinning": {"summary": {"pinned_hit_rate": 0.5}},
+    "preemption": {"summary": {"preempt_concurrency_hw": 4.0}},
+}
+
+
+def _new(hit=0.5, depth=4.0, parity=True, check=True):
+    return {
+        "pinning": {"summary": {
+            "pinned_hit_rate": hit,
+            "pin_parity_exact": parity,
+            "checks": {"pin_parity_exact": parity, "some_bar": check},
+        }},
+        "preemption": {"summary": {
+            "preempt_concurrency_hw": depth,
+            "preempt_parity_exact": True,
+        }},
+    }
+
+
+class TestGate:
+    def test_clean_run_passes(self):
+        assert gate(_new(), BASELINE) == []
+
+    def test_improvement_passes(self):
+        assert gate(_new(hit=0.9, depth=6.0), BASELINE) == []
+
+    def test_parity_bit_is_exact(self):
+        fails = gate(_new(parity=False), BASELINE)
+        assert any("parity" in f for f in fails)
+
+    def test_failed_check_fails(self):
+        assert any("some_bar" in f for f in gate(_new(check=False), BASELINE))
+
+    def test_depth_regression_fails(self):
+        assert any("preempt_concurrency_hw" in f
+                   for f in gate(_new(depth=3.0), BASELINE))
+
+    def test_hit_rate_within_epsilon_passes(self):
+        assert gate(_new(hit=0.495), BASELINE) == []
+
+    def test_hit_rate_regression_fails(self):
+        assert any("pinned_hit_rate" in f
+                   for f in gate(_new(hit=0.3), BASELINE))
+
+    def test_missing_baseline_section_skips(self):
+        assert gate(_new(), {}) == []
+
+    def test_missing_new_metric_fails(self):
+        new = _new()
+        del new["preemption"]["summary"]["preempt_concurrency_hw"]
+        assert any("missing" in f for f in gate(new, BASELINE))

@@ -15,7 +15,8 @@ import hypothesis.strategies as st
 import numpy as np
 import pytest
 
-from repro.serve.paging import NULL_PAGE, PageAllocator, pages_for
+from repro.serve.paging import (NULL_PAGE, OutOfPages, PageAllocator,
+                                pages_for)
 
 SETTINGS = hypothesis.settings(deadline=None, max_examples=60)
 
@@ -315,3 +316,164 @@ class TestInvariants:
                 n = len(a.owned(s))
                 assert list(t[s, :n]) == a.owned(s)
                 assert (t[s, n:] == NULL_PAGE).all()
+
+
+class TestPinnedCache:
+    """pin_pages > 0: refcount-zero indexed chains survive as cache entries,
+    revived by adoption, evicted immune-weighted-LRU under pressure."""
+
+    def _alloc(self, num_pages=9, pin=4, classes=2):
+        return PageAllocator(num_pages, 4, 2, 4, pin_pages=pin,
+                             num_classes=classes, require_reservation=False)
+
+    def test_release_pins_indexed_chain_and_adopt_revives(self):
+        a = self._alloc()
+        toks = np.arange(12, dtype=np.int32)       # 3 full pages
+        a.ensure(0, 3)
+        a.register_prefix(0, toks)
+        chain = a.owned(0)
+        a.release(0)
+        assert a.pages_pinned == 3 and a.pins == 3
+        assert set(chain) == a._pinned
+        assert all(a.refcount(p) == 0 for p in chain)
+        assert a.pages_in_use == 3                 # resident but unowned
+        assert a.available() == a.usable_pages     # yet fully reclaimable
+        full, partial = a.match_prefix(toks)
+        assert full == chain[:2] and partial == (chain[2], 3)
+        a.adopt(1, full + [partial[0]], rclass=1)
+        assert a.pinned_hits == 3 and a.pages_pinned == 0
+        assert all(a.refcount(p) == 1 for p in chain)
+
+    def test_pin_budget_zero_frees_on_zero(self):
+        a = self._alloc(pin=0)
+        a.ensure(0, 3)
+        a.register_prefix(0, np.arange(12, dtype=np.int32))
+        a.release(0)
+        assert a.pages_pinned == 0 and a.pages_in_use == 0
+
+    def test_budget_evicts_strictly_colder_chain(self):
+        a = self._alloc(pin=2)
+        ta = np.arange(8, dtype=np.int32)
+        tb = np.arange(8, dtype=np.int32) + 100
+        a.ensure(0, 2)
+        a.register_prefix(0, ta)
+        a.release(0)                  # pins both of A's pages (budget 2)
+        assert a.pages_pinned == 2
+        a.ensure(1, 2)
+        a.register_prefix(1, tb)
+        a.release(1)                  # B is warmer (later stamp): evicts A
+        assert a.pages_pinned == 2 and a.evictions == 2
+        assert a.match_prefix(ta) == ([], None)
+        full, partial = a.match_prefix(tb)
+        assert len(full) == 1 and partial is not None
+
+    def test_class_value_outweighs_recency(self):
+        """The immune weight in the eviction score: a chain whose class keeps
+        adopting pages is not displaced by a newer chain of a class with no
+        remembered prefix value."""
+        a = self._alloc(pin=2, classes=2)
+        ta = np.arange(8, dtype=np.int32)
+        tb = np.arange(8, dtype=np.int32) + 50
+        a.ensure(0, 2)
+        a.register_prefix(0, ta, rclass=1)
+        a.release(0)
+        for _ in range(3):            # class 1 keeps coming back for A
+            full, partial = a.match_prefix(ta)
+            a.adopt(1, full + [partial[0]], rclass=1)
+            a.release(1)
+        assert a.pages_pinned == 2
+        a.ensure(1, 2)
+        a.register_prefix(1, tb, rclass=0)
+        a.release(1)                  # class 0 never adopted anything
+        assert a.match_prefix(ta)[0], "high-value chain evicted by cold class"
+        assert a.match_prefix(tb) == ([], None)
+        assert a.pages_pinned == 2
+
+    def test_take_page_evicts_pinned_before_raising(self):
+        a = PageAllocator(4, 4, 2, 4, pin_pages=3,
+                          require_reservation=False)   # 3 usable
+        a.ensure(0, 2)
+        a.register_prefix(0, np.arange(8, dtype=np.int32))
+        a.release(0)
+        assert a.pages_pinned == 2 and a.available() == 3
+        a.ensure(1, 3)                # needs all 3: evicts the pinned chain
+        assert a.pages_pinned == 0 and a.evictions == 2
+        with pytest.raises(OutOfPages):
+            a.ensure(1, 4)            # pool truly dry: the preemption signal
+
+    def test_reservation_mode_never_raises_out_of_pages(self):
+        a = PageAllocator(4, 4, 2, 4, pin_pages=3)     # require_reservation
+        a.reserve(0, 2)
+        a.ensure(0, 2)
+        with pytest.raises(RuntimeError, match="reservation"):
+            a.ensure(0, 3)
+
+
+class TestPinnedChurn:
+    """Cache invariants under random churn in preemption mode: pinned pages
+    are never free or refcounted, the budget holds, conservation holds, the
+    index never points at a freed page, and OutOfPages is recoverable by
+    releasing (preempting) the stalling slot."""
+
+    @SETTINGS
+    @hypothesis.given(seed=st.integers(0, 10_000),
+                      num_pages=st.integers(4, 24),
+                      pin_pages=st.integers(0, 8),
+                      num_slots=st.integers(1, 4),
+                      steps=st.integers(1, 80))
+    def test_pinned_cache_churn_invariants(self, seed, num_pages, pin_pages,
+                                           num_slots, steps):
+        import random
+        rng = random.Random(seed)
+        ps, maxp = 4, 4
+        a = PageAllocator(num_pages, ps, num_slots, maxp, pin_pages=pin_pages,
+                          num_classes=3, require_reservation=False)
+        prompts = [np.asarray([rng.randrange(8) for _ in range(ps * maxp)],
+                              np.int32) for _ in range(3)]
+        for _ in range(steps):
+            slot = rng.randrange(num_slots)
+            op = rng.random()
+            busy = bool(a.owned(slot))
+            try:
+                if op < 0.45 and not busy:
+                    rc = rng.randrange(3)
+                    toks = prompts[rng.randrange(len(prompts))]
+                    toks = toks[:rng.randrange(2, len(toks) + 1)]
+                    need = pages_for(len(toks), ps)
+                    full, partial = a.match_prefix(toks)
+                    a.adopt(slot, full, rclass=rc)
+                    if partial is not None:
+                        a.adopt(slot, [partial[0]], rclass=rc)
+                        src, dst = a.cow_fork(slot, len(full))
+                        assert dst != src and a.refcount(dst) == 1
+                    a.ensure(slot, need)
+                    a.register_prefix(slot, toks, rclass=rc)
+                elif op < 0.7 and busy:
+                    a.ensure(slot, min(maxp, len(a.owned(slot)) + 1))
+                elif busy:
+                    a.release(slot)
+            except OutOfPages:
+                a.release(slot)       # self-preempt, as the engine would
+            # -- the cache invariants -------------------------------------
+            owned = [p for s in range(num_slots) for p in a.owned(s)]
+            live = set(owned)
+            assert a.live_refs() == len(owned)
+            assert not (a._pinned & set(a._free)), "page pinned AND free"
+            assert not (a._pinned & live), "page pinned AND refcounted"
+            assert all(a.refcount(p) == 0 for p in a._pinned)
+            assert a.pages_pinned <= a.pin_pages
+            assert len(a._free) + len(live) + a.pages_pinned == \
+                a.usable_pages, "conservation violated"
+            assert a.available() >= 0
+            for _, pid in a._index.values():
+                assert a.refcount(pid) > 0 or pid in a._pinned, \
+                    "index points at a freed page"
+            for key, (node, _) in a._index.items():
+                for kid in a._node_kids.get(node, ()):
+                    assert a.refcount(kid) > 0 or kid in a._pinned, \
+                        "indexed chain has a freed child"
+        for s in range(num_slots):
+            if a.owned(s):
+                a.release(s)
+        assert a.live_refs() == 0
+        assert a.pages_in_use == a.pages_pinned   # drained: cache only
