@@ -10,10 +10,16 @@ Two kinds of rules, deliberately asymmetric:
     baseline comparison, a single False fails the gate.
   * **capacity metrics must not regress** vs the committed baseline:
     admission depth under contention (``preemption.summary.
-    preempt_concurrency_hw``) and the pinned prefix cache's hit rate
-    (``pinning.summary.pinned_hit_rate``) must each be at least the
-    baseline's value minus a small epsilon. Improvements pass silently;
-    update the baseline when they should become the new floor.
+    preempt_concurrency_hw``), the pinned prefix cache's hit rate
+    (``pinning.summary.pinned_hit_rate``), and the placement router's
+    prefix-affinity hit rate (``routing.summary.affinity_hit_rate``) must
+    each be at least the baseline's value minus a small epsilon.
+    Improvements pass silently; update the baseline when they should become
+    the new floor.
+
+The ``routing`` section's own checks carry the multi-replica acceptance bar:
+immune-placement p99 at most the best baseline policy's (rr/jsq) and
+placement invariance bitwise exact across policies and replica counts.
 
 All engine ``checks`` dicts in the new results must also be green — those are
 each section's own acceptance bars (admits-deeper, p99-no-worse, 0.3x prefill
@@ -38,6 +44,7 @@ import sys
 NO_REGRESS = (
     (("preemption", "summary", "preempt_concurrency_hw"), 0.0),
     (("pinning", "summary", "pinned_hit_rate"), 0.01),
+    (("routing", "summary", "affinity_hit_rate"), 0.01),
 )
 
 

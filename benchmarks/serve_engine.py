@@ -46,6 +46,14 @@ page budget — preemption must admit strictly deeper with a no-worse p99, with
 bitwise parity on preempted-then-resumed completions. ``benchmarks/
 regression_gate.py`` diffs these sections against a committed baseline in CI.
 
+**Routing comparison** — ``run_routing`` drives the multi-replica placement
+router (``serve/router.py``) over the multi-tenant fleet trace: immune
+placement (prefix affinity -> anergy draining -> least remembered cost) vs
+round-robin and join-shortest-queue at the same replica count and per-replica
+page/pin budget. Immune p99 must be at most the best baseline's, affinity
+hits positive, and per-request tokens bitwise identical across every policy
+and replica count (``routing_parity_exact``).
+
 Latencies are in engine *ticks* (one decode step for the whole slot pool), so
 results are deterministic and hardware-independent. Results go to a CSV and to
 a machine-readable ``BENCH_serve.json`` (see benchmarks/README.md) so the perf
@@ -508,6 +516,106 @@ def run_preemption(arch: str = "smollm-360m", num_requests: int = 24,
     return {"rows": rows, "summary": summary}
 
 
+def run_routing(arch: str = "smollm-360m", replicas: int = 2,
+                num_requests: int = 24, tenants: int = 3,
+                prefix_len: int = 32, num_slots: int = 2, max_cache: int = 64,
+                page_size: int = 16, pin_pages: int = 4,
+                seeds: tuple = (0, 1)) -> dict:
+    """Placement-policy A/B over ``replicas`` engine replicas on the
+    multi-tenant fleet trace (tenant-keyed prompts, bursty arrivals, one hot
+    tenant), every policy at the *same* replica count and per-replica page/pin
+    budget. Round-robin and join-shortest-queue are the taxonomy baselines;
+    the immune router places by prefix affinity -> anergy draining -> least
+    remembered cost, so a tenant's traffic stays where its pinned chains live
+    and the fleet prefills only suffixes. The bar: immune p99 at most the best
+    baseline's, affinity hits actually taken, and per-request tokens bitwise
+    identical across every (policy, replica-count) run — placement decides
+    where a request runs, never what it computes (``routing_parity_exact``;
+    an immune single-replica run rides along to pin the replica-count axis)."""
+    from repro.serve import router as rt_mod
+
+    cfg = configs.get_config(arch).smoke()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+
+    def _replica_cfg():
+        return eng_mod.EngineConfig(
+            num_slots=num_slots, max_cache=max_cache, policy="immune",
+            num_classes=tenants, latency_budget=64.0, page_size=page_size,
+            num_pages=num_slots * (max_cache // page_size) + 1,
+            prefill_chunk=16, pin_pages=pin_pages)
+
+    rows = []
+    parity_exact = True
+    for seed in seeds:
+        tokens_by_rid: dict = {}            # parity across runs at this seed
+        for policy in ("rr", "jsq", "immune"):
+            for n in ((replicas, 1) if policy == "immune" else (replicas,)):
+                router = rt_mod.Router(
+                    [eng_mod.Engine(params, cfg, _replica_cfg())
+                     for _ in range(n)],
+                    rt_mod.RouterConfig(policy=policy))
+                # fresh trace per run: serving mutates the requests
+                trace = traces.fleet_trace(cfg, tenants=tenants,
+                                           num_requests=num_requests,
+                                           prefix_len=prefix_len, seed=seed)
+                s = router.run(trace, max_ticks=50 * num_requests)
+                del s["per_replica"]        # keep the JSON rows flat
+                s.update(seed=seed, engine=f"{policy}_x{n}")
+                rows.append(s)
+                for req in router.completed:
+                    ref = tokens_by_rid.setdefault(req.rid,
+                                                   list(req.out_tokens))
+                    if ref != list(req.out_tokens):
+                        parity_exact = False
+        by = {r["engine"]: r for r in rows if r["seed"] == seed}
+        im, rr_, jq = (by[f"{p}_x{replicas}"] for p in ("immune", "rr", "jsq"))
+        print(f"seed {seed}: immune p99 {im['p99_latency']:.1f} vs rr "
+              f"{rr_['p99_latency']:.1f} / jsq {jq['p99_latency']:.1f} ticks | "
+              f"affinity {im['affinity_hits']}/{im['affinity_checks']} "
+              f"({im['affinity_tokens']} resident tokens) | prefill "
+              f"{im['prefill_tokens']} vs {rr_['prefill_tokens']} / "
+              f"{jq['prefill_tokens']} tokens | placements {im['placements']} "
+              f"| drains {im['drain_skips']}")
+
+    def mean(engine, key):
+        return float(np.mean([r[key] for r in rows if r["engine"] == engine]))
+
+    lab = f"_x{replicas}"
+    summary = {
+        "replicas": replicas,
+        "pages_per_replica": num_slots * (max_cache // page_size),
+        "pin_pages_per_replica": pin_pages,
+        "immune_p99": mean("immune" + lab, "p99_latency"),
+        "rr_p99": mean("rr" + lab, "p99_latency"),
+        "jsq_p99": mean("jsq" + lab, "p99_latency"),
+        "immune_goodput": mean("immune" + lab, "goodput"),
+        "rr_goodput": mean("rr" + lab, "goodput"),
+        "jsq_goodput": mean("jsq" + lab, "goodput"),
+        "affinity_hit_rate": mean("immune" + lab, "affinity_hit_rate"),
+        "affinity_tokens": mean("immune" + lab, "affinity_tokens"),
+        "immune_prefill_tokens": mean("immune" + lab, "prefill_tokens"),
+        "rr_prefill_tokens": mean("rr" + lab, "prefill_tokens"),
+        "jsq_prefill_tokens": mean("jsq" + lab, "prefill_tokens"),
+        "placement_imbalance": mean("immune" + lab, "placement_imbalance"),
+        "routing_parity_exact": parity_exact,
+    }
+    summary["checks"] = {
+        # the acceptance bar: immune placement holds the best baseline's tail
+        "immune_p99_no_worse_than_baselines": summary["immune_p99"]
+        <= min(summary["rr_p99"], summary["jsq_p99"]),
+        # the affinity signal was actually exercised, not vacuously green
+        "affinity_hits_positive": summary["affinity_hit_rate"] > 0,
+        # affinity placements skip prefix prefill the baselines re-pay
+        "immune_prefills_least": summary["immune_prefill_tokens"]
+        <= min(summary["rr_prefill_tokens"], summary["jsq_prefill_tokens"]),
+        "routing_parity_exact": parity_exact,
+        "all_completed": all(r["completed"] == num_requests
+                             and r["shed"] == 0 and r["unserved"] == 0
+                             for r in rows),
+    }
+    return {"rows": rows, "summary": summary}
+
+
 def main():
     jax.config.update("jax_platform_name", "cpu")
     ap = argparse.ArgumentParser()
@@ -534,6 +642,9 @@ def main():
         seeds=tuple(args.seeds)[:1 if args.smoke else 2])
     res["preemption"] = run_preemption(
         arch=args.arch, num_requests=16 if args.smoke else 24,
+        seeds=tuple(args.seeds)[:1 if args.smoke else 2])
+    res["routing"] = run_routing(
+        arch=args.arch, num_requests=12 if args.smoke else 24,
         seeds=tuple(args.seeds)[:1 if args.smoke else 2])
     with open(args.json, "w") as fh:
         json.dump(res, fh, indent=1)
@@ -579,6 +690,16 @@ def main():
           f"{pe['preemptions']:.1f} preemptions | parity "
           f"{'exact' if pe['preempt_parity_exact'] else 'BROKEN'} | checks "
           f"{'OK' if peok else 'REGRESSION'}: {json.dumps(pe['checks'])}")
+    rt = res["routing"]["summary"]
+    rtok = all(rt["checks"].values())
+    print(f"routing: immune p99 {rt['immune_p99']:.1f} vs rr "
+          f"{rt['rr_p99']:.1f} / jsq {rt['jsq_p99']:.1f} ticks at "
+          f"{rt['replicas']} replicas | affinity hit rate "
+          f"{rt['affinity_hit_rate']:.2f} | prefill {rt['immune_prefill_tokens']:.0f}"
+          f" vs {rt['rr_prefill_tokens']:.0f} / {rt['jsq_prefill_tokens']:.0f} "
+          f"tokens | parity "
+          f"{'exact' if rt['routing_parity_exact'] else 'BROKEN'} | checks "
+          f"{'OK' if rtok else 'REGRESSION'}: {json.dumps(rt['checks'])}")
 
 
 if __name__ == "__main__":

@@ -16,9 +16,18 @@ request a seeded sampling lane instead of greedy:
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
         --stream --requests 40 --slots 4 [--policy fifo] \
         [--temperature 0.8 --top-p 0.9 --sample-seed 7] \
-        [--trace shared-prefix|returning-tenant|contention] \
+        [--trace shared-prefix|returning-tenant|contention|fleet] \
         [--no-prefix-sharing] [--pin-pages 8] [--admission reserve] \
         [--logprobs] [--attn-backend pallas_interpret] [--prefill-streams 2]
+
+``--replicas N`` (with ``--stream``) serves the trace through the
+multi-replica placement router instead of one engine: N identical replicas,
+one global queue, per-tick placement under ``--router immune|rr|jsq`` —
+immune placement routes by prefix affinity, drains anergic replicas, and
+prices backlog at remembered per-class cost (see serve/router.py):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+        --stream --trace fleet --replicas 3 --router immune --pin-pages 8
 """
 from __future__ import annotations
 
@@ -73,12 +82,24 @@ def main():
                          "compiled on TPU, pallas_interpret = runs anywhere)")
     ap.add_argument("--trace", default="bursty",
                     choices=("bursty", "shared-prefix", "returning-tenant",
-                             "contention"),
+                             "contention", "fleet"),
                     help="synthetic arrival trace: bursty heterogeneous, "
                          "system-prompt traffic (exercises prefix sharing), "
                          "returning-tenant bursts with drain gaps (exercises "
-                         "the pinned prefix cache), or page-pool contention "
-                         "(exercises preemptive admission)")
+                         "the pinned prefix cache), page-pool contention "
+                         "(exercises preemptive admission), or multi-tenant "
+                         "fleet traffic with hot-replica skew (exercises the "
+                         "placement router)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help=">1: serve through the multi-replica placement "
+                         "router (serve.router) — N engine replicas, one "
+                         "global queue, per-tick placement")
+    ap.add_argument("--router", default="immune",
+                    choices=("immune", "rr", "jsq"),
+                    help="placement policy over the replicas: immune "
+                         "(prefix affinity -> anergy draining -> least "
+                         "remembered cost), round-robin, or "
+                         "join-shortest-queue")
     ap.add_argument("--pin-pages", type=int, default=0,
                     help="pinned prefix-cache budget in pages: refcount-zero "
                          "indexed pages survive up to this many, evicted by "
@@ -161,6 +182,11 @@ def main():
                 cfg, num_requests=args.requests,
                 hog_prompt=2 * args.page_size,
                 hog_tokens=args.steps, **sampling)
+        elif args.trace == "fleet":
+            trace = traces.fleet_trace(
+                cfg, num_requests=args.requests,
+                prefix_len=max(args.prompt_len, 2 * args.page_size),
+                decode_lens=(args.steps // 2, args.steps), **sampling)
         else:
             trace = traces.synthetic_trace(cfg, num_requests=args.requests,
                                            heavy_tokens=args.steps + 8,
@@ -169,6 +195,39 @@ def main():
             from dataclasses import replace as _dc_replace
             for req in trace:
                 req.params = _dc_replace(req.params, logprobs=True)
+        if args.replicas > 1:
+            from repro.serve import router as rt_mod
+            fleet = [eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
+                     for _ in range(args.replicas)]
+            router = rt_mod.Router(fleet,
+                                   rt_mod.RouterConfig(policy=args.router))
+            with mesh:
+                t0 = time.perf_counter()
+                stats = router.run(trace, max_ticks=50 * args.requests)
+            dt = time.perf_counter() - t0
+            print(f"[{args.router} x {args.replicas}] {stats['completed']} "
+                  f"completed / {stats['shed']} shed / {stats['rejected']} "
+                  f"rejected of {args.requests} requests in {stats['ticks']} "
+                  f"ticks ({dt:.1f}s wall incl. compile)")
+            print(f"  throughput {stats['throughput']:.2f} tok/tick | p50 "
+                  f"{stats['p50_latency']:.0f} / p99 {stats['p99_latency']:.0f}"
+                  f" ticks | goodput {stats['goodput']:.2f}")
+            print(f"  placements {stats['placements']} (imbalance "
+                  f"{stats['placement_imbalance']:.2f}) | affinity "
+                  f"{stats['affinity_hits']}/{stats['affinity_checks']} hits "
+                  f"({stats['affinity_tokens']} resident tokens) | "
+                  f"{stats['drain_skips']} drain skips / "
+                  f"{stats['drain_overflow']} overflow")
+            print(f"  fleet: {stats['prefill_tokens']} prefill tokens | "
+                  f"{stats['preemptions']} preemptions | "
+                  f"{stats['replayed_tokens']} tokens replayed | "
+                  f"{stats['pinned_pages_adopted']} pinned pages adopted")
+            for i, p in enumerate(stats["per_replica"]):
+                print(f"  replica {i}: {p['completed']} completed | "
+                      f"p99 {p['p99_latency']:.0f} ticks | pages hw "
+                      f"{p['pages_hw']}/{p['pages_budget']} | pinned-hit rate "
+                      f"{p['pinned_hit_rate']:.2f}")
+            return
         eng = eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
         with mesh:
             t0 = time.perf_counter()

@@ -8,7 +8,8 @@ are two backends of one front door:
     ``temperature == 0`` is *exact* greedy — bitwise the argmax path.
   * ``ServeRequest``   — prompt + params + the scheduling metadata the immune
     admission loop reads (``rclass``, ``arrival``, optional per-request
-    ``deadline`` overriding the engine-wide latency budget). This is the
+    wall-clock ``deadline`` overriding the engine-wide tick budget). This is
+    the
     anticipation argument (Boulmier et al., PAPERS.md) made concrete: the
     scheduler sees each request's declared intent, not just its queue slot.
   * ``RequestOutput``  — incremental token deltas plus finish reason and
@@ -100,9 +101,11 @@ class ServeRequest:
 
     ``rclass`` buckets requests into the classes the immune admission
     controller remembers (endpoint, tenant, prompt-shape bucket); ``arrival``
-    is the tick the request enters the queue; ``deadline`` (ticks after
-    arrival) overrides the engine-wide latency budget for this request's
-    goodput/anergy accounting when set."""
+    is the tick the request enters the queue; ``deadline`` is **wall-clock
+    seconds after submission** and overrides the engine-wide (tick-denominated)
+    latency budget for this request's goodput/anergy accounting when set —
+    each bar is only ever compared against a latency in its own unit (see
+    ``EngineConfig`` and ``Engine._slo``)."""
 
     rid: int
     tokens: np.ndarray                     # (L,) int32 prompt
@@ -126,6 +129,9 @@ class ServeRequest:
     submit_time: float = -1.0              # wall clock, perf_counter seconds
     finish_time: float = -1.0
     preemptions: int = 0                   # times evicted from a slot mid-flight
+    replayed_tokens: int = 0               # recorded tokens re-derived by decode
+    #                                        after preemption — slot-ticks the
+    #                                        request burned beyond its emissions
     requeue_ticks: int = 0                 # ticks spent re-queued after eviction
     preempt_tick: int = -1                 # last eviction tick (-1: not evicted
     #                                        or already re-admitted)

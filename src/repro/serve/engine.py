@@ -150,6 +150,11 @@ class EngineConfig(NamedTuple):
     max_cache: int = 96               # per-slot logical KV capacity (tokens)
     policy: str = "immune"            # "immune" | "fifo"
     num_classes: int = 4
+    # Unit discipline: latency_budget is engine TICKS and is only ever compared
+    # against tick latencies (finish_tick - arrival); a per-request
+    # ServeRequest.deadline is wall-clock SECONDS and is only ever compared
+    # against wall-clock latencies (finish_time - submit_time). One unit per
+    # comparison — see Engine._slo.
     latency_budget: float = 32.0      # ticks; beyond this a completion "blew" SLO
     mem_decay: float = 0.8            # cost-memory EMA decay
     reg_threshold: float = 2.0        # admission pauses while response exceeds this
@@ -543,6 +548,7 @@ class Engine:
         the fold-index discipline) is re-derived, not re-recorded."""
         if req.out_tokens:
             self.replayed_tokens += 1
+            req.replayed_tokens += 1
             return
         req.out_tokens.append(int(first[0, 0]))
         if req.params.logprobs:
@@ -725,7 +731,7 @@ class Engine:
         tail); least progress / rid break remaining ties (FIFO engines score
         on arrival/progress alone), so victim choice is always
         deterministic."""
-        over = 1.0 if (self.tick - req.arrival) > self._budget(req) else 0.0
+        over = 1.0 if self._over_budget_now(req) else 0.0
         if self.admission is not None:
             anergy = float(self.admission.anergy.level[req.rclass])
             cost = self.admission.remembered_cost(req.rclass)
@@ -943,11 +949,32 @@ class Engine:
             self._finish_job(job, logits)
 
     # -- retirement ----------------------------------------------------------
-    def _budget(self, req: ServeRequest) -> float:
-        """The latency bar this request is held to: its own declared deadline
-        when it has one, else the engine-wide budget."""
-        return req.deadline if req.deadline is not None \
-            else self.ecfg.latency_budget
+    def _slo(self, req: ServeRequest) -> tuple:
+        """``(latency, bar)`` for this completed request's SLO accounting,
+        both in ONE unit: a declared ``deadline`` is wall-clock seconds and is
+        judged against wall-clock latency; otherwise tick latency is judged
+        against the tick-denominated ``EngineConfig.latency_budget``. (The old
+        ``_budget`` helper handed a wall-clock deadline to tick comparisons —
+        a deadline-bearing request was judged over/under budget in the wrong
+        unit.)"""
+        if req.deadline is not None and req.wall_latency_s is not None:
+            return req.wall_latency_s, float(req.deadline)
+        return float(req.latency), float(self.ecfg.latency_budget)
+
+    def _met_budget(self, req: ServeRequest) -> bool:
+        """Did this completed request meet its latency bar (its own wall-clock
+        deadline if declared, the engine-wide tick budget otherwise)?"""
+        lat, bar = self._slo(req)
+        return lat <= bar
+
+    def _over_budget_now(self, req: ServeRequest) -> bool:
+        """Mid-flight over-budget signal (victim scoring), same unit
+        discipline as ``_slo`` but on elapsed time: wall-clock elapsed against
+        a declared deadline, tick elapsed against the engine budget."""
+        if req.deadline is not None:
+            return req.submit_time >= 0 and \
+                time.perf_counter() - req.submit_time > req.deadline
+        return (self.tick - req.arrival) > self.ecfg.latency_budget
 
     def _finished(self, req: ServeRequest) -> bool:
         """Per-request retirement: any of the request's stop-token ids ends it
@@ -983,10 +1010,16 @@ class Engine:
             self.samp_topp[slot] = 1.0
             self._spec_cache = None
             if self.admission is not None:
-                # cost = slot-ticks consumed; feeds the anticipation memory
+                # cost = slot-ticks actually consumed: emitted tokens PLUS any
+                # recorded tokens re-derived after preemption — a replayed
+                # token burns the same decode tick a fresh one does, and
+                # charging emissions alone taught the memory that exactly the
+                # preempt-prone classes it should suppress were cheap
+                lat, bar = self._slo(req)
                 self.admission.observe_completion(
-                    req.rclass, cost=float(len(req.out_tokens)),
-                    latency=float(req.latency), budget=self._budget(req))
+                    req.rclass,
+                    cost=float(len(req.out_tokens) + req.replayed_tokens),
+                    latency=lat, budget=bar)
 
     # -- one tick ------------------------------------------------------------
     def step(self):
@@ -1041,6 +1074,7 @@ class Engine:
                         req.out_logprobs.append(float(lp_host[slot]))
                 else:
                     self.replayed_tokens += 1   # replaying recorded history
+                    req.replayed_tokens += 1
                 self.emitted[slot] += 1
             self.pos_host[self.active_host] += 1
         self._retire()
@@ -1071,7 +1105,7 @@ class Engine:
             finish_tick=req.finish_tick,
             latency_ticks=req.latency if done else None,
             wall_latency_s=req.wall_latency_s if done else None,
-            deadline_met=(req.latency <= self._budget(req)) if done else None,
+            deadline_met=self._met_budget(req) if done else None,
             new_logprobs=new_lp, logprobs=full_lp,
             preemptions=req.preemptions, requeue_ticks=req.requeue_ticks)
 
@@ -1145,10 +1179,9 @@ class Engine:
         wall = np.asarray([r.wall_latency_s for r in self.completed
                            if r.wall_latency_s is not None], np.float64) * 1e3
         toks = int(sum(len(r.out_tokens) for r in self.completed))
-        # goodput bar is per-request: a request's own deadline when declared,
-        # the engine-wide budget otherwise
-        in_budget = sum(1 for r in self.completed
-                        if r.latency <= self._budget(r))
+        # goodput bar is per-request: a request's own wall-clock deadline when
+        # declared, the engine-wide tick budget otherwise (unit-consistent)
+        in_budget = sum(1 for r in self.completed if self._met_budget(r))
         in_flight = sum(r is not None for r in self.slots)
         # every request the trace produced, wherever it ended up — the goodput
         # denominator, so a policy that stalls into the max_ticks backstop
@@ -1218,3 +1251,35 @@ class Engine:
             "deadline_requests": sum(1 for r in self.completed
                                      if r.deadline is not None),
         }
+
+    # -- placement telemetry (read by serve.router for global placement) -----
+    def class_costs(self) -> np.ndarray:
+        """Per-class remembered decode cost (the ``ImmuneMemory`` slot-tick
+        EMA) — the router's load model. All zeros under the FIFO policy,
+        which has no memory."""
+        if self.admission is None:
+            return np.zeros(self.ecfg.num_classes, np.float64)
+        return np.asarray(self.admission.memory.value, np.float64)
+
+    def anergy_levels(self) -> np.ndarray:
+        """Per-class anergy levels. A router drains a replica for classes it
+        holds anergic (no new placements until IL-2 revives them) — placing
+        there would only have local admission shed the request."""
+        if self.admission is None:
+            return np.zeros(self.ecfg.num_classes, np.float64)
+        return np.asarray(self.admission.anergy.level, np.float64)
+
+    def prefix_affinity(self, req: ServeRequest) -> int:
+        """Prompt positions of ``req`` already resident in this engine's page
+        pool (live shared or pinned chains). Placement affinity: routing the
+        request here skips exactly this much prefill."""
+        return self._match(req)[2]
+
+    def pinned_chain_keys(self) -> list:
+        """Token-content keys of this engine's pinned prefix-cache pages."""
+        return self.alloc.pinned_chain_keys()
+
+    def occupancy(self) -> int:
+        """Queued + resident (incl. mid-prefill) requests — the classic
+        join-shortest-queue load signal, memory-free by design."""
+        return len(self.queue) + sum(r is not None for r in self.slots)

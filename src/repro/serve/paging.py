@@ -204,6 +204,13 @@ class PageAllocator:
         :meth:`available` before charging a request."""
         return sum(1 for p in pages if p in self._pinned)
 
+    def pinned_chain_keys(self) -> list:
+        """Token-content keys of the pinned pages — what the persistent prefix
+        cache currently holds. Placement telemetry: a fleet router reads this
+        (via ``Engine.pinned_chain_keys``) to see which replica already keeps a
+        tenant's prompt chains warm."""
+        return sorted(self._page_key[p][1] for p in self._pinned)
+
     # -- prefix index --------------------------------------------------------
     @staticmethod
     def _page_tokens(tokens, i: int, page_size: int) -> tuple:

@@ -1,0 +1,249 @@
+"""Global placement router over N engine replicas — the paper's immune
+primitives lifted from per-engine admission to fleet-level load balancing.
+
+This is the first layer of ROADMAP direction 1 (multi-host serving): a
+single-process simulation harness holding ``N`` independent ``Engine``
+replicas, one global arrival queue, and a per-tick router step that places
+each queued request on a replica before the replicas advance in lockstep
+(router tick == engine tick, so every latency stays in deterministic,
+machine-independent ticks). Later PRs swap the in-process replicas for real
+SPMD engine processes behind the same placement interface; the policies and
+their telemetry are already the fleet-shaped ones.
+
+Placement policies (``RouterConfig.policy``), the A/B set the routing
+benchmark gates:
+
+  * ``"rr"``  — round-robin: the memoryless baseline of the dynamic
+    load-balancing taxonomy (Mandal & Pal, arXiv:1109.1650) — placement
+    ignores both state and history.
+  * ``"jsq"`` — join-shortest-queue: the classic state-but-no-history
+    policy; place on the replica with the fewest queued+resident requests.
+  * ``"immune"`` — the paper's primitives as a placement policy, three
+    signals read straight off each replica's serving state:
+
+      1. **Prefix affinity** (immune memory over KV state): the replica whose
+         page pool — live shared chains or the pinned prefix cache — already
+         holds the longest resident prefix of the request's prompt wins
+         (``Engine.prefix_affinity``); routing there skips exactly that much
+         prefill, the fleet-level form of "work the population has already
+         seen is recognized and not re-paid". An affinity placement is still
+         load-aware: a replica whose backlog exceeds
+         ``affinity_queue_cap * num_slots`` forfeits its affinity claim, so a
+         hot tenant cannot convoy one replica while the rest idle.
+      2. **Anergy draining** (tolerance): a replica whose anergy level for
+         the request's class exceeds ``drain_level`` is *drained* — no new
+         placements of that class until IL-2 revives it locally. Placing
+         there would only have the replica's own admission shed the request;
+         the router moves the class's traffic to replicas still tolerant of
+         it. If every replica holds the class anergic the least-anergic one
+         is used (the request must land somewhere; counted in
+         ``drain_overflow``).
+      3. **Least remembered cost** (anticipation): with no affinity claim,
+         place on the replica with the lowest *remembered* backlog — each
+         queued/resident request priced at its class's cost EMA
+         (``Engine.class_costs``, floored at ``cost_floor`` so cold classes
+         still count as work). Per-class cost EMAs aggregated per replica are
+         the load model: a replica holding two requests of a class that
+         historically decodes 40 ticks is more loaded than one holding three
+         5-tick chatters, which instantaneous queue length (jsq) cannot see.
+
+Placement never changes what a request computes — admission, preemption and
+replay inside each replica are untouched — so per-request tokens are bitwise
+identical across policies and replica counts (the engine-vs-oneshot parity
+oracle lifted one level; pinned by the placement-invariance tests and the
+``routing_parity_exact`` benchmark bit).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, NamedTuple, Optional
+
+import numpy as np
+
+from .api import ServeRequest
+from .engine import Engine
+
+POLICIES = ("immune", "rr", "jsq")
+
+
+class RouterConfig(NamedTuple):
+    policy: str = "immune"        # "immune" | "rr" | "jsq"
+    drain_level: float = 0.5      # anergy level above which a replica is
+    #                               drained for that class (immune policy)
+    affinity_min_tokens: int = 1  # resident prompt positions before an
+    #                               affinity claim beats the load model
+    affinity_queue_cap: float = 2.0  # an affinity replica with more than
+    #                               cap*num_slots queued+resident requests
+    #                               forfeits its claim (anti-convoy)
+    cost_floor: float = 1.0       # minimum per-request price in the
+    #                               remembered-cost load model (cold classes)
+
+
+class Router:
+    """One global queue over ``engines``; ``step()`` places then advances the
+    fleet one tick. Drive with :meth:`run`, read :meth:`stats`."""
+
+    def __init__(self, engines: List[Engine], rcfg: RouterConfig = RouterConfig()):
+        if not engines:
+            raise ValueError("router needs at least one engine replica")
+        if rcfg.policy not in POLICIES:
+            raise ValueError(f"unknown router policy {rcfg.policy!r}; "
+                             f"expected one of {POLICIES}")
+        self.engines = list(engines)
+        self.rcfg = rcfg
+        self.queue: deque[ServeRequest] = deque()
+        self.tick = 0
+        self.submitted = 0
+        self.unsubmitted = 0             # run() arrivals never reached
+        self.placements = np.zeros(len(engines), np.int64)
+        self.affinity_checks = 0         # immune placements that probed affinity
+        self.affinity_hits = 0           # placements decided by prefix affinity
+        self.affinity_tokens = 0         # resident prompt positions at those hits
+        self.drain_skips = 0             # placements redirected off a drained replica
+        self.drain_overflow = 0          # all replicas drained -> least-anergic
+        self._rr_next = 0
+
+    # -- placement -----------------------------------------------------------
+    def _load(self, eng: Engine) -> float:
+        """Remembered-cost backlog of a replica: every queued/resident request
+        priced at its class's cost EMA (anticipation, not instantaneous
+        occupancy)."""
+        costs = eng.class_costs()
+        resident = [r for r in eng.slots if r is not None]
+        return float(sum(max(float(costs[r.rclass]), self.rcfg.cost_floor)
+                         for r in list(eng.queue) + resident))
+
+    def _place_immune(self, req: ServeRequest) -> int:
+        n = len(self.engines)
+        # 1) prefix affinity, forfeited by an over-backlogged replica
+        self.affinity_checks += 1
+        best_aff, best_i = 0, -1
+        for i, eng in enumerate(self.engines):
+            cap = self.rcfg.affinity_queue_cap * eng.ecfg.num_slots
+            if eng.occupancy() > cap:
+                continue
+            aff = eng.prefix_affinity(req)
+            if aff > best_aff:
+                best_aff, best_i = aff, i
+        if best_aff >= self.rcfg.affinity_min_tokens:
+            self.affinity_hits += 1
+            self.affinity_tokens += best_aff
+            return best_i
+        # 2) anergy draining: exclude replicas anergic for this class
+        levels = [float(eng.anergy_levels()[req.rclass])
+                  if req.rclass < eng.ecfg.num_classes else 0.0
+                  for eng in self.engines]
+        live = [i for i in range(n) if levels[i] <= self.rcfg.drain_level]
+        if not live:                      # the request must land somewhere
+            self.drain_overflow += 1
+            live = [min(range(n), key=lambda i: (levels[i], i))]
+        elif len(live) < n:
+            self.drain_skips += 1
+        # 3) least remembered cost among the live replicas
+        return min(live, key=lambda i: (self._load(self.engines[i]), i))
+
+    def _place(self, req: ServeRequest) -> int:
+        """Pick the replica index for ``req`` under the configured policy."""
+        if self.rcfg.policy == "rr":
+            i = self._rr_next
+            self._rr_next = (i + 1) % len(self.engines)
+            return i
+        if self.rcfg.policy == "jsq":
+            return min(range(len(self.engines)),
+                       key=lambda i: (self.engines[i].occupancy(), i))
+        return self._place_immune(req)
+
+    # -- driving -------------------------------------------------------------
+    def submit(self, req: ServeRequest):
+        """Queue a request with the router; it is placed on a replica at the
+        next :meth:`step`."""
+        self.queue.append(req)
+        self.submitted += 1
+
+    def step(self):
+        """One fleet tick: place every queued request on a replica, then
+        advance all replicas one engine tick in lockstep."""
+        while self.queue:
+            req = self.queue.popleft()
+            i = self._place(req)
+            self.placements[i] += 1
+            self.engines[i].submit(req)
+        for eng in self.engines:
+            eng.step()
+        self.tick += 1
+
+    def _drained(self) -> bool:
+        return not self.queue and all(
+            not eng.queue and not eng.jobs
+            and all(r is None for r in eng.slots) for eng in self.engines)
+
+    def run(self, requests: list, max_ticks: int = 10_000) -> dict:
+        """Open-loop drive mirroring ``Engine.run``: submit each request at
+        its ``arrival`` tick, step until the fleet drains (or ``max_ticks``);
+        returns :meth:`stats`."""
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        i = 0
+        while True:
+            while i < len(pending) and pending[i].arrival <= self.tick:
+                self.submit(pending[i])
+                i += 1
+            self.unsubmitted = len(pending) - i
+            if (i == len(pending) and self._drained()) \
+                    or self.tick >= max_ticks:
+                break
+            self.step()
+        return self.stats()
+
+    # -- accounting ----------------------------------------------------------
+    @property
+    def completed(self) -> list:
+        """All completed requests across the fleet, rid order."""
+        return sorted((r for e in self.engines for r in e.completed),
+                      key=lambda r: r.rid)
+
+    def stats(self) -> dict:
+        per = [eng.stats() for eng in self.engines]
+        done = self.completed
+        lat = np.asarray([r.latency for r in done], np.float64)
+        toks = int(sum(len(r.out_tokens) for r in done))
+        in_budget = sum(1 for eng in self.engines for r in eng.completed
+                        if eng._met_budget(r))
+        shed = sum(p["shed"] for p in per)
+        rejected = sum(p["rejected"] for p in per)
+        unserved = int(len(self.queue) + self.unsubmitted
+                       + sum(p["unserved"] for p in per))
+        demand = len(done) + shed + rejected + unserved
+        empty = float("inf")
+        place = self.placements
+        return {
+            "router": self.rcfg.policy,
+            "replicas": len(self.engines),
+            "ticks": self.tick,
+            "completed": len(done),
+            "shed": shed,
+            "rejected": rejected,
+            "unserved": unserved,
+            "tokens": toks,
+            "throughput": toks / max(self.tick, 1),
+            "p50_latency": float(np.percentile(lat, 50)) if lat.size else empty,
+            "p99_latency": float(np.percentile(lat, 99)) if lat.size else empty,
+            "max_latency": float(lat.max()) if lat.size else empty,
+            "goodput": in_budget / max(demand, 1),
+            # placement telemetry: where traffic landed and why
+            "placements": [int(c) for c in place],
+            "placement_imbalance": float(place.max() / max(place.mean(), 1e-9))
+            if place.sum() else 0.0,
+            "affinity_checks": self.affinity_checks,
+            "affinity_hits": self.affinity_hits,
+            "affinity_hit_rate": self.affinity_hits
+            / max(self.affinity_checks, 1),
+            "affinity_tokens": self.affinity_tokens,
+            "drain_skips": self.drain_skips,
+            "drain_overflow": self.drain_overflow,
+            # fleet-aggregated engine telemetry
+            "prefill_tokens": sum(p["prefill_tokens"] for p in per),
+            "preemptions": sum(p["preemptions"] for p in per),
+            "replayed_tokens": sum(p["replayed_tokens"] for p in per),
+            "pinned_pages_adopted": sum(p["pinned_pages_adopted"] for p in per),
+            "per_replica": per,
+        }

@@ -149,6 +149,49 @@ def contention_trace(cfg: ModelConfig, num_requests: int = 24,
     return reqs
 
 
+def fleet_trace(cfg: ModelConfig, tenants: int = 3, num_requests: int = 24,
+                prefix_len: int = 32, suffix_lens: tuple = (4, 6),
+                decode_lens: tuple = (6, 10), hot_tenant: int = 0,
+                hot_frac: float = 0.5, burst_every: int = 6,
+                burst_size: int = 4, seed: int = 0,
+                temperature: float = 0.0, top_p: float = 1.0,
+                top_k: int = 0, sample_seed: int = 0) -> list:
+    """Multi-tenant fleet traffic for the placement router: ``tenants`` fixed
+    system prompts (request class = tenant id, so placement affinity and the
+    per-class cost memory both key on the tenant), arrivals in tight bursts,
+    and one *hot* tenant contributing ``hot_frac`` of the volume — the
+    hot-replica skew that separates placement policies. A router that keeps a
+    tenant's traffic where its prompt chains already live prefills only
+    suffixes; a router that sprays it re-prefills the prefix on every replica
+    and convoys the hot one. Suffix and decode lengths come from tiny bucket
+    sets so each replica compiles a bounded number of shapes."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, cfg.vocab_size, size=prefix_len)
+                .astype(np.int32) for _ in range(tenants)]
+    reqs = []
+    for rid in range(num_requests):
+        hot = rng.random() < hot_frac
+        if tenants > 1:
+            other = (hot_tenant + 1 + int(rng.integers(0, tenants - 1))) \
+                % tenants
+        else:
+            other = hot_tenant
+        t = hot_tenant if hot else other
+        sfx = rng.integers(0, cfg.vocab_size,
+                           size=int(suffix_lens[rid % len(suffix_lens)])
+                           ).astype(np.int32)
+        req = ServeRequest(
+            rid=rid,
+            tokens=np.concatenate([prefixes[t], sfx]),
+            params=_params(decode_lens[rid % len(decode_lens)], temperature,
+                           top_p, top_k, sample_seed, rid),
+            rclass=t,
+            arrival=(rid // burst_size) * burst_every + rid % burst_size,
+        )
+        reqs.append(attach_modality_inputs(req, cfg, rng))
+    return reqs
+
+
 def shared_prefix_trace(cfg: ModelConfig, num_requests: int = 32,
                         num_prefixes: int = 2, prefix_len: int = 32,
                         suffix_lens: tuple = (4, 8),

@@ -8,10 +8,11 @@ from benchmarks.regression_gate import gate
 BASELINE = {
     "pinning": {"summary": {"pinned_hit_rate": 0.5}},
     "preemption": {"summary": {"preempt_concurrency_hw": 4.0}},
+    "routing": {"summary": {"affinity_hit_rate": 0.6}},
 }
 
 
-def _new(hit=0.5, depth=4.0, parity=True, check=True):
+def _new(hit=0.5, depth=4.0, parity=True, check=True, affinity=0.6):
     return {
         "pinning": {"summary": {
             "pinned_hit_rate": hit,
@@ -21,6 +22,10 @@ def _new(hit=0.5, depth=4.0, parity=True, check=True):
         "preemption": {"summary": {
             "preempt_concurrency_hw": depth,
             "preempt_parity_exact": True,
+        }},
+        "routing": {"summary": {
+            "affinity_hit_rate": affinity,
+            "routing_parity_exact": True,
         }},
     }
 
@@ -49,6 +54,10 @@ class TestGate:
     def test_hit_rate_regression_fails(self):
         assert any("pinned_hit_rate" in f
                    for f in gate(_new(hit=0.3), BASELINE))
+
+    def test_affinity_regression_fails(self):
+        assert any("affinity_hit_rate" in f
+                   for f in gate(_new(affinity=0.2), BASELINE))
 
     def test_missing_baseline_section_skips(self):
         assert gate(_new(), {}) == []

@@ -435,15 +435,16 @@ class TestStreamAPI:
         assert not [o for o in outs if o.finished]
 
     def test_deadline_overrides_engine_budget(self, dense):
-        """A request's own deadline drives its goodput accounting: the same
-        completion is in-budget under the engine bar but misses its declared
-        per-request deadline."""
+        """A request's own wall-clock deadline drives its goodput accounting:
+        the same completion is in-budget under the engine's tick bar but
+        misses its declared per-request deadline (1 ns — unmeetable by
+        construction, so the test never races the real clock)."""
         cfg, params = dense
         ecfg = eng_mod.EngineConfig(num_slots=2, max_cache=48, policy="fifo",
                                     latency_budget=40.0)
         strict = ServeRequest(rid=0, tokens=np.arange(6, dtype=np.int32),
                               params=SamplingParams(max_new_tokens=8),
-                              deadline=2.0)
+                              deadline=1e-9)
         lax = ServeRequest(rid=1, tokens=np.arange(6, dtype=np.int32),
                            params=SamplingParams(max_new_tokens=8))
         eng = eng_mod.Engine(params, cfg, ecfg)

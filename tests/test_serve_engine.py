@@ -625,3 +625,100 @@ class TestPinnedPrefixCache:
         assert stats["completed"] == 12
         assert stats["pin_pages"] == 0 and stats["pins"] == 0
         assert stats["pages_in_use"] == 0
+
+
+class TestImmuneCostAccounting:
+    """The immune cost memory must charge what a request actually held: a
+    preempted-then-resumed request burns slot-ticks re-deriving its recorded
+    tokens, and charging emissions alone would teach the memory that exactly
+    the preempt-prone classes it should suppress were cheap."""
+
+    @pytest.fixture(scope="class")
+    def dense(self):
+        cfg = _smoke_cfg("smollm-360m")
+        return cfg, _params(cfg)
+
+    def test_replayed_request_charges_more_than_unpreempted(self, dense):
+        """Identical request pair through a tiny pool (forces preemption of
+        the later arrival) vs an ample one (no preemption): the preempted
+        class's EMA must come out strictly higher — replayed slot-ticks are
+        charged — while the untouched class's EMA is identical."""
+        cfg, params = dense
+        runs = {}
+        for name, num_pages in (("tiny", 3), ("ample", None)):
+            ecfg = eng_mod.EngineConfig(num_slots=2, max_cache=32,
+                                        page_size=16, num_pages=num_pages,
+                                        policy="immune", num_classes=2,
+                                        latency_budget=64.0)
+            eng = eng_mod.Engine(params, cfg, ecfg)
+            stats = eng.run(_make_requests(cfg, 2, prompt_lens=(10,),
+                                           steps=(8,)), max_ticks=200)
+            assert stats["completed"] == 2 and stats["shed"] == 0, name
+            runs[name] = eng
+        tiny, ample = runs["tiny"], runs["ample"]
+        r0t, r1t = sorted(tiny.completed, key=lambda r: r.rid)
+        r0a, r1a = sorted(ample.completed, key=lambda r: r.rid)
+        # the tiny pool preempted the later arrival (class 1) and it replayed
+        assert r1t.preemptions >= 1 and r1t.replayed_tokens >= 1
+        assert r0t.replayed_tokens == 0 and r1a.replayed_tokens == 0
+        # both runs emitted the same tokens; only the replay differs
+        assert r1t.out_tokens == r1a.out_tokens
+        # class 1's remembered cost reflects the replayed slot-ticks ...
+        assert tiny.admission.remembered_cost(1) > \
+            ample.admission.remembered_cost(1)
+        # ... and the unpreempted class is charged identically in both runs
+        assert tiny.admission.remembered_cost(0) == \
+            pytest.approx(ample.admission.remembered_cost(0))
+
+
+class TestBudgetUnits:
+    """One unit per comparison: a declared ``deadline`` is wall-clock seconds
+    judged against wall-clock latency; the engine-wide ``latency_budget`` is
+    ticks judged against tick latency. The old ``_budget`` helper handed the
+    wall-clock deadline to tick comparisons."""
+
+    @pytest.fixture(scope="class")
+    def dense(self):
+        cfg = _smoke_cfg("smollm-360m")
+        return cfg, _params(cfg)
+
+    def test_deadline_generous_in_ticks_tight_in_wall_clock(self, dense):
+        """A 50-second deadline on a ~9-tick request: the old code compared
+        ticks (9 <= 50 -> met) no matter how slow the wall clock was. Judged
+        in the deadline's own unit, a (simulated) 60 s wall latency misses and
+        a 1 s one meets — tick latency must not leak into the comparison."""
+        cfg, params = dense
+        ecfg = eng_mod.EngineConfig(num_slots=2, max_cache=32, policy="fifo")
+        reqs = _make_requests(cfg, 1, prompt_lens=(6,), steps=(8,))
+        reqs[0].deadline = 50.0
+        eng = eng_mod.Engine(params, cfg, ecfg)
+        stats = eng.run(reqs, max_ticks=100)
+        assert stats["completed"] == 1 and stats["deadline_requests"] == 1
+        req = eng.completed[0]
+        assert req.latency <= 50, "sanity: generous measured in ticks"
+        # simulate the wall clock (real timing would flake under compile):
+        # 60 s > the 50 s deadline -> missed, regardless of tick latency
+        req.finish_time = req.submit_time + 60.0
+        assert eng._met_budget(req) is False
+        assert eng.stats()["goodput"] == 0.0
+        # 1 s < 50 s -> met
+        req.finish_time = req.submit_time + 1.0
+        assert eng._met_budget(req) is True
+        assert eng.stats()["goodput"] == 1.0
+
+    def test_no_deadline_judged_in_ticks(self, dense):
+        """Without a declared deadline the bar is the tick-denominated engine
+        budget against tick latency — wall clock never enters."""
+        cfg, params = dense
+        ecfg = eng_mod.EngineConfig(num_slots=2, max_cache=32, policy="fifo",
+                                    latency_budget=5.0)
+        eng = eng_mod.Engine(params, cfg, ecfg)
+        stats = eng.run(_make_requests(cfg, 1, prompt_lens=(6,), steps=(8,)),
+                        max_ticks=100)
+        assert stats["completed"] == 1
+        req = eng.completed[0]
+        assert req.latency > 5, "sanity: blows the 5-tick budget"
+        assert eng._met_budget(req) is False
+        # wall clock (microseconds here) must not rescue a tick-budget miss
+        lat, bar = eng._slo(req)
+        assert (lat, bar) == (float(req.latency), 5.0)

@@ -1,0 +1,231 @@
+"""Multi-replica placement router: policy behavior + placement invariance.
+
+The load-bearing property is the engine parity oracle lifted one level:
+placement decides *where* a request runs, never *what* it computes, so
+per-request tokens are bitwise identical across router policies and replica
+counts — including requests preempted and replayed on one replica — and all
+of them match one-shot ``decode.generate``. The policy tests pin the three
+immune placement signals (prefix affinity, anergy draining, least remembered
+cost) and the rr/jsq baselines.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model
+from repro.serve import decode, traces
+from repro.serve import engine as eng_mod
+from repro.serve import router as rt_mod
+from repro.serve.api import SamplingParams, ServeRequest
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = configs.get_config("smollm-360m").smoke()
+    return cfg, model.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _ecfg(**kw):
+    base = dict(num_slots=2, max_cache=64, page_size=16, prefill_chunk=8,
+                policy="immune", num_classes=3, latency_budget=64.0,
+                pin_pages=4)
+    base.update(kw)
+    return eng_mod.EngineConfig(**base)
+
+
+def _engines(params, cfg, n, **kw):
+    return [eng_mod.Engine(params, cfg, _ecfg(**kw)) for _ in range(n)]
+
+
+def _req(rid, rclass=0, plen=8, steps=4, tokens=None):
+    if tokens is None:
+        tokens = np.arange(plen, dtype=np.int32) + rid
+    return ServeRequest(rid=rid, tokens=np.asarray(tokens, np.int32),
+                        params=SamplingParams(max_new_tokens=steps),
+                        rclass=rclass)
+
+
+def _fleet(cfg, **kw):
+    base = dict(tenants=3, num_requests=9, prefix_len=32, suffix_lens=(4,),
+                decode_lens=(6,), hot_frac=0.5, burst_every=4, burst_size=3,
+                seed=0)
+    base.update(kw)
+    return traces.fleet_trace(cfg, **base)
+
+
+def _oracle(params, cfg, reqs, max_cache):
+    out = {}
+    for r in reqs:
+        toks, _ = decode.generate(params, cfg, r.prompts(),
+                                  max_cache=max_cache,
+                                  steps=r.max_new_tokens)
+        out[r.rid] = [int(t) for t in np.asarray(toks[0])]
+    return out
+
+
+class TestPlacementPolicies:
+    def test_round_robin_cycles(self, dense):
+        cfg, params = dense
+        router = rt_mod.Router(_engines(params, cfg, 3),
+                               rt_mod.RouterConfig(policy="rr"))
+        assert [router._place(_req(i)) for i in range(5)] == [0, 1, 2, 0, 1]
+
+    def test_jsq_picks_least_occupied(self, dense):
+        cfg, params = dense
+        engines = _engines(params, cfg, 2)
+        engines[0].submit(_req(0))
+        engines[0].submit(_req(1))
+        router = rt_mod.Router(engines, rt_mod.RouterConfig(policy="jsq"))
+        assert router._place(_req(2)) == 1
+        # ties break on the lowest index, deterministically
+        engines[1].submit(_req(3))
+        engines[1].submit(_req(4))
+        assert router._place(_req(5)) == 0
+
+    def test_affinity_routes_to_resident_replica(self, dense):
+        """A replica that already holds a prompt's page chains (pinned after
+        its donor drained) wins placement over an emptier replica — and the
+        hit is counted with its resident token length."""
+        cfg, params = dense
+        engines = _engines(params, cfg, 2)
+        prefix = np.arange(32, dtype=np.int32)
+        donor = _req(0, rclass=0, tokens=np.concatenate(
+            [prefix, np.asarray([7, 7, 7, 7], np.int32)]))
+        engines[1].run([donor], max_ticks=100)          # chains pin on replica 1
+        assert engines[1].alloc.pages_pinned > 0
+        router = rt_mod.Router(engines, rt_mod.RouterConfig(policy="immune"))
+        follower = _req(1, rclass=0, tokens=np.concatenate(
+            [prefix, np.asarray([9, 9, 9, 9], np.int32)]))
+        assert router._place(follower) == 1
+        assert router.affinity_hits == 1
+        assert router.affinity_tokens >= 32
+
+    def test_affinity_forfeited_by_backlogged_replica(self, dense):
+        """Anti-convoy: a replica whose backlog exceeds affinity_queue_cap *
+        num_slots loses its affinity claim and the load model places instead."""
+        cfg, params = dense
+        engines = _engines(params, cfg, 2)
+        prefix = np.arange(32, dtype=np.int32)
+        donor = _req(0, rclass=0, tokens=np.concatenate(
+            [prefix, np.asarray([7, 7, 7, 7], np.int32)]))
+        engines[1].run([donor], max_ticks=100)
+        for i in range(5):                   # backlog replica 1 past 2*2 slots
+            engines[1].submit(_req(10 + i, rclass=1))
+        router = rt_mod.Router(engines, rt_mod.RouterConfig(policy="immune"))
+        follower = _req(1, rclass=0, tokens=np.concatenate(
+            [prefix, np.asarray([9, 9, 9, 9], np.int32)]))
+        assert router._place(follower) == 0
+        assert router.affinity_hits == 0
+
+    def test_drains_anergic_replica(self, dense):
+        """A replica anergic for the request's class takes no new placements
+        of it; with every replica anergic the least-anergic one still serves
+        (counted as drain overflow)."""
+        cfg, params = dense
+        engines = _engines(params, cfg, 2)
+        lvl = np.zeros(3, np.float32)
+        lvl[0] = 0.9
+        engines[0].admission.anergy = engines[0].admission.anergy._replace(
+            level=jnp.asarray(lvl))
+        router = rt_mod.Router(engines, rt_mod.RouterConfig(policy="immune"))
+        assert router._place(_req(0, rclass=0)) == 1
+        assert router.drain_skips == 1
+        # other classes still place by load (engine 0 not drained for them)
+        assert router._place(_req(1, rclass=1)) == 0
+        engines[1].admission.anergy = engines[1].admission.anergy._replace(
+            level=jnp.asarray(lvl * 0.8))    # anergic too, but less so
+        assert router._place(_req(2, rclass=0)) == 1
+        assert router.drain_overflow == 1
+
+    def test_least_remembered_cost_placement(self, dense):
+        """With no affinity claim, placement prices each replica's backlog at
+        its classes' cost EMAs: one queued request of a historically expensive
+        class outweighs one of a cheap class — which occupancy-only jsq
+        cannot see."""
+        cfg, params = dense
+        engines = _engines(params, cfg, 2)
+        for _ in range(10):
+            engines[0].admission.observe_completion(0, cost=40.0, latency=5.0)
+        engines[0].submit(_req(0, rclass=0))   # priced ~40
+        engines[1].submit(_req(1, rclass=1))   # cold class: cost floor
+        router = rt_mod.Router(engines, rt_mod.RouterConfig(policy="immune"))
+        assert router._place(_req(2, rclass=2)) == 1
+        jsq = rt_mod.Router(engines, rt_mod.RouterConfig(policy="jsq"))
+        assert jsq._place(_req(3, rclass=2)) == 0   # occupancy tie -> index
+
+
+class TestPlacementInvariance:
+    """Same request set -> bitwise-identical per-request tokens under every
+    (policy, replica-count) pair, all matching the one-shot oracle."""
+
+    def test_tokens_identical_across_policies_and_replicas(self, dense):
+        cfg, params = dense
+        oracle = _oracle(params, cfg, _fleet(cfg), 64)
+        for policy in rt_mod.POLICIES:
+            for n in (1, 2, 3):
+                # fresh trace per run: requests are mutated by serving
+                router = rt_mod.Router(
+                    _engines(params, cfg, n),
+                    rt_mod.RouterConfig(policy=policy))
+                stats = router.run(_fleet(cfg), max_ticks=500)
+                assert stats["completed"] == 9 and stats["shed"] == 0, \
+                    (policy, n)
+                for r in router.completed:
+                    assert r.out_tokens == oracle[r.rid], \
+                        f"rid {r.rid} diverged under {policy} x{n}"
+                if policy == "immune":
+                    assert stats["affinity_hits"] > 0, (policy, n)
+
+    def test_invariant_across_preemption(self, dense):
+        """Replicas with page pools tiny enough to preempt at low replica
+        counts: a preempted-then-replayed request still emits oracle tokens,
+        and adding replicas (no preemption) changes nothing."""
+        cfg, params = dense
+        mk = lambda: _fleet(cfg, tenants=2, num_requests=4, prefix_len=8,
+                            suffix_lens=(2,), decode_lens=(8,),
+                            burst_every=2, burst_size=4)
+        oracle = _oracle(params, cfg, mk(), 32)
+        preempted = {}
+        for n in (1, 2):
+            router = rt_mod.Router(
+                _engines(params, cfg, n, max_cache=32, num_pages=3,
+                         prefill_chunk=0, pin_pages=0, num_classes=2),
+                rt_mod.RouterConfig(policy="immune"))
+            stats = router.run(mk(), max_ticks=300)
+            assert stats["completed"] == 4 and stats["shed"] == 0, n
+            preempted[n] = stats["preemptions"]
+            for r in router.completed:
+                assert r.out_tokens == oracle[r.rid], \
+                    f"rid {r.rid} diverged at {n} replicas " \
+                    f"({stats['preemptions']} preemptions)"
+        assert preempted[1] >= 1, \
+            "the tiny single-replica pool should have preempted"
+
+
+class TestRouterHarness:
+    def test_rejects_bad_policy_and_empty_fleet(self, dense):
+        cfg, params = dense
+        with pytest.raises(ValueError, match="policy"):
+            rt_mod.Router(_engines(params, cfg, 1),
+                          rt_mod.RouterConfig(policy="maxflow"))
+        with pytest.raises(ValueError, match="at least one"):
+            rt_mod.Router([], rt_mod.RouterConfig())
+
+    def test_stats_aggregate_fleet(self, dense):
+        cfg, params = dense
+        router = rt_mod.Router(_engines(params, cfg, 2),
+                               rt_mod.RouterConfig(policy="rr"))
+        stats = router.run(_fleet(cfg, num_requests=6), max_ticks=300)
+        assert stats["router"] == "rr" and stats["replicas"] == 2
+        assert stats["completed"] == 6 and stats["unserved"] == 0
+        assert sum(stats["placements"]) == 6
+        assert stats["placements"] == [3, 3]       # rr splits evenly
+        assert len(stats["per_replica"]) == 2
+        assert stats["tokens"] == sum(
+            p["tokens"] for p in stats["per_replica"])
+        assert stats["goodput"] == 1.0
+        assert np.isfinite(stats["p99_latency"])
