@@ -11,9 +11,11 @@ Two kinds of rules, deliberately asymmetric:
   * **capacity metrics must not regress** vs the committed baseline:
     admission depth under contention (``preemption.summary.
     preempt_concurrency_hw``), the pinned prefix cache's hit rate
-    (``pinning.summary.pinned_hit_rate``), and the placement router's
-    prefix-affinity hit rate (``routing.summary.affinity_hit_rate``) must
-    each be at least the baseline's value minus a small epsilon.
+    (``pinning.summary.pinned_hit_rate``), the placement router's
+    prefix-affinity hit rate (``routing.summary.affinity_hit_rate``), and
+    immune goodput under crash-of-one failover
+    (``failover.summary.immune_goodput``) must each be at least the
+    baseline's value minus a small epsilon.
     Improvements pass silently; update the baseline when they should become
     the new floor.
 
@@ -45,6 +47,7 @@ NO_REGRESS = (
     (("preemption", "summary", "preempt_concurrency_hw"), 0.0),
     (("pinning", "summary", "pinned_hit_rate"), 0.01),
     (("routing", "summary", "affinity_hit_rate"), 0.01),
+    (("failover", "summary", "immune_goodput"), 0.01),
 )
 
 

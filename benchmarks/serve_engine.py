@@ -54,6 +54,17 @@ page/pin budget. Immune p99 must be at most the best baseline's, affinity
 hits positive, and per-request tokens bitwise identical across every policy
 and replica count (``routing_parity_exact``).
 
+**Failover comparison** — ``run_failover`` replays the fleet trace under a
+seeded crash-of-1-of-``replicas`` fault plan (``serve/faults.py``; the
+crashed replica rejoins cold later): the router's missed-deadline health
+machine detects the death, evacuates the stranded requests, and re-places
+them on survivors where PR 6's replay machinery recovers them. The bar:
+**zero lost requests** (every rid terminates completed/shed/rejected/failed),
+survivor tokens bitwise identical to the fault-free run across every policy
+(``failover_parity_exact``), and immune goodput under failure at least each
+baseline's. ``recovery_ticks`` (first death -> last re-placed completion)
+tracks how fast the fleet re-absorbs the lost capacity.
+
 Latencies are in engine *ticks* (one decode step for the whole slot pool), so
 results are deterministic and hardware-independent. Results go to a CSV and to
 a machine-readable ``BENCH_serve.json`` (see benchmarks/README.md) so the perf
@@ -616,6 +627,123 @@ def run_routing(arch: str = "smollm-360m", replicas: int = 2,
     return {"rows": rows, "summary": summary}
 
 
+def run_failover(arch: str = "smollm-360m", replicas: int = 3,
+                 num_requests: int = 24, tenants: int = 3,
+                 prefix_len: int = 32, num_slots: int = 2, max_cache: int = 64,
+                 page_size: int = 16, pin_pages: int = 4,
+                 seeds: tuple = (0, 1)) -> dict:
+    """Crash-of-1-of-``replicas`` + cold rejoin on the fleet trace, every
+    policy against the same seeded fault plan, plus one fault-free immune
+    reference per seed. The health machine must detect the death (never
+    announced), evacuate and re-place the stranded requests, and recover
+    them bitwise (``failover_parity_exact`` vs the fault-free run); zero
+    requests may be lost — each rid terminates completed, shed, rejected, or
+    ``failed`` — and immune goodput under failure must hold at least the
+    rr/jsq baselines' (graceful degradation is an operator opt-in and stays
+    off here so the A/B compares like with like)."""
+    from repro.serve import router as rt_mod
+    from repro.serve.faults import FaultInjector, FaultPlan
+
+    cfg = configs.get_config(arch).smoke()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+
+    def _replica_cfg():
+        return eng_mod.EngineConfig(
+            num_slots=num_slots, max_cache=max_cache, policy="immune",
+            num_classes=tenants, latency_budget=64.0, page_size=page_size,
+            num_pages=num_slots * (max_cache // page_size) + 1,
+            prefill_chunk=16, pin_pages=pin_pages)
+
+    def _mk(seed):
+        return traces.failover_fleet_trace(
+            cfg, replicas=replicas, num_requests=num_requests,
+            tenants=tenants, prefix_len=prefix_len, seed=seed)
+
+    rows = []
+    parity_exact = True
+    zero_lost = True
+    recovered = True
+    for seed in seeds:
+        tokens_by_rid: dict = {}         # fault-free reference, then survivors
+        reqs, spec = _mk(seed)
+        clean = rt_mod.Router(
+            [eng_mod.Engine(params, cfg, _replica_cfg())
+             for _ in range(replicas)],
+            rt_mod.RouterConfig(policy="immune"))
+        s = clean.run(reqs, max_ticks=50 * num_requests)
+        del s["per_replica"]
+        s.update(seed=seed, engine="immune_clean", plan="")
+        rows.append(s)
+        for req in clean.completed:
+            tokens_by_rid[req.rid] = list(req.out_tokens)
+        for policy in ("rr", "jsq", "immune"):
+            reqs, spec = _mk(seed)       # fresh trace: serving mutates it
+            router = rt_mod.Router(
+                [eng_mod.Engine(params, cfg, _replica_cfg())
+                 for _ in range(replicas)],
+                rt_mod.RouterConfig(policy=policy),
+                injector=FaultInjector(
+                    FaultPlan.parse(spec),
+                    engine_factory=lambda: eng_mod.Engine(params, cfg,
+                                                          _replica_cfg())))
+            s = router.run(reqs, max_ticks=50 * num_requests)
+            del s["per_replica"]
+            s.update(seed=seed, engine=f"{policy}_fault", plan=spec)
+            rows.append(s)
+            for req in router.completed:   # survivors vs the fault-free run
+                ref = tokens_by_rid.setdefault(req.rid, list(req.out_tokens))
+                if ref != list(req.out_tokens):
+                    parity_exact = False
+            if s["completed"] + s["shed"] + s["rejected"] + s["failed"] \
+                    != num_requests or s["unserved"] != 0:
+                zero_lost = False
+            if not (s["deaths"] == 1 and s["rejoins"] == 1
+                    and s["replaced_requests"] > 0
+                    and s["recovery_ticks"] > 0):
+                recovered = False
+        by = {r["engine"]: r for r in rows if r["seed"] == seed}
+        im, cl = by["immune_fault"], by["immune_clean"]
+        print(f"seed {seed}: plan '{im['plan']}' | immune goodput under crash "
+              f"{im['goodput']:.2f} (clean {cl['goodput']:.2f}) vs rr "
+              f"{by['rr_fault']['goodput']:.2f} / jsq "
+              f"{by['jsq_fault']['goodput']:.2f} | p99 {im['p99_latency']:.1f}"
+              f" vs clean {cl['p99_latency']:.1f} ticks | "
+              f"{im['replaced_requests']} re-placed, {im['failed']} failed | "
+              f"recovery {im['recovery_ticks']} ticks")
+
+    def mean(engine, key):
+        return float(np.mean([r[key] for r in rows if r["engine"] == engine]))
+
+    summary = {
+        "replicas": replicas,
+        "immune_goodput": mean("immune_fault", "goodput"),
+        "rr_goodput": mean("rr_fault", "goodput"),
+        "jsq_goodput": mean("jsq_fault", "goodput"),
+        "clean_goodput": mean("immune_clean", "goodput"),
+        "immune_p99": mean("immune_fault", "p99_latency"),
+        "rr_p99": mean("rr_fault", "p99_latency"),
+        "jsq_p99": mean("jsq_fault", "p99_latency"),
+        "clean_p99": mean("immune_clean", "p99_latency"),
+        "recovery_ticks": mean("immune_fault", "recovery_ticks"),
+        "replaced_requests": mean("immune_fault", "replaced_requests"),
+        "failed_requests": mean("immune_fault", "failed"),
+        "failover_parity_exact": parity_exact,
+    }
+    summary["checks"] = {
+        # the acceptance bar: a crash moves work, it never changes tokens...
+        "failover_parity_exact": parity_exact,
+        # ...or loses a request: every rid terminates in an accounted bucket
+        "zero_lost_requests": zero_lost,
+        # the fault actually bit and the fleet actually recovered (death
+        # detected, requests re-placed, rejoin landed) — not vacuously green
+        "failover_exercised": recovered,
+        # immune placement degrades no worse than the taxonomy baselines
+        "immune_goodput_under_failure_no_worse": summary["immune_goodput"]
+        >= max(summary["rr_goodput"], summary["jsq_goodput"]),
+    }
+    return {"rows": rows, "summary": summary}
+
+
 def main():
     jax.config.update("jax_platform_name", "cpu")
     ap = argparse.ArgumentParser()
@@ -645,6 +773,9 @@ def main():
         seeds=tuple(args.seeds)[:1 if args.smoke else 2])
     res["routing"] = run_routing(
         arch=args.arch, num_requests=12 if args.smoke else 24,
+        seeds=tuple(args.seeds)[:1 if args.smoke else 2])
+    res["failover"] = run_failover(
+        arch=args.arch, num_requests=18 if args.smoke else 24,
         seeds=tuple(args.seeds)[:1 if args.smoke else 2])
     with open(args.json, "w") as fh:
         json.dump(res, fh, indent=1)
@@ -700,6 +831,15 @@ def main():
           f"tokens | parity "
           f"{'exact' if rt['routing_parity_exact'] else 'BROKEN'} | checks "
           f"{'OK' if rtok else 'REGRESSION'}: {json.dumps(rt['checks'])}")
+    fo = res["failover"]["summary"]
+    fook = all(fo["checks"].values())
+    print(f"failover: immune goodput under crash {fo['immune_goodput']:.2f} "
+          f"(clean {fo['clean_goodput']:.2f}) vs rr {fo['rr_goodput']:.2f} / "
+          f"jsq {fo['jsq_goodput']:.2f} | p99 {fo['immune_p99']:.1f} vs clean "
+          f"{fo['clean_p99']:.1f} ticks | recovery {fo['recovery_ticks']:.0f} "
+          f"ticks over {fo['replaced_requests']:.0f} re-placed | parity "
+          f"{'exact' if fo['failover_parity_exact'] else 'BROKEN'} | checks "
+          f"{'OK' if fook else 'REGRESSION'}: {json.dumps(fo['checks'])}")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,17 @@ even ids stay exact greedy — mixed traffic, one decode dispatch.
 ``--replicas 2`` (with ``--engine``) routes the same staggered requests
 through the multi-replica placement router (``--router immune|rr|jsq``):
 immune placement keeps prefix-sharing tenants where their pages live.
+
+``--faults "crash@8:r1 rejoin@24:r1"`` (with ``--replicas > 1``) scripts
+replica faults into the run (``serve.faults`` grammar: crash / slow / stall /
+pressure / rejoin) — the router's health machine detects the crash, re-places
+the stranded requests on survivors bitwise-exactly, and a rejoin swaps in a
+cold replica that rewarms from live traffic. ``--fleet-faults`` serves the
+fault-laced multi-tenant fleet trace instead of the demo requests, with a
+crash+rejoin plan auto-sized to the trace when ``--faults`` is not given:
+
+    PYTHONPATH=src python examples/serve_batch.py --engine --replicas 3 \
+        --fleet-faults [--faults "crash@7:r1 rejoin@17:r1"]
 """
 import argparse
 import os
@@ -62,6 +73,15 @@ def main():
     ap.add_argument("--router", default="immune",
                     choices=("immune", "rr", "jsq"),
                     help="placement policy when --replicas > 1")
+    ap.add_argument("--faults", default=None, metavar="PLAN",
+                    help="engine demo with --replicas > 1: scripted replica "
+                         "faults, e.g. 'crash@8:r1 rejoin@24:r1' "
+                         "(serve.faults plan grammar)")
+    ap.add_argument("--fleet-faults", action="store_true",
+                    help="with --replicas > 1: serve the fault-laced "
+                         "multi-tenant fleet trace (failover_fleet_trace); "
+                         "auto-sizes a crash+rejoin plan unless --faults is "
+                         "given")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch).smoke()
@@ -136,9 +156,24 @@ def _engine_demo(params, cfg, args):
 
     if args.replicas > 1:
         from repro.serve import router as rt_mod
+        from repro.serve.faults import FaultInjector, FaultPlan
+        spec = args.faults
+        if args.fleet_faults:
+            reqs, auto_spec = traces.failover_fleet_trace(
+                cfg, replicas=args.replicas,
+                crash_replica=args.replicas - 1)
+            spec = spec or auto_spec
+        injector = None
+        if spec:
+            injector = FaultInjector(
+                FaultPlan.parse(spec),
+                engine_factory=lambda: eng_mod.Engine(params, cfg, ecfg,
+                                                      router_bias=bias))
+            print(f"fault plan: {spec}")
         fleet = [eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
                  for _ in range(args.replicas)]
-        router = rt_mod.Router(fleet, rt_mod.RouterConfig(policy=args.router))
+        router = rt_mod.Router(fleet, rt_mod.RouterConfig(policy=args.router),
+                               injector=injector)
         t0 = time.perf_counter()
         stats = router.run(reqs, max_ticks=1000)
         dt = time.perf_counter() - t0
@@ -148,6 +183,12 @@ def _engine_demo(params, cfg, args):
               f"{stats['placements']}, affinity {stats['affinity_hits']}/"
               f"{stats['affinity_checks']} hits, p99 "
               f"{stats['p99_latency']:.0f} ticks")
+        if spec:
+            print(f"  failover: {stats['deaths']} deaths / {stats['rejoins']}"
+                  f" rejoins, {stats['replaced_requests']} re-placed "
+                  f"({stats['retries']} retries, {stats['failed']} failed), "
+                  f"recovery {stats['recovery_ticks']} ticks, health "
+                  f"{stats['health']}")
         for r in router.completed:
             print(f"  req {r.rid}: {r.out_tokens[:12]}"
                   f"{'...' if len(r.out_tokens) > 12 else ''}")

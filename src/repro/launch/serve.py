@@ -28,6 +28,18 @@ prices backlog at remembered per-class cost (see serve/router.py):
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
         --stream --trace fleet --replicas 3 --router immune --pin-pages 8
+
+``--faults "crash@8:r1 rejoin@24:r1"`` (with ``--replicas > 1``) scripts
+seeded, tick-exact replica faults into the run (``serve.faults`` grammar:
+crash / slow / stall / page-pressure / cold rejoin) and exercises the
+router's missed-deadline health machine — suspect fencing, bitwise-exact
+evacuation + re-placement on survivors, retry budget, rejoin rewarming.
+``--trace fleet-faults`` serves the fleet trace with a crash+rejoin plan
+auto-sized to the arrival window when ``--faults`` is not given:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+        --stream --trace fleet-faults --replicas 3 --router immune \
+        [--faults "crash@7:r1 rejoin@17:r1"]
 """
 from __future__ import annotations
 
@@ -82,18 +94,26 @@ def main():
                          "compiled on TPU, pallas_interpret = runs anywhere)")
     ap.add_argument("--trace", default="bursty",
                     choices=("bursty", "shared-prefix", "returning-tenant",
-                             "contention", "fleet"),
+                             "contention", "fleet", "fleet-faults"),
                     help="synthetic arrival trace: bursty heterogeneous, "
                          "system-prompt traffic (exercises prefix sharing), "
                          "returning-tenant bursts with drain gaps (exercises "
                          "the pinned prefix cache), page-pool contention "
-                         "(exercises preemptive admission), or multi-tenant "
+                         "(exercises preemptive admission), multi-tenant "
                          "fleet traffic with hot-replica skew (exercises the "
-                         "placement router)")
+                         "placement router), or the fleet trace fault-laced "
+                         "with an auto-sized crash+rejoin plan (exercises "
+                         "failover; needs --replicas > 1)")
     ap.add_argument("--replicas", type=int, default=1,
                     help=">1: serve through the multi-replica placement "
                          "router (serve.router) — N engine replicas, one "
                          "global queue, per-tick placement")
+    ap.add_argument("--faults", default=None, metavar="PLAN",
+                    help="script seeded tick-exact replica faults into a "
+                         "--replicas > 1 run, e.g. 'crash@8:r1 rejoin@24:r1 "
+                         "slow@4+10:r0:x3' (serve.faults plan grammar); the "
+                         "router detects and fails over, the injector never "
+                         "announces")
     ap.add_argument("--router", default="immune",
                     choices=("immune", "rr", "jsq"),
                     help="placement policy over the replicas: immune "
@@ -182,11 +202,21 @@ def main():
                 cfg, num_requests=args.requests,
                 hog_prompt=2 * args.page_size,
                 hog_tokens=args.steps, **sampling)
-        elif args.trace == "fleet":
-            trace = traces.fleet_trace(
-                cfg, num_requests=args.requests,
+        elif args.trace in ("fleet", "fleet-faults"):
+            fleet_kw = dict(
+                num_requests=args.requests,
                 prefix_len=max(args.prompt_len, 2 * args.page_size),
                 decode_lens=(args.steps // 2, args.steps), **sampling)
+            if args.trace == "fleet-faults":
+                if args.replicas < 2:
+                    ap.error("--trace fleet-faults needs --replicas > 1 "
+                             "(faults target replicas behind the router)")
+                trace, auto_spec = traces.failover_fleet_trace(
+                    cfg, replicas=args.replicas,
+                    crash_replica=args.replicas - 1, **fleet_kw)
+                args.faults = args.faults or auto_spec
+            else:
+                trace = traces.fleet_trace(cfg, **fleet_kw)
         else:
             trace = traces.synthetic_trace(cfg, num_requests=args.requests,
                                            heavy_tokens=args.steps + 8,
@@ -195,12 +225,24 @@ def main():
             from dataclasses import replace as _dc_replace
             for req in trace:
                 req.params = _dc_replace(req.params, logprobs=True)
+        if args.faults and args.replicas < 2:
+            ap.error("--faults needs --stream --replicas > 1 (faults target "
+                     "replicas behind the router)")
         if args.replicas > 1:
             from repro.serve import router as rt_mod
+            injector = None
+            if args.faults:
+                from repro.serve.faults import FaultInjector, FaultPlan
+                injector = FaultInjector(
+                    FaultPlan.parse(args.faults),
+                    engine_factory=lambda: eng_mod.Engine(
+                        params, cfg, ecfg, router_bias=bias))
+                print(f"fault plan: {args.faults}")
             fleet = [eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
                      for _ in range(args.replicas)]
             router = rt_mod.Router(fleet,
-                                   rt_mod.RouterConfig(policy=args.router))
+                                   rt_mod.RouterConfig(policy=args.router),
+                                   injector=injector)
             with mesh:
                 t0 = time.perf_counter()
                 stats = router.run(trace, max_ticks=50 * args.requests)
@@ -227,6 +269,13 @@ def main():
                       f"p99 {p['p99_latency']:.0f} ticks | pages hw "
                       f"{p['pages_hw']}/{p['pages_budget']} | pinned-hit rate "
                       f"{p['pinned_hit_rate']:.2f}")
+            if args.faults:
+                print(f"  failover: {stats['deaths']} deaths / "
+                      f"{stats['rejoins']} rejoins, "
+                      f"{stats['replaced_requests']} re-placed "
+                      f"({stats['retries']} retries, {stats['failed']} "
+                      f"failed), recovery {stats['recovery_ticks']} ticks, "
+                      f"health {stats['health']}")
             return
         eng = eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
         with mesh:

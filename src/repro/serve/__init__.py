@@ -1,1 +1,1 @@
-from . import api, decode, engine, paging, router, traces  # noqa: F401
+from . import api, decode, engine, faults, paging, router, traces  # noqa: F401

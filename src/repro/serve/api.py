@@ -122,13 +122,18 @@ class ServeRequest:
     #                                                 (capture_logits only)
     out_logprobs: list = field(default_factory=list)  # per-token chosen-token
     #                                                   logprob (params.logprobs)
-    finish_reason: Optional[str] = None    # "stop" | "length"
+    finish_reason: Optional[str] = None    # "stop" | "length" | "failed"
     admit_tick: int = -1
     finish_tick: int = -1
     slot: int = -1
     submit_time: float = -1.0              # wall clock, perf_counter seconds
     finish_time: float = -1.0
     preemptions: int = 0                   # times evicted from a slot mid-flight
+    retries: int = 0                       # times re-placed on a survivor after
+    #                                        a replica death (router failover);
+    #                                        past the router's retry budget the
+    #                                        request terminates with
+    #                                        finish_reason="failed"
     replayed_tokens: int = 0               # recorded tokens re-derived by decode
     #                                        after preemption — slot-ticks the
     #                                        request burned beyond its emissions
@@ -171,7 +176,9 @@ class RequestOutput:
     changed state; ``new_tokens`` is the delta since the previous output for
     the same ``rid`` and ``tokens`` the full stream so far. Terminal outputs
     set ``finished`` with a ``finish_reason`` ("stop" | "length" on normal
-    retirement, "rejected" | "shed" when admission refused the request) and
+    retirement, "rejected" | "shed" when admission refused the request,
+    "failed" when a fleet router exhausted the request's crash-retry budget —
+    see ``serve.router``) and
     the latency accounting — ``latency_ticks`` in engine ticks,
     ``wall_latency_s`` in wall-clock seconds, ``deadline_met`` against the
     request's own deadline (or the engine budget). A request still queued or

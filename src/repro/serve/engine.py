@@ -371,6 +371,24 @@ class ImmuneAdmission:
     def throttled(self) -> bool:
         return float(self.reg_state.response) > self.ecfg.reg_threshold
 
+    def degrade(self, classes, severity: float):
+        """Fleet capacity loss as an immune stress signal (graceful
+        degradation): drive the anergy gate toward shedding ``classes`` by
+        applying antigen without co-stimulation, scaled by ``severity``
+        (the router's view of how much of the fleet is dead). Called by the
+        fleet router each tick a replica is down, so low-priority classes
+        shed on the survivors before interactive traffic browns out; once
+        capacity returns the stimulus stops and IL-2 revives the classes in
+        the next quiet period — the same revival path as ordinary anergy."""
+        c = self.ecfg.num_classes
+        stim = np.zeros(c, np.float32)
+        for k in classes:
+            if 0 <= k < c:
+                stim[k] = min(max(float(severity), 0.0), 1.0)
+        self.anergy = self.gate.step(
+            self.anergy, stimulus=jnp.asarray(stim),
+            costimulus=jnp.zeros(c, jnp.float32), il2=0.0)
+
     def end_tick(self, admitted: int, queue_len: int,
                  queued_demand: np.ndarray, predicted_cost: np.ndarray):
         """Advance the regulator and anergy gate one tick.
@@ -505,7 +523,11 @@ class Engine:
                 self.ecfg.num_classes:
             raise ValueError(f"request {req.rid}: rclass {req.rclass} outside "
                              f"[0, {self.ecfg.num_classes})")
-        req.submit_time = time.perf_counter()
+        if req.submit_time < 0:
+            # first submission only: a request re-placed on a survivor after a
+            # replica crash keeps its original clock, so wall latency (and a
+            # wall-clock deadline) spans crash + replay, not just the last leg
+            req.submit_time = time.perf_counter()
         need = len(req.tokens) + self.cfg.frontend_tokens + req.max_new_tokens
         if need > self.ecfg.max_cache \
                 or self._need_pages(req) > self.alloc.usable_pages:
@@ -1283,3 +1305,31 @@ class Engine:
         """Queued + resident (incl. mid-prefill) requests — the classic
         join-shortest-queue load signal, memory-free by design."""
         return len(self.queue) + sum(r is not None for r in self.slots)
+
+    def evacuate(self) -> list:
+        """Strip every in-flight and queued request for re-placement on
+        another replica (crash recovery — the fleet router calls this when it
+        declares this replica dead). Only host-side request objects survive:
+        recorded ``out_tokens`` plus the original prompt are exactly what
+        re-admission elsewhere needs for bitwise-exact recovery (re-prefill
+        the proven prompt, replay the recorded tokens through decode — the
+        preemption machinery, pointed at a different replica). The device
+        state is abandoned; the caller must fence this engine (never step it
+        again). Returns residents in slot order, then the queue in order —
+        deterministic, so re-placement is reproducible."""
+        lost = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.slot = -1
+            lost.append(req)
+        lost.extend(self.queue)
+        self.queue.clear()
+        self.jobs.clear()
+        self.slots = [None] * self.ecfg.num_slots
+        self.active_host[:] = False
+        self.pos_host[:] = 0
+        self.emitted[:] = 0
+        for slot in range(self.ecfg.num_slots):
+            self.alloc.release(slot)      # keep the (dead) books consistent
+        return lost

@@ -160,11 +160,15 @@ class PageAllocator:
         self.pins = 0            # refcount-zero pages retained in the cache
         self.pinned_hits = 0     # pinned pages revived by adoption
         self.evictions = 0       # pinned pages dropped (budget or pool pressure)
+        # pages withdrawn from the pool by fault injection (pressure shock):
+        # out of _free AND out of usable_pages, so the conservation invariant
+        # free + live + pinned == usable holds while capacity is shrunk
+        self._seized: list[int] = []
 
     # -- accounting ----------------------------------------------------------
     @property
     def usable_pages(self) -> int:
-        return self.num_pages - 1
+        return self.num_pages - 1 - len(self._seized)
 
     @property
     def pages_in_use(self) -> int:
@@ -174,6 +178,10 @@ class PageAllocator:
     @property
     def pages_pinned(self) -> int:
         return len(self._pinned)
+
+    @property
+    def pages_seized(self) -> int:
+        return len(self._seized)
 
     def owned(self, slot: int) -> list[int]:
         return list(self._owned[slot])
@@ -378,6 +386,37 @@ class PageAllocator:
                     f"{self.usable_pages} in use, {len(self._pinned)} pinned)")
             self._drop_chain(v)
         return self._free.pop()
+
+    # -- fault injection ------------------------------------------------------
+    def seize(self, npages: int) -> int:
+        """Withdraw up to ``npages`` from the pool (a pressure shock: the
+        host reclaiming memory, a co-tenant ballooning, an HBM page going
+        bad). Free pages go first, then the coldest pinned cache leaves; live
+        (refcounted) pages are never seized. Seized pages leave
+        ``usable_pages`` entirely, so the conservation invariant
+        ``free + live + pinned == usable`` holds while capacity is shrunk.
+        Returns how many pages were actually taken — under full live
+        occupancy the shock can land short."""
+        taken = 0
+        while taken < npages:
+            if not self._free:
+                v = self._coldest_evictable()
+                if v is None:
+                    break
+                self._drop_chain(v)
+            self._seized.append(self._free.pop())
+            taken += 1
+        return taken
+
+    def restore(self, npages: Optional[int] = None) -> int:
+        """Return seized pages (all, or the ``npages`` most recently seized)
+        to the free pool, growing ``usable_pages`` back. Returns the count
+        restored."""
+        n = len(self._seized) if npages is None else min(npages,
+                                                         len(self._seized))
+        for _ in range(n):
+            self._free.append(self._seized.pop())
+        return n
 
     # -- lifecycle -----------------------------------------------------------
     def reserve(self, slot: int, need_pages: int) -> None:

@@ -47,14 +47,49 @@ benchmark gates:
          historically decodes 40 ticks is more loaded than one holding three
          5-tick chatters, which instantaneous queue length (jsq) cannot see.
 
-Placement never changes what a request computes — admission, preemption and
-replay inside each replica are untouched — so per-request tokens are bitwise
-identical across policies and replica counts (the engine-vs-oneshot parity
-oracle lifted one level; pinned by the placement-invariance tests and the
-``routing_parity_exact`` benchmark bit).
+**Health and failover** (all policies): each replica carries a health state
+driven by missed step deadlines — ``healthy`` (eligible for placement),
+``suspect`` after ``suspect_after`` consecutive missed fleet ticks (no *new*
+placements; in-flight work stays, because a suspect replica usually
+recovers), ``dead`` after ``dead_after`` (fenced: never stepped again —
+declared deaths are never un-declared, a restarted process must ``rejoin``
+as a fresh replica). Declaring a death triggers **failover**: the dead
+replica's in-flight and queued requests are evacuated
+(``Engine.evacuate``) and re-placed on survivors, where PR 6's preemption
+machinery recovers them *bitwise-exactly* — re-prefill the proven prompt,
+replay the recorded tokens through decode (same lane key, same fold
+indices). Each re-placement spends one unit of the request's retry budget
+(``max_retries``, exponential ``retry_backoff`` between attempts beyond the
+first); a request that outlives its budget terminates with
+``finish_reason="failed"`` — failure is an accounted outcome, never a
+silently dropped rid. Requests keep their original ``arrival`` and
+``submit_time`` across re-placement, so victim scoring still sees their true
+seniority (a recovering request is never the "latest arrival" to evict
+first) and latency accounting spans crash + replay.
+
+**Graceful degradation** (immune replicas): while any replica is dead, the
+router injects anergy stimulus for ``degrade_classes`` into every survivor
+(``ImmuneAdmission.degrade``) — capacity loss is fleet-wide stress, and the
+tolerance machinery sheds the classes the operator marked sheddable before
+interactive traffic browns out. When capacity returns the stimulus stops and
+IL-2 revives the classes in the next quiet period, the same revival path as
+ordinary anergy.
+
+Faults themselves are scripted by ``serve.faults`` (`FaultPlan` /
+``FaultInjector``), which *causes* crashes/stalls/slowdowns but never
+announces them — detection is this router's missed-deadline machine, as it
+would be across a real IPC boundary.
+
+Placement never changes what a request computes — admission, preemption,
+replay and failover re-placement inside each replica are untouched — so
+per-request tokens are bitwise identical across policies, replica counts
+*and fault plans* (the engine-vs-oneshot parity oracle lifted one level;
+pinned by the placement-invariance tests and the ``routing_parity_exact`` /
+``failover_parity_exact`` benchmark bits).
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from typing import List, NamedTuple, Optional
 
@@ -64,6 +99,8 @@ from .api import ServeRequest
 from .engine import Engine
 
 POLICIES = ("immune", "rr", "jsq")
+
+HEALTHY, SUSPECT, DEAD = "healthy", "suspect", "dead"
 
 
 class RouterConfig(NamedTuple):
@@ -77,13 +114,31 @@ class RouterConfig(NamedTuple):
     #                               forfeits its claim (anti-convoy)
     cost_floor: float = 1.0       # minimum per-request price in the
     #                               remembered-cost load model (cold classes)
+    suspect_after: int = 2        # consecutive missed fleet ticks before a
+    #                               replica stops receiving new placements
+    dead_after: int = 6           # missed ticks before it is declared dead,
+    #                               fenced, and its requests re-placed (must
+    #                               exceed any tolerated straggler factor)
+    max_retries: int = 3          # crash re-placements per request before a
+    #                               terminal finish_reason="failed"
+    retry_backoff: int = 2        # ticks of exponential backoff between
+    #                               re-placements beyond the first
+    degrade_classes: tuple = ()   # classes shed fleet-wide while capacity is
+    #                               lost (graceful degradation; empty: off)
+    degrade_gain: float = 3.0     # anergy stimulus per fraction of dead
+    #                               replicas (3.0: one dead of three -> full)
 
 
 class Router:
     """One global queue over ``engines``; ``step()`` places then advances the
-    fleet one tick. Drive with :meth:`run`, read :meth:`stats`."""
+    fleet one tick. Drive with :meth:`run`, read :meth:`stats`. An optional
+    ``injector`` (``serve.faults.FaultInjector``) scripts replica faults;
+    health tracking and failover run regardless — a fleet without an
+    injector simply never sees a missed deadline."""
 
-    def __init__(self, engines: List[Engine], rcfg: RouterConfig = RouterConfig()):
+    def __init__(self, engines: List[Engine],
+                 rcfg: RouterConfig = RouterConfig(),
+                 injector=None):
         if not engines:
             raise ValueError("router needs at least one engine replica")
         if rcfg.policy not in POLICIES:
@@ -91,6 +146,7 @@ class Router:
                              f"expected one of {POLICIES}")
         self.engines = list(engines)
         self.rcfg = rcfg
+        self.injector = injector
         self.queue: deque[ServeRequest] = deque()
         self.tick = 0
         self.submitted = 0
@@ -102,6 +158,19 @@ class Router:
         self.drain_skips = 0             # placements redirected off a drained replica
         self.drain_overflow = 0          # all replicas drained -> least-anergic
         self._rr_next = 0
+        # health / failover state
+        self.health: list = [HEALTHY] * len(engines)
+        self.last_step: list = [-1] * len(engines)   # last fleet tick stepped
+        self.fallen: List[Engine] = []   # dead engines replaced by a rejoin —
+        #                                  kept so their completed requests
+        #                                  stay in the fleet's books
+        self.failed: list = []           # retry budget exhausted (terminal)
+        self._retry: list = []           # backoff heap: (ready_tick, rid, req)
+        self.deaths = 0                  # replicas declared dead
+        self.rejoins = 0                 # fresh replicas swapped in
+        self.death_ticks: list = []      # when each death was declared
+        self.replaced_rids: set = set()  # requests ever evacuated by failover
+        self.total_retries = 0           # re-placements actually performed
 
     # -- placement -----------------------------------------------------------
     def _load(self, eng: Engine) -> float:
@@ -113,12 +182,19 @@ class Router:
         return float(sum(max(float(costs[r.rclass]), self.rcfg.cost_floor)
                          for r in list(eng.queue) + resident))
 
-    def _place_immune(self, req: ServeRequest) -> int:
-        n = len(self.engines)
+    def _eligible(self) -> list:
+        """Replica indices placement may use: healthy ones. A suspect replica
+        keeps its in-flight work (it usually recovers) but gets nothing new;
+        a dead one is fenced. Empty when no replica is healthy — the queue
+        then holds until health returns (or a rejoin arrives)."""
+        return [i for i, h in enumerate(self.health) if h == HEALTHY]
+
+    def _place_immune(self, req: ServeRequest, eligible: list) -> int:
         # 1) prefix affinity, forfeited by an over-backlogged replica
         self.affinity_checks += 1
         best_aff, best_i = 0, -1
-        for i, eng in enumerate(self.engines):
+        for i in eligible:
+            eng = self.engines[i]
             cap = self.rcfg.affinity_queue_cap * eng.ecfg.num_slots
             if eng.occupancy() > cap:
                 continue
@@ -130,28 +206,114 @@ class Router:
             self.affinity_tokens += best_aff
             return best_i
         # 2) anergy draining: exclude replicas anergic for this class
-        levels = [float(eng.anergy_levels()[req.rclass])
-                  if req.rclass < eng.ecfg.num_classes else 0.0
-                  for eng in self.engines]
-        live = [i for i in range(n) if levels[i] <= self.rcfg.drain_level]
+        levels = {i: float(self.engines[i].anergy_levels()[req.rclass])
+                  if req.rclass < self.engines[i].ecfg.num_classes else 0.0
+                  for i in eligible}
+        live = [i for i in eligible if levels[i] <= self.rcfg.drain_level]
         if not live:                      # the request must land somewhere
             self.drain_overflow += 1
-            live = [min(range(n), key=lambda i: (levels[i], i))]
-        elif len(live) < n:
+            live = [min(eligible, key=lambda i: (levels[i], i))]
+        elif len(live) < len(eligible):
             self.drain_skips += 1
         # 3) least remembered cost among the live replicas
         return min(live, key=lambda i: (self._load(self.engines[i]), i))
 
     def _place(self, req: ServeRequest) -> int:
-        """Pick the replica index for ``req`` under the configured policy."""
+        """Pick the replica index for ``req`` under the configured policy
+        (healthy replicas only; -1 when none is). With every replica healthy
+        each policy behaves exactly as it did without health tracking."""
+        eligible = self._eligible()
+        if not eligible:
+            return -1
         if self.rcfg.policy == "rr":
-            i = self._rr_next
-            self._rr_next = (i + 1) % len(self.engines)
-            return i
+            for _ in range(len(self.engines)):   # skip fenced/suspect slots
+                i = self._rr_next
+                self._rr_next = (i + 1) % len(self.engines)
+                if self.health[i] == HEALTHY:
+                    return i
+            return eligible[0]
         if self.rcfg.policy == "jsq":
-            return min(range(len(self.engines)),
+            return min(eligible,
                        key=lambda i: (self.engines[i].occupancy(), i))
-        return self._place_immune(req)
+        return self._place_immune(req, eligible)
+
+    # -- health / failover ---------------------------------------------------
+    def _declare_dead(self, i: int) -> None:
+        """Fence replica ``i`` and fail its work over to the survivors. The
+        evacuated request objects carry everything recovery needs (prompt +
+        recorded tokens); re-admission elsewhere replays them bitwise. Each
+        evacuation costs a retry; past ``max_retries`` the request terminates
+        with ``finish_reason="failed"`` instead of bouncing forever."""
+        self.health[i] = DEAD
+        self.deaths += 1
+        self.death_ticks.append(self.tick)
+        for req in self.engines[i].evacuate():
+            self.replaced_rids.add(req.rid)
+            req.retries += 1
+            if req.retries > self.rcfg.max_retries:
+                req.finish_reason = "failed"
+                req.finish_tick = self.tick
+                self.failed.append(req)
+                continue
+            self.total_retries += 1
+            if req.admit_tick >= 0 and req.preempt_tick < 0:
+                # held a slot: its re-queue wait is accounted like a
+                # preemption's (requeue_ticks on re-admission)
+                req.preempt_tick = self.tick
+            delay = 0 if req.retries == 1 else \
+                self.rcfg.retry_backoff * (1 << (req.retries - 2))
+            if delay > 0:
+                heapq.heappush(self._retry,
+                               (self.tick + 1 + delay, req.rid, req))
+            else:
+                self.queue.append(req)
+
+    def _check_health(self) -> None:
+        """End-of-tick health transitions from missed step deadlines. Death
+        is detected, never announced — a crashed replica just stops stepping,
+        and this is the only place the fleet finds out."""
+        for i in range(len(self.engines)):
+            if self.health[i] == DEAD:
+                continue
+            missed = self.tick - self.last_step[i]
+            if missed >= self.rcfg.dead_after:
+                self._declare_dead(i)
+            elif missed >= self.rcfg.suspect_after:
+                self.health[i] = SUSPECT
+            else:
+                self.health[i] = HEALTHY
+
+    def _degrade(self) -> None:
+        """While capacity is down, shed the operator-marked classes on every
+        survivor: anergy stimulus scaled by the dead fraction of the fleet,
+        reapplied each tick so the brown-out tracks the outage and IL-2
+        revival takes over the moment it ends."""
+        if not self.rcfg.degrade_classes:
+            return
+        dead = sum(1 for h in self.health if h == DEAD)
+        if not dead:
+            return
+        sev = min(1.0, self.rcfg.degrade_gain * dead / len(self.engines))
+        for i, eng in enumerate(self.engines):
+            if self.health[i] != DEAD and eng.admission is not None:
+                eng.admission.degrade(self.rcfg.degrade_classes, sev)
+
+    def rejoin(self, i: int, engine: Engine) -> None:
+        """Swap a *fresh* engine into replica slot ``i`` (a restarted
+        process: cold pinned cache, blank immune state). A replica is
+        replaced, never resumed — whatever the old process held is gone; if
+        the health machine had not yet declared the death (a fast restart),
+        it is declared now so the old in-flight work is recovered first. The
+        newcomer starts healthy with a fresh deadline clock; prefix-affinity
+        traffic rewarms its pinned cache from the live traffic stream."""
+        if self.health[i] != DEAD:
+            self._declare_dead(i)
+        self.fallen.append(self.engines[i])
+        self.engines[i] = engine
+        engine.tick = self.tick
+        self.health[i] = HEALTHY
+        self.last_step[i] = self.tick - 1
+        self.rejoins += 1
 
     # -- driving -------------------------------------------------------------
     def submit(self, req: ServeRequest):
@@ -161,19 +323,38 @@ class Router:
         self.submitted += 1
 
     def step(self):
-        """One fleet tick: place every queued request on a replica, then
-        advance all replicas one engine tick in lockstep."""
+        """One fleet tick: fire scripted faults, release expired retry
+        backoffs, place every queued request on a healthy replica, advance
+        the non-fenced replicas in lockstep (minus those the injector holds
+        back), then run the health machine and the degradation signal."""
+        if self.injector is not None:
+            self.injector.begin_tick(self)
+        while self._retry and self._retry[0][0] <= self.tick:
+            self.queue.append(heapq.heappop(self._retry)[2])
         while self.queue:
-            req = self.queue.popleft()
+            req = self.queue[0]
             i = self._place(req)
+            if i < 0:                  # no healthy replica: hold the queue
+                break
+            self.queue.popleft()
             self.placements[i] += 1
             self.engines[i].submit(req)
-        for eng in self.engines:
-            eng.step()
+        for i, eng in enumerate(self.engines):
+            if self.health[i] == DEAD:
+                continue               # fenced: a dead replica never steps
+            # lockstep clock: even a held-back replica's tick tracks the
+            # fleet's, so tick latencies stay fleet-global through stalls,
+            # slowdowns and rejoins
+            eng.tick = self.tick
+            if self.injector is None or self.injector.can_step(i, self.tick):
+                eng.step()
+                self.last_step[i] = self.tick
+        self._check_health()
+        self._degrade()
         self.tick += 1
 
     def _drained(self) -> bool:
-        return not self.queue and all(
+        return not self.queue and not self._retry and all(
             not eng.queue and not eng.jobs
             and all(r is None for r in eng.slots) for eng in self.engines)
 
@@ -197,22 +378,32 @@ class Router:
     # -- accounting ----------------------------------------------------------
     @property
     def completed(self) -> list:
-        """All completed requests across the fleet, rid order."""
-        return sorted((r for e in self.engines for r in e.completed),
-                      key=lambda r: r.rid)
+        """All completed requests across the fleet — replaced (fallen)
+        replicas included, their pre-crash completions are real — rid
+        order."""
+        return sorted((r for e in self.engines + self.fallen
+                       for r in e.completed), key=lambda r: r.rid)
 
     def stats(self) -> dict:
+        fleet = self.engines + self.fallen
         per = [eng.stats() for eng in self.engines]
         done = self.completed
         lat = np.asarray([r.latency for r in done], np.float64)
         toks = int(sum(len(r.out_tokens) for r in done))
-        in_budget = sum(1 for eng in self.engines for r in eng.completed
+        in_budget = sum(1 for eng in fleet for r in eng.completed
                         if eng._met_budget(r))
-        shed = sum(p["shed"] for p in per)
-        rejected = sum(p["rejected"] for p in per)
-        unserved = int(len(self.queue) + self.unsubmitted
+        shed = sum(len(eng.shed) for eng in fleet)
+        rejected = sum(len(eng.rejected) for eng in fleet)
+        unserved = int(len(self.queue) + len(self._retry) + self.unsubmitted
                        + sum(p["unserved"] for p in per))
-        demand = len(done) + shed + rejected + unserved
+        failed = len(self.failed)
+        demand = len(done) + shed + rejected + unserved + failed
+        # recovery: from the first declared death to the last re-placed
+        # request's completion — how long the failover took to fully absorb
+        redone = [r for r in done if r.rid in self.replaced_rids]
+        recovery = (max(r.finish_tick for r in redone)
+                    - min(self.death_ticks)) \
+            if redone and self.death_ticks else 0
         empty = float("inf")
         place = self.placements
         return {
@@ -223,6 +414,7 @@ class Router:
             "shed": shed,
             "rejected": rejected,
             "unserved": unserved,
+            "failed": failed,
             "tokens": toks,
             "throughput": toks / max(self.tick, 1),
             "p50_latency": float(np.percentile(lat, 50)) if lat.size else empty,
@@ -240,6 +432,15 @@ class Router:
             "affinity_tokens": self.affinity_tokens,
             "drain_skips": self.drain_skips,
             "drain_overflow": self.drain_overflow,
+            # health / failover telemetry
+            "health": list(self.health),
+            "deaths": self.deaths,
+            "rejoins": self.rejoins,
+            "replaced_requests": len(self.replaced_rids),
+            "retries": self.total_retries,
+            "recovery_ticks": int(recovery),
+            "faults": self.injector.stats()
+            if self.injector is not None else None,
             # fleet-aggregated engine telemetry
             "prefill_tokens": sum(p["prefill_tokens"] for p in per),
             "preemptions": sum(p["preemptions"] for p in per),

@@ -192,6 +192,28 @@ def fleet_trace(cfg: ModelConfig, tenants: int = 3, num_requests: int = 24,
     return reqs
 
 
+def failover_fleet_trace(cfg: ModelConfig, replicas: int = 3,
+                         crash_replica: int = 1, seed: int = 0,
+                         rejoin: bool = True, **kw) -> tuple:
+    """The fleet trace, fault-laced: ``fleet_trace`` traffic plus a matched
+    crash-of-one fault-plan spec (``serve.faults.FaultPlan.parse`` grammar)
+    sized to the trace — the crash lands about a third of the way through the
+    arrival window (survivors absorb the evacuated work while traffic is
+    still arriving, the hard case), and with ``rejoin`` the replica returns
+    cold around two thirds of the window — before the tail of arrivals, so
+    prefix-affinity traffic visibly rewarms its pinned cache while the run
+    is still live. Returns ``(requests, plan_spec)`` — the manual-run
+    variant behind ``launch/serve --trace fleet-faults``."""
+    reqs = fleet_trace(cfg, seed=seed, **kw)
+    horizon = max(r.arrival for r in reqs) if reqs else 0
+    crash_at = max(1, horizon // 3)
+    r = crash_replica % max(replicas, 1)
+    spec = f"crash@{crash_at}:r{r}"
+    if rejoin:
+        spec += f" rejoin@{max(crash_at + 10, (2 * horizon) // 3)}:r{r}"
+    return reqs, spec
+
+
 def shared_prefix_trace(cfg: ModelConfig, num_requests: int = 32,
                         num_prefixes: int = 2, prefix_len: int = 32,
                         suffix_lens: tuple = (4, 8),

@@ -9,10 +9,12 @@ BASELINE = {
     "pinning": {"summary": {"pinned_hit_rate": 0.5}},
     "preemption": {"summary": {"preempt_concurrency_hw": 4.0}},
     "routing": {"summary": {"affinity_hit_rate": 0.6}},
+    "failover": {"summary": {"immune_goodput": 0.9}},
 }
 
 
-def _new(hit=0.5, depth=4.0, parity=True, check=True, affinity=0.6):
+def _new(hit=0.5, depth=4.0, parity=True, check=True, affinity=0.6,
+         goodput=0.9):
     return {
         "pinning": {"summary": {
             "pinned_hit_rate": hit,
@@ -26,6 +28,10 @@ def _new(hit=0.5, depth=4.0, parity=True, check=True, affinity=0.6):
         "routing": {"summary": {
             "affinity_hit_rate": affinity,
             "routing_parity_exact": True,
+        }},
+        "failover": {"summary": {
+            "immune_goodput": goodput,
+            "failover_parity_exact": True,
         }},
     }
 
@@ -58,6 +64,10 @@ class TestGate:
     def test_affinity_regression_fails(self):
         assert any("affinity_hit_rate" in f
                    for f in gate(_new(affinity=0.2), BASELINE))
+
+    def test_failover_goodput_regression_fails(self):
+        assert any("immune_goodput" in f
+                   for f in gate(_new(goodput=0.5), BASELINE))
 
     def test_missing_baseline_section_skips(self):
         assert gate(_new(), {}) == []

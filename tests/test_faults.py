@@ -1,0 +1,333 @@
+"""Fleet fault injection + immune failover (serve.faults + serve.router).
+
+Plan/injector semantics are model-free and run in microseconds; the fleet
+tests drive real engine replicas through scripted crash / straggler / stall /
+pressure / rejoin faults and pin the tentpole invariant: every *surviving*
+request's tokens are bitwise identical to the fault-free run, across router
+policies and fault plans — a crash moves work, it never changes what the
+work computes. Accounting is the second anchor: no rid is ever silently
+lost; every submitted request terminates completed, shed, rejected, or
+``failed`` (retry budget exhausted).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model
+from repro.serve import engine as eng_mod
+from repro.serve import router as rt_mod
+from repro.serve import traces
+from repro.serve.api import SamplingParams, ServeRequest
+from repro.serve.faults import (FAULT_KINDS, FaultEvent, FaultInjector,
+                                FaultPlan)
+from repro.serve.paging import PageAllocator
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = configs.get_config("smollm-360m").smoke()
+    return cfg, model.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _ecfg(**kw):
+    base = dict(num_slots=2, max_cache=64, page_size=16, prefill_chunk=8,
+                policy="immune", num_classes=3, latency_budget=64.0,
+                pin_pages=4)
+    base.update(kw)
+    return eng_mod.EngineConfig(**base)
+
+
+def _engines(params, cfg, n, **kw):
+    return [eng_mod.Engine(params, cfg, _ecfg(**kw)) for _ in range(n)]
+
+
+def _fleet(cfg, **kw):
+    base = dict(tenants=3, num_requests=12, prefix_len=32, suffix_lens=(4,),
+                decode_lens=(6,), hot_frac=0.5, burst_every=4, burst_size=3,
+                seed=0)
+    base.update(kw)
+    return traces.fleet_trace(cfg, **base)
+
+
+def _tokens_by_rid(router):
+    return {r.rid: list(r.out_tokens) for r in router.completed}
+
+
+# ---------------------------------------------------------------------------
+# plan + injector semantics (model-free)
+# ---------------------------------------------------------------------------
+class TestFaultPlan:
+    def test_parse_full_grammar(self):
+        plan = FaultPlan.parse(
+            "crash@40:r1, rejoin@90:r1 slow@10+30:r0:x3 stall@15+4:r2 "
+            "pressure@20+10:r0:p4")
+        assert len(plan) == 5
+        kinds = {e.kind: e for e in plan}
+        assert set(kinds) == set(FAULT_KINDS)
+        assert kinds["crash"].tick == 40 and kinds["crash"].replica == 1
+        assert kinds["slow"].duration == 30 and kinds["slow"].factor == 3
+        assert kinds["stall"].duration == 4
+        assert kinds["pressure"].pages == 4 and kinds["pressure"].duration == 10
+        assert kinds["rejoin"].tick == 90
+
+    def test_events_sorted_and_queryable(self):
+        plan = FaultPlan.parse("crash@9:r2 crash@3:r0 stall@3+2:r1")
+        assert [e.tick for e in plan] == [3, 3, 9]
+        assert {e.kind for e in plan.events_at(3)} == {"crash", "stall"}
+        assert plan.events_at(4) == []
+        assert plan.max_replica() == 2
+
+    def test_crash_of_one_helper(self):
+        plan = FaultPlan.crash_of_one(replica=1, at=7, rejoin_at=20)
+        assert [(e.kind, e.tick) for e in plan] == [("crash", 7),
+                                                   ("rejoin", 20)]
+        assert len(FaultPlan.crash_of_one(replica=0, at=7)) == 1
+
+    @pytest.mark.parametrize("spec", [
+        "melt@3:r0",                  # unknown kind
+        "crash@3",                    # missing replica
+        "crash@3:r0:q9",              # unknown modifier
+        "slow@3:r0",                  # slow needs a duration
+        "slow@3+5:r0:x1",             # factor < 2 is not slow
+        "pressure@3+5:r0",            # pressure needs pages
+        "rejoin@9:r1",                # rejoin without a prior crash
+        "crash@3:r0 crash@5:r0",      # double crash without rejoin
+    ])
+    def test_invalid_specs_raise(self, spec):
+        with pytest.raises(ValueError):
+            FaultPlan.parse(spec)
+
+    def test_crash_rejoin_crash_is_valid(self):
+        plan = FaultPlan.parse("crash@3:r0 rejoin@9:r0 crash@15:r0")
+        assert len(plan) == 3
+
+
+class _StubEngine:
+    def __init__(self):
+        self.alloc = PageAllocator(9, 4, 2, 4, pin_pages=2,
+                                   require_reservation=False)
+        self.tick = 0
+
+
+class _StubRouter:
+    def __init__(self, n=3):
+        self.tick = 0
+        self.engines = [_StubEngine() for _ in range(n)]
+        self.rejoined = []
+
+    def rejoin(self, i, engine):
+        self.rejoined.append(i)
+        self.engines[i] = engine
+
+
+class TestFaultInjector:
+    def _drive(self, inj, router, ticks):
+        held = {i: [] for i in range(len(router.engines))}
+        for t in range(ticks):
+            router.tick = t
+            inj.begin_tick(router)
+            for i in range(len(router.engines)):
+                if not inj.can_step(i, t):
+                    held[i].append(t)
+        return held
+
+    def test_crash_holds_forever_rejoin_releases(self):
+        inj = FaultInjector(FaultPlan.parse("crash@2:r1 rejoin@5:r1"),
+                            engine_factory=_StubEngine)
+        router = _StubRouter()
+        held = self._drive(inj, router, 8)
+        assert held[1] == [2, 3, 4]          # released by the rejoin at 5
+        assert held[0] == [] and held[2] == []
+        assert router.rejoined == [1]
+        assert inj.stats()["crashes"] == 1 and inj.stats()["rejoins"] == 1
+
+    def test_stall_window_heals_itself(self):
+        inj = FaultInjector(FaultPlan.parse("stall@2+3:r0"))
+        held = self._drive(inj, _StubRouter(), 8)
+        assert held[0] == [2, 3, 4]
+
+    def test_slow_steps_every_factor_ticks(self):
+        inj = FaultInjector(FaultPlan.parse("slow@2+6:r0:x3"))
+        held = self._drive(inj, _StubRouter(), 10)
+        # window [2, 8): steps at 2 and 5 only
+        assert held[0] == [3, 4, 6, 7]
+
+    def test_pressure_seizes_then_restores(self):
+        inj = FaultInjector(FaultPlan.parse("pressure@1+3:r0:p4"))
+        router = _StubRouter()
+        alloc = router.engines[0].alloc
+        nominal = alloc.usable_pages
+        for t in range(6):
+            router.tick = t
+            inj.begin_tick(router)
+            if 1 <= t < 4:
+                assert alloc.pages_seized == 4
+                assert alloc.usable_pages == nominal - 4
+        assert alloc.pages_seized == 0 and alloc.usable_pages == nominal
+        assert inj.stats()["pages_seized"] == 4
+
+    def test_rejoin_requires_factory(self):
+        with pytest.raises(ValueError, match="engine_factory"):
+            FaultInjector(FaultPlan.parse("crash@1:r0 rejoin@5:r0"))
+
+    def test_fault_beyond_fleet_raises(self):
+        inj = FaultInjector(FaultPlan.parse("crash@0:r7"))
+        with pytest.raises(ValueError, match="r7"):
+            inj.begin_tick(_StubRouter(n=3))
+
+
+# ---------------------------------------------------------------------------
+# fleet failover on real replicas
+# ---------------------------------------------------------------------------
+class TestFleetFailover:
+    def test_crash_failover_bitwise_exact_across_policies(self, dense):
+        """The tentpole invariant: under crash-of-1-of-3, every surviving
+        request's tokens are bitwise the fault-free run's, for every router
+        policy, and every rid is accounted (nothing silently lost)."""
+        cfg, params = dense
+        ref_router = rt_mod.Router(_engines(params, cfg, 3),
+                                   rt_mod.RouterConfig(policy="immune"))
+        ref_router.run(_fleet(cfg))
+        ref = _tokens_by_rid(ref_router)
+        plan = "crash@5:r1"
+        for policy in rt_mod.POLICIES:
+            reqs = _fleet(cfg)
+            router = rt_mod.Router(
+                _engines(params, cfg, 3), rt_mod.RouterConfig(policy=policy),
+                injector=FaultInjector(FaultPlan.parse(plan)))
+            s = router.run(reqs)
+            assert s["deaths"] == 1 and s["health"][1] == rt_mod.DEAD
+            got = _tokens_by_rid(router)
+            assert got == {rid: ref[rid] for rid in got}, policy
+            assert s["completed"] + s["shed"] + s["rejected"] + s["failed"] \
+                == len(reqs)
+            assert s["unserved"] == 0
+            fleet = router.engines + router.fallen
+            accounted = ({r.rid for r in router.completed}
+                         | {r.rid for e in fleet for r in e.shed}
+                         | {r.rid for e in fleet for r in e.rejected}
+                         | {r.rid for r in router.failed})
+            assert accounted == {r.rid for r in reqs}, policy
+
+    def test_failover_replays_in_flight_request(self, dense):
+        """A request mid-decode on the crashed replica is evacuated and
+        finishes on a survivor with replayed tokens charged, its original
+        arrival preserved, and one retry spent."""
+        cfg, params = dense
+        reqs = _fleet(cfg)
+        router = rt_mod.Router(
+            _engines(params, cfg, 3), rt_mod.RouterConfig(policy="rr"),
+            injector=FaultInjector(FaultPlan.parse("crash@5:r0")))
+        s = router.run(reqs)
+        assert s["replaced_requests"] > 0
+        replaced = [r for r in router.completed
+                    if r.rid in router.replaced_rids]
+        assert replaced, "no evacuated request completed"
+        by_rid = {r.rid: r for r in reqs}
+        for r in replaced:
+            assert r.retries == 1
+            assert r.arrival == by_rid[r.rid].arrival   # original, not requeue
+        assert s["retries"] >= len(replaced)
+        assert s["recovery_ticks"] > 0
+
+    def test_rejoin_restores_capacity_and_rewarms_cache(self, dense):
+        """A crashed replica rejoining cold returns to full health, takes
+        placements again, and prefix-affinity traffic rewarms its pinned
+        prefix cache from live traffic."""
+        cfg, params = dense
+        reqs, spec = traces.failover_fleet_trace(
+            cfg, replicas=3, num_requests=18, tenants=3, prefix_len=32,
+            suffix_lens=(4,), decode_lens=(6,), burst_every=4, burst_size=3)
+        router = rt_mod.Router(
+            _engines(params, cfg, 3), rt_mod.RouterConfig(policy="immune"),
+            injector=FaultInjector(
+                FaultPlan.parse(spec),
+                engine_factory=lambda: _engines(params, cfg, 1)[0]))
+        s = router.run(reqs)
+        assert s["deaths"] == 1 and s["rejoins"] == 1
+        assert s["health"] == [rt_mod.HEALTHY] * 3
+        assert s["failed"] == 0 and s["unserved"] == 0
+        assert router.engines[1].alloc.pages_pinned > 0   # rewarmed
+        assert len(router.fallen) == 1                    # old process kept
+        # the fallen replica's pre-crash completions stay in the books
+        assert s["completed"] == len(reqs) - s["shed"] - s["rejected"]
+
+    def test_straggler_and_stall_survive_without_failover(self, dense):
+        """A slowdown or a stall shorter than dead_after flaps health but
+        never kills the replica; tokens stay bitwise the fault-free run's."""
+        cfg, params = dense
+        ref_router = rt_mod.Router(_engines(params, cfg, 3),
+                                   rt_mod.RouterConfig(policy="immune"))
+        ref_router.run(_fleet(cfg))
+        ref = _tokens_by_rid(ref_router)
+        reqs = _fleet(cfg)
+        router = rt_mod.Router(
+            _engines(params, cfg, 3), rt_mod.RouterConfig(policy="immune"),
+            injector=FaultInjector(
+                FaultPlan.parse("slow@2+8:r0:x3 stall@4+3:r2")))
+        s = router.run(reqs)
+        assert s["deaths"] == 0
+        assert s["health"] == [rt_mod.HEALTHY] * 3
+        assert _tokens_by_rid(router) == ref
+        assert s["completed"] + s["shed"] + s["rejected"] == len(reqs)
+
+    def test_pressure_shock_conserves_pages_and_parity(self, dense):
+        """A transient page seizure shrinks the pool (conservation invariant
+        intact), is fully restored, and never changes emitted tokens."""
+        cfg, params = dense
+        ref_router = rt_mod.Router(_engines(params, cfg, 3),
+                                   rt_mod.RouterConfig(policy="immune"))
+        ref_router.run(_fleet(cfg))
+        ref = _tokens_by_rid(ref_router)
+        reqs = _fleet(cfg)
+        router = rt_mod.Router(
+            _engines(params, cfg, 3), rt_mod.RouterConfig(policy="immune"),
+            injector=FaultInjector(FaultPlan.parse("pressure@3+6:r0:p3")))
+        s = router.run(reqs)
+        assert s["faults"]["pressure_shocks"] == 1
+        assert _tokens_by_rid(router) == ref
+        for eng in router.engines:
+            a = eng.alloc
+            live = {p for sl in range(a.num_slots) for p in a.owned(sl)}
+            assert len(a._free) + len(live) + a.pages_pinned \
+                == a.usable_pages
+            assert a.pages_seized == 0       # shock expired: fully restored
+
+    def test_retry_budget_exhaustion_fails_terminally(self, dense):
+        """With a zero retry budget, evacuated requests terminate with
+        finish_reason="failed" — counted in demand (goodput denominator),
+        never silently lost."""
+        cfg, params = dense
+        reqs = _fleet(cfg)
+        router = rt_mod.Router(
+            _engines(params, cfg, 3),
+            rt_mod.RouterConfig(policy="rr", max_retries=0),
+            injector=FaultInjector(FaultPlan.parse("crash@5:r0")))
+        s = router.run(reqs)
+        assert s["failed"] > 0
+        assert all(r.finish_reason == "failed" for r in router.failed)
+        assert s["completed"] + s["shed"] + s["rejected"] + s["failed"] \
+            == len(reqs)
+        # failed requests count against goodput
+        assert s["goodput"] < 1.0
+
+    def test_graceful_degradation_sheds_marked_classes_first(self, dense):
+        """While a replica is down, survivors shed degrade_classes traffic
+        (anergy from the fleet-stress stimulus) while the other classes keep
+        completing — brown-out by priority, not at random."""
+        cfg, params = dense
+        reqs = _fleet(cfg, num_requests=18, hot_frac=0.34, burst_every=3)
+        router = rt_mod.Router(
+            _engines(params, cfg, 3),
+            rt_mod.RouterConfig(policy="immune", degrade_classes=(2,)),
+            injector=FaultInjector(FaultPlan.parse("crash@4:r1")))
+        s = router.run(reqs)
+        assert s["deaths"] == 1
+        shed = [r for e in router.engines + router.fallen for r in e.shed]
+        assert shed, "degradation never shed anything"
+        assert all(r.rclass == 2 for r in shed)
+        done_classes = {r.rclass for r in router.completed}
+        assert {0, 1} <= done_classes

@@ -477,3 +477,94 @@ class TestPinnedChurn:
                 a.release(s)
         assert a.live_refs() == 0
         assert a.pages_in_use == a.pages_pinned   # drained: cache only
+
+
+class TestSeizeRestoreChurn:
+    """Fault-injection capacity shocks (``seize`` / ``restore``) interleaved
+    with admit/grow/release churn: the conservation invariant
+    ``free + live + pinned == usable`` must hold at every step even while
+    ``usable_pages`` itself moves, seized pages must never be free, live, or
+    pinned, and a full restore must return the pool to its nominal size.
+    This is the allocator-level face of crash/rejoin cycles on surviving
+    replicas — the fleet-level version lives in tests/test_faults.py."""
+
+    def test_seize_prefers_free_then_pinned_never_live(self):
+        a = PageAllocator(6, 4, 2, 4, pin_pages=4, num_classes=2,
+                          require_reservation=False)
+        toks = np.arange(8, dtype=np.int32)
+        a.ensure(0, 2)
+        a.register_prefix(0, toks)
+        a.release(0)                       # both pages pin
+        assert a.pages_pinned == 2
+        a.ensure(1, 2)                     # two live pages
+        # free=1, pinned=2, live=2, usable=5 -> seize 3 = 1 free + 2 pinned
+        assert a.seize(4) == 3             # live pages are never seized
+        assert a.pages_seized == 3 and a.pages_pinned == 0
+        assert a.usable_pages == 2 and len(a._free) == 0
+        assert a.restore() == 3
+        assert a.usable_pages == 5 and a.pages_seized == 0
+
+    def test_partial_restore_is_lifo(self):
+        a = PageAllocator(6, 4, 1, 4, require_reservation=False)
+        assert a.seize(3) == 3
+        assert a.restore(1) == 1
+        assert a.pages_seized == 2 and a.usable_pages == 3
+        assert a.restore(99) == 2          # clamped to what is seized
+        assert a.pages_seized == 0
+
+    @SETTINGS
+    @hypothesis.given(seed=st.integers(0, 10_000),
+                      num_pages=st.integers(4, 24),
+                      pin_pages=st.integers(0, 6),
+                      steps=st.integers(1, 80))
+    def test_conservation_under_pressure_churn(self, seed, num_pages,
+                                               pin_pages, steps):
+        import random
+        rng = random.Random(seed)
+        ps, maxp, num_slots = 4, 4, 3
+        a = PageAllocator(num_pages, ps, num_slots, maxp, pin_pages=pin_pages,
+                          num_classes=2, require_reservation=False)
+        prompts = [np.asarray([rng.randrange(8) for _ in range(ps * maxp)],
+                              np.int32) for _ in range(2)]
+        for _ in range(steps):
+            op = rng.random()
+            slot = rng.randrange(num_slots)
+            busy = bool(a.owned(slot))
+            try:
+                if op < 0.25:                      # pressure shock
+                    a.seize(rng.randrange(1, num_pages))
+                elif op < 0.45:                    # shock expires
+                    a.restore(rng.randrange(1, num_pages)
+                              if rng.random() < 0.5 else None)
+                elif op < 0.7 and not busy:        # admit (adopt-then-index,
+                    toks = prompts[rng.randrange(2)]  # the engine's contract)
+                    toks = toks[:rng.randrange(ps, len(toks) + 1)]
+                    full, _ = a.match_prefix(toks)
+                    a.adopt(slot, full)
+                    a.ensure(slot, pages_for(len(toks), ps))
+                    if rng.random() < 0.5:
+                        a.register_prefix(slot, toks)
+                elif op < 0.85 and busy:           # decode growth
+                    a.ensure(slot, min(maxp, len(a.owned(slot)) + 1))
+                elif busy:                         # retire / evacuate
+                    a.release(slot)
+            except OutOfPages:
+                if busy:
+                    a.release(slot)   # self-preempt, as the engine would
+            owned = [p for s in range(num_slots) for p in a.owned(s)]
+            live = set(owned)
+            seized = set(a._seized)
+            assert a.live_refs() == len(owned)
+            assert not (seized & set(a._free)), "page seized AND free"
+            assert not (seized & live), "page seized AND refcounted"
+            assert not (seized & a._pinned), "page seized AND pinned"
+            assert a.usable_pages == a.num_pages - 1 - len(seized)
+            assert len(a._free) + len(live) + a.pages_pinned == \
+                a.usable_pages, "conservation violated under pressure"
+            assert a.available() >= 0
+        a.restore()
+        for s in range(num_slots):
+            if a.owned(s):
+                a.release(s)
+        assert a.usable_pages == a.num_pages - 1
+        assert len(a._free) + a.pages_pinned == a.usable_pages

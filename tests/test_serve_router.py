@@ -19,6 +19,7 @@ from repro.serve import decode, traces
 from repro.serve import engine as eng_mod
 from repro.serve import router as rt_mod
 from repro.serve.api import SamplingParams, ServeRequest
+from repro.serve.faults import FaultInjector, FaultPlan
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -229,3 +230,137 @@ class TestRouterHarness:
             p["tokens"] for p in stats["per_replica"])
         assert stats["goodput"] == 1.0
         assert np.isfinite(stats["p99_latency"])
+
+    def test_stats_safe_on_fresh_router_and_idle_replica(self, dense):
+        """stats() must not divide by zero or crash on a router that has
+        served nothing, nor on a fleet where one replica completed zero
+        requests (e.g. it joined late or all its traffic went elsewhere)."""
+        cfg, params = dense
+        router = rt_mod.Router(_engines(params, cfg, 2))
+        s = router.stats()
+        assert s["completed"] == 0 and s["goodput"] == 0.0
+        assert s["p50_latency"] == float("inf")
+        assert s["placement_imbalance"] == 0.0 and s["recovery_ticks"] == 0
+        # 3 replicas, 2 requests under rr: replica 2 completes nothing
+        router = rt_mod.Router(_engines(params, cfg, 3),
+                               rt_mod.RouterConfig(policy="rr"))
+        s = router.run(_fleet(cfg, num_requests=2), max_ticks=300)
+        assert s["placements"][2] == 0
+        assert s["per_replica"][2]["completed"] == 0
+        assert s["completed"] == 2 and np.isfinite(s["p99_latency"])
+
+
+class TestHealthMachine:
+    """healthy -> suspect -> dead transitions from missed step deadlines,
+    and the two failover regressions: a re-placed request keeps its original
+    arrival (victim scoring must not see it as the latest arrival) and its
+    original submit_time (wall latency spans crash + replay)."""
+
+    def test_stall_flaps_suspect_then_recovers(self, dense):
+        cfg, params = dense
+        router = rt_mod.Router(
+            _engines(params, cfg, 2), rt_mod.RouterConfig(policy="rr"),
+            injector=FaultInjector(FaultPlan.parse("stall@1+3:r0")))
+        seen = []
+        for _ in range(6):
+            router.step()
+            seen.append(router.health[0])
+        assert seen == [rt_mod.HEALTHY, rt_mod.HEALTHY, rt_mod.SUSPECT,
+                        rt_mod.SUSPECT, rt_mod.HEALTHY, rt_mod.HEALTHY]
+        assert router.deaths == 0
+
+    def test_suspect_replica_takes_no_new_placements(self, dense):
+        cfg, params = dense
+        router = rt_mod.Router(
+            _engines(params, cfg, 2), rt_mod.RouterConfig(policy="rr"),
+            injector=FaultInjector(FaultPlan.parse("stall@1+4:r0")))
+        for _ in range(3):
+            router.step()              # replica 0 is now suspect
+        assert router.health[0] == rt_mod.SUSPECT
+        assert router._eligible() == [1]
+        before = router.placements.copy()
+        for rid in range(4):
+            router.submit(_req(rid))
+        router.step()
+        placed = router.placements - before
+        assert placed[0] == 0 and placed[1] == 4
+
+    def test_crash_walks_to_dead_and_stays_fenced(self, dense):
+        cfg, params = dense
+        router = rt_mod.Router(
+            _engines(params, cfg, 2), rt_mod.RouterConfig(policy="rr"),
+            injector=FaultInjector(FaultPlan.parse("crash@1:r0")))
+        while router.health[0] != rt_mod.DEAD and router.tick < 20:
+            router.step()
+        # last stepped at tick 0; missed >= dead_after(6) first at tick 6
+        assert router.death_ticks == [6]
+        old_tick = router.engines[0].tick
+        router.step()
+        assert router.health[0] == rt_mod.DEAD       # never un-declared
+        assert router.engines[0].tick == old_tick    # fenced: no more steps
+
+    def test_queue_holds_when_no_replica_is_healthy(self, dense):
+        cfg, params = dense
+        router = rt_mod.Router(
+            _engines(params, cfg, 1), rt_mod.RouterConfig(policy="rr"),
+            injector=FaultInjector(FaultPlan.parse("crash@1:r0")))
+        reqs = _fleet(cfg, num_requests=4)
+        s = router.run(reqs, max_ticks=40)
+        assert router.health == [rt_mod.DEAD]
+        assert s["unserved"] > 0                     # held, not dropped
+        assert s["completed"] + s["shed"] + s["rejected"] + s["failed"] \
+            + s["unserved"] == len(reqs)
+
+    def test_replaced_request_keeps_arrival_for_victim_scoring(self, dense):
+        """Satellite regression: failover re-placement must not refresh
+        ``arrival`` — the victim scorer's latest-arrival tiebreak would then
+        evict the recovering request first, starving exactly the work the
+        fleet just promised to save."""
+        cfg, params = dense
+        reqs = _fleet(cfg, num_requests=9)
+        arrivals = {r.rid: r.arrival for r in reqs}
+        router = rt_mod.Router(
+            _engines(params, cfg, 3), rt_mod.RouterConfig(policy="rr"),
+            injector=FaultInjector(FaultPlan.parse("crash@4:r0")))
+        router.run(reqs)
+        assert router.replaced_rids
+        for r in reqs:
+            assert r.arrival == arrivals[r.rid], r.rid
+        # and the scorer itself: same class, same progress -> the later
+        # arrival is the preferred victim, so keeping the original arrival
+        # shields the recovering request
+        eng = _engines(params, cfg, 1)[0]
+        recovering, fresh = _req(100), _req(101)
+        recovering.arrival, fresh.arrival = 0, 10
+        assert eng._victim_score(fresh) > eng._victim_score(recovering)
+
+    def test_replaced_request_keeps_submit_time_wall_clock(self, dense):
+        """Satellite regression: wall-clock latency must span crash + replay.
+        ``Engine.submit`` stamps ``submit_time`` only on first submission, so
+        re-placement on a survivor keeps the original clock."""
+        cfg, params = dense
+        e0, e1 = _engines(params, cfg, 2)
+        req = _req(0)
+        e0.submit(req)
+        t0 = req.submit_time
+        assert t0 >= 0
+        e1.submit(req)                     # the failover re-submission path
+        assert req.submit_time == t0
+
+    def test_retry_backoff_delays_second_replacement(self, dense):
+        """First re-placement is immediate; a request evacuated twice waits
+        ``retry_backoff`` ticks in the backoff heap before re-queueing."""
+        cfg, params = dense
+        router = rt_mod.Router(
+            _engines(params, cfg, 2),
+            rt_mod.RouterConfig(policy="rr", max_retries=3, retry_backoff=2))
+        req = _req(0, steps=4)
+        req.retries = 1                    # already evacuated once elsewhere
+        router.engines[0].submit(req)
+        router.tick = 5
+        router._declare_dead(0)
+        assert not router.queue            # parked in the backoff heap
+        assert router._retry and router._retry[0][0] == 5 + 1 + 2
+        for _ in range(4):
+            router.step()
+        assert not router._retry           # released once ready_tick passed
