@@ -12,10 +12,11 @@ Two kinds of rules, deliberately asymmetric:
     admission depth under contention (``preemption.summary.
     preempt_concurrency_hw``), the pinned prefix cache's hit rate
     (``pinning.summary.pinned_hit_rate``), the placement router's
-    prefix-affinity hit rate (``routing.summary.affinity_hit_rate``), and
-    immune goodput under crash-of-one failover
-    (``failover.summary.immune_goodput``) must each be at least the
-    baseline's value minus a small epsilon.
+    prefix-affinity hit rate (``routing.summary.affinity_hit_rate``), immune
+    goodput under crash-of-one failover
+    (``failover.summary.immune_goodput``), and goodput across a full-fleet
+    power loss (``durability.summary.poweroff_goodput``) must each be at
+    least the baseline's value minus a small epsilon.
     Improvements pass silently; update the baseline when they should become
     the new floor.
 
@@ -48,6 +49,7 @@ NO_REGRESS = (
     (("pinning", "summary", "pinned_hit_rate"), 0.01),
     (("routing", "summary", "affinity_hit_rate"), 0.01),
     (("failover", "summary", "immune_goodput"), 0.01),
+    (("durability", "summary", "poweroff_goodput"), 0.01),
 )
 
 

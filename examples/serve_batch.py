@@ -34,6 +34,15 @@ crash+rejoin plan auto-sized to the trace when ``--faults`` is not given:
 
     PYTHONPATH=src python examples/serve_batch.py --engine --replicas 3 \
         --fleet-faults [--faults "crash@7:r1 rejoin@17:r1"]
+
+A plan containing ``poweroff@tick [restart@tick]`` fail-stops the ENTIRE
+fleet mid-trace; the demo then drives through
+``serve.durability.run_durable`` — write-ahead journal + warm snapshots in a
+scratch dir, a fresh fleet recovered after the loss — and still finishes
+every request with bitwise-identical tokens:
+
+    PYTHONPATH=src python examples/serve_batch.py --engine --replicas 2 \
+        --fleet-faults --faults "poweroff@12 restart@16"
 """
 import argparse
 import os
@@ -163,19 +172,42 @@ def _engine_demo(params, cfg, args):
                 cfg, replicas=args.replicas,
                 crash_replica=args.replicas - 1)
             spec = spec or auto_spec
-        injector = None
         if spec:
-            injector = FaultInjector(
-                FaultPlan.parse(spec),
-                engine_factory=lambda: eng_mod.Engine(params, cfg, ecfg,
-                                                      router_bias=bias))
             print(f"fault plan: {spec}")
-        fleet = [eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
-                 for _ in range(args.replicas)]
-        router = rt_mod.Router(fleet, rt_mod.RouterConfig(policy=args.router),
-                               injector=injector)
+
+        def make_router():
+            injector = None
+            if spec:
+                injector = FaultInjector(
+                    FaultPlan.parse(spec),
+                    engine_factory=lambda: eng_mod.Engine(params, cfg, ecfg,
+                                                          router_bias=bias))
+            fleet = [eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
+                     for _ in range(args.replicas)]
+            return rt_mod.Router(fleet,
+                                 rt_mod.RouterConfig(policy=args.router),
+                                 injector=injector)
+
         t0 = time.perf_counter()
-        stats = router.run(reqs, max_ticks=1000)
+        if spec and "poweroff" in spec:
+            # a full-fleet fail-stop needs the out-of-band recovery driver:
+            # journal + warm snapshots in a scratch dir, rebuilt on restart
+            import tempfile
+
+            from repro.serve import durability
+            scratch = tempfile.mkdtemp(prefix="serve_batch_wal_")
+            router, stats = durability.run_durable(
+                make_router, reqs, os.path.join(scratch, "journal.wal"),
+                snapshot_dir=os.path.join(scratch, "snap"), snapshot_every=4,
+                max_ticks=1000)
+            print(f"  poweroff survived: {stats['restarts']} restarts, "
+                  f"{stats['durability']['recovered_finished']} finished "
+                  f"deduped + {stats['durability']['recovered_open']} "
+                  f"replayed, {stats['durability']['recovered_pinned_pages']} "
+                  f"pinned pages warm (journal+snapshots in {scratch})")
+        else:
+            router = make_router()
+            stats = router.run(reqs, max_ticks=1000)
         dt = time.perf_counter() - t0
         print(f"{args.arch} ({cfg.family}) {args.router} router over "
               f"{args.replicas} replicas: {stats['completed']} requests in "

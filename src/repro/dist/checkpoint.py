@@ -56,6 +56,26 @@ _MANIFEST = "manifest.json"
 log = logging.getLogger(__name__)
 
 
+def _fsync_dir(path: str) -> None:
+    """fsync a *directory*: durably commit the rename that just landed in it.
+
+    ``os.rename`` updates the parent directory's entries in the page cache;
+    without this sync a power loss after the rename can roll the directory
+    back to its pre-rename contents, silently losing the checkpoint the
+    caller was just told is durable. Best-effort on filesystems that reject
+    directory fsync (some network mounts)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def _step_dir(ckpt_dir: str, step: int) -> str:
     return os.path.join(ckpt_dir, f"step_{step:08d}")
 
@@ -122,6 +142,10 @@ def save(ckpt_dir: str, state: Any, step: int, keep: Optional[int] = None) -> st
             os.rmdir(aside)
             os.rename(final, aside)
         os.rename(tmp, final)
+        # fsync the PARENT directory after the rename: without it a crash can
+        # roll the directory entry back and lose the checkpoint we just
+        # reported durable (the classic rename-without-dirsync gap)
+        _fsync_dir(ckpt_dir)
         if aside is not None:
             shutil.rmtree(aside, ignore_errors=True)
     except BaseException:
@@ -172,6 +196,45 @@ def restore(ckpt_dir: str, like: Any,
     if step is None and dirs:
         log.warning("no usable checkpoint among steps %s in %s (all skipped)",
                     sorted(dirs), ckpt_dir)
+    return None, 0
+
+
+def restore_raw(ckpt_dir: str,
+                step: Optional[int] = None) -> tuple[Optional[list], int]:
+    """Restore the newest checkpoint as a flat list of host numpy arrays.
+
+    The manifest (not a ``like`` tree) drives shapes/dtypes, so callers with
+    *dynamic* state — e.g. the serving snapshot, whose pinned-chain leaf
+    count varies run to run — can restore without pre-building a matching
+    pytree (a first slice of the roadmap's orbax-style lazy restore).
+    Returns ``(leaves, step)`` or ``(None, 0)``; corrupt checkpoints fall
+    back newest-first like :func:`restore`.
+    """
+    dirs = _candidate_dirs(ckpt_dir)
+    candidates = [step] if step is not None else sorted(dirs, reverse=True)
+    for s in candidates:
+        path = dirs.get(s)
+        if path is None:
+            continue
+        try:
+            with open(os.path.join(path, _MANIFEST)) as f:
+                manifest = json.load(f)
+            leaves = []
+            for i, entry in enumerate(manifest["leaves"]):
+                raw = np.load(os.path.join(path, _leaf_file(i)),
+                              allow_pickle=False)
+                dtype = jnp.dtype(entry["dtype"])
+                if raw.dtype != dtype:     # bf16 etc. round-trip as void
+                    raw = raw.view(dtype)
+                if tuple(raw.shape) != tuple(entry["shape"]):
+                    raise ValueError(f"leaf {i}: shape {raw.shape} != "
+                                     f"manifest {entry['shape']}")
+                leaves.append(raw)
+            return leaves, s
+        except Exception as e:
+            log.warning("skipping checkpoint %s: %s: %s",
+                        path, type(e).__name__, e)
+            continue
     return None, 0
 
 
@@ -241,5 +304,6 @@ def _sweep_tmp(ckpt_dir: str) -> None:
         path = os.path.join(ckpt_dir, name)
         if ".old." in name and not os.path.isdir(os.path.join(ckpt_dir, stem)):
             os.rename(path, os.path.join(ckpt_dir, stem))
+            _fsync_dir(ckpt_dir)
         else:
             shutil.rmtree(path, ignore_errors=True)

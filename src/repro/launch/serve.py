@@ -40,6 +40,19 @@ auto-sized to the arrival window when ``--faults`` is not given:
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
         --stream --trace fleet-faults --replicas 3 --router immune \
         [--faults "crash@7:r1 rejoin@17:r1"]
+
+``--journal PATH`` arms the write-ahead request journal (and, with
+``--snapshot-dir``/``--snapshot-every``, warm snapshots of the pinned cache
++ immune memories) on the router. A fault plan containing ``poweroff@tick``
+— or ``--trace fleet-poweroff``, which auto-sizes one to the arrival window
+— switches the drive to ``serve.durability.run_durable``: the whole fleet
+fail-stops mid-trace, the journal is truncated to its fsync'd prefix, and a
+fresh fleet recovers and finishes the trace with bitwise-identical streams:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+        --stream --trace fleet-poweroff --replicas 2 --router immune \
+        --journal /tmp/serve.wal --snapshot-dir /tmp/serve-snap \
+        --snapshot-every 4 [--sync-every 2]
 """
 from __future__ import annotations
 
@@ -94,16 +107,19 @@ def main():
                          "compiled on TPU, pallas_interpret = runs anywhere)")
     ap.add_argument("--trace", default="bursty",
                     choices=("bursty", "shared-prefix", "returning-tenant",
-                             "contention", "fleet", "fleet-faults"),
+                             "contention", "fleet", "fleet-faults",
+                             "fleet-poweroff"),
                     help="synthetic arrival trace: bursty heterogeneous, "
                          "system-prompt traffic (exercises prefix sharing), "
                          "returning-tenant bursts with drain gaps (exercises "
                          "the pinned prefix cache), page-pool contention "
                          "(exercises preemptive admission), multi-tenant "
                          "fleet traffic with hot-replica skew (exercises the "
-                         "placement router), or the fleet trace fault-laced "
+                         "placement router), the fleet trace fault-laced "
                          "with an auto-sized crash+rejoin plan (exercises "
-                         "failover; needs --replicas > 1)")
+                         "failover; needs --replicas > 1), or the fleet "
+                         "trace with an auto-sized full-fleet poweroff + "
+                         "restart (exercises journal + snapshot recovery)")
     ap.add_argument("--replicas", type=int, default=1,
                     help=">1: serve through the multi-replica placement "
                          "router (serve.router) — N engine replicas, one "
@@ -114,6 +130,21 @@ def main():
                          "slow@4+10:r0:x3' (serve.faults plan grammar); the "
                          "router detects and fails over, the injector never "
                          "announces")
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="write-ahead request journal file (serve.durability):"
+                         " every accepted request, emitted token and terminal "
+                         "outcome is logged, fsync'd per --sync-every ticks; "
+                         "required (auto-defaulted for --trace fleet-poweroff)"
+                         " when the fault plan contains poweroff@tick")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="warm-snapshot directory: pinned prefix cache (with "
+                         "K/V), immune memories and router books, written "
+                         "atomically every --snapshot-every ticks")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="warm-snapshot cadence in fleet ticks (0 = off)")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="journal group-commit cadence: one fsync per this "
+                         "many ticks (submits always fsync immediately)")
     ap.add_argument("--router", default="immune",
                     choices=("immune", "rr", "jsq"),
                     help="placement policy over the replicas: immune "
@@ -202,7 +233,7 @@ def main():
                 cfg, num_requests=args.requests,
                 hog_prompt=2 * args.page_size,
                 hog_tokens=args.steps, **sampling)
-        elif args.trace in ("fleet", "fleet-faults"):
+        elif args.trace in ("fleet", "fleet-faults", "fleet-poweroff"):
             fleet_kw = dict(
                 num_requests=args.requests,
                 prefix_len=max(args.prompt_len, 2 * args.page_size),
@@ -214,6 +245,13 @@ def main():
                 trace, auto_spec = traces.failover_fleet_trace(
                     cfg, replicas=args.replicas,
                     crash_replica=args.replicas - 1, **fleet_kw)
+                args.faults = args.faults or auto_spec
+            elif args.trace == "fleet-poweroff":
+                if args.replicas < 2:
+                    ap.error("--trace fleet-poweroff needs --replicas > 1 "
+                             "(the poweroff fault fires through the router's "
+                             "fault injector)")
+                trace, auto_spec = traces.poweroff_fleet_trace(cfg, **fleet_kw)
                 args.faults = args.faults or auto_spec
             else:
                 trace = traces.fleet_trace(cfg, **fleet_kw)
@@ -230,22 +268,53 @@ def main():
                      "replicas behind the router)")
         if args.replicas > 1:
             from repro.serve import router as rt_mod
-            injector = None
+            poweroff_plan = bool(args.faults) and "poweroff" in args.faults
+            if poweroff_plan and not args.journal:
+                import os
+                import tempfile
+                args.journal = os.path.join(
+                    tempfile.mkdtemp(prefix="serve_wal_"), "journal.wal")
+                print(f"poweroff plan with no --journal: journaling to "
+                      f"{args.journal}")
+
+            def make_router():
+                injector = None
+                if args.faults:
+                    from repro.serve.faults import FaultInjector, FaultPlan
+                    injector = FaultInjector(
+                        FaultPlan.parse(args.faults),
+                        engine_factory=lambda: eng_mod.Engine(
+                            params, cfg, ecfg, router_bias=bias))
+                fleet = [eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
+                         for _ in range(args.replicas)]
+                return rt_mod.Router(fleet,
+                                     rt_mod.RouterConfig(policy=args.router),
+                                     injector=injector)
+
             if args.faults:
-                from repro.serve.faults import FaultInjector, FaultPlan
-                injector = FaultInjector(
-                    FaultPlan.parse(args.faults),
-                    engine_factory=lambda: eng_mod.Engine(
-                        params, cfg, ecfg, router_bias=bias))
                 print(f"fault plan: {args.faults}")
-            fleet = [eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
-                     for _ in range(args.replicas)]
-            router = rt_mod.Router(fleet,
-                                   rt_mod.RouterConfig(policy=args.router),
-                                   injector=injector)
             with mesh:
                 t0 = time.perf_counter()
-                stats = router.run(trace, max_ticks=50 * args.requests)
+                if poweroff_plan:
+                    from repro.serve import durability
+                    router, stats = durability.run_durable(
+                        make_router, trace, args.journal,
+                        snapshot_dir=args.snapshot_dir,
+                        snapshot_every=args.snapshot_every,
+                        sync_every=args.sync_every,
+                        max_ticks=50 * args.requests)
+                else:
+                    router = make_router()
+                    if args.journal:
+                        from repro.serve import durability
+                        router.attach_durability(
+                            durability.RequestJournal(
+                                args.journal, sync_every=args.sync_every),
+                            snapshot_dir=args.snapshot_dir,
+                            snapshot_every=args.snapshot_every)
+                    stats = router.run(trace, max_ticks=50 * args.requests)
+                    if router.journal is not None:
+                        router.journal.close()
             dt = time.perf_counter() - t0
             print(f"[{args.router} x {args.replicas}] {stats['completed']} "
                   f"completed / {stats['shed']} shed / {stats['rejected']} "
@@ -276,6 +345,17 @@ def main():
                       f"({stats['retries']} retries, {stats['failed']} "
                       f"failed), recovery {stats['recovery_ticks']} ticks, "
                       f"health {stats['health']}")
+            if args.journal:
+                d = stats["durability"]
+                j = d["journal"] or {}
+                print(f"  durability: {stats.get('restarts', 0)} restarts | "
+                      f"journal {j.get('records', 0)} records / "
+                      f"{j.get('syncs', 0)} fsyncs "
+                      f"(group commit {j.get('sync_every', 1)}) | "
+                      f"recovered {d['recovered_finished']} finished + "
+                      f"{d['recovered_open']} replayed | "
+                      f"{d['recovered_pinned_pages']} pinned pages warm | "
+                      f"{d['snapshots']} snapshots")
             return
         eng = eng_mod.Engine(params, cfg, ecfg, router_bias=bias)
         with mesh:

@@ -122,7 +122,8 @@ class ServeRequest:
     #                                                 (capture_logits only)
     out_logprobs: list = field(default_factory=list)  # per-token chosen-token
     #                                                   logprob (params.logprobs)
-    finish_reason: Optional[str] = None    # "stop" | "length" | "failed"
+    finish_reason: Optional[str] = None    # "stop" | "length" | "rejected" |
+    #                                        "shed" | "failed" | "corrupted"
     admit_tick: int = -1
     finish_tick: int = -1
     slot: int = -1
@@ -178,7 +179,9 @@ class RequestOutput:
     set ``finished`` with a ``finish_reason`` ("stop" | "length" on normal
     retirement, "rejected" | "shed" when admission refused the request,
     "failed" when a fleet router exhausted the request's crash-retry budget —
-    see ``serve.router``) and
+    see ``serve.router`` — and "corrupted" when the silent-corruption guard
+    caught non-finite decode logits on the request's lane and retired it
+    rather than stream garbage) and
     the latency accounting — ``latency_ticks`` in engine ticks,
     ``wall_latency_s`` in wall-clock seconds, ``deadline_met`` against the
     request's own deadline (or the engine budget). A request still queued or

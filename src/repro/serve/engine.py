@@ -316,12 +316,19 @@ def _decode_tick(params, cfg: ModelConfig, pool, last, active, table,
         else greedy(logits)                          # (S, 1)
     pos = jnp.where(active, new_pool["pos"], pool["pos"])
     last = jnp.where(active[:, None], nxt, last)
+    # silent-corruption guard: a NaN/Inf anywhere in a lane's logits means its
+    # KV or activations are poisoned (bad page, bit flip, kernel bug) and the
+    # sampled token is garbage — flag the lane so the host retires it as
+    # "corrupted" instead of streaming the garbage on. A (S,)-bool reduction
+    # over the logits already resident is noise next to the matmul that
+    # produced them, so the guard is always on.
+    ok = jnp.isfinite(logits).all(axis=(1, 2))
     # the (S, 1, V) logits are a jit output only when the parity oracle wants
     # them — otherwise returning them would materialize a vocab-sized buffer
     # per decoded token just for the host to drop. Chosen-token logprobs ride
     # in-step on the logits lane already resident (no extra vocab pass on the
     # host side) when any resident request asked for them.
-    return (nxt, last, {"layers": new_pool["layers"], "pos": pos},
+    return (nxt, last, {"layers": new_pool["layers"], "pos": pos}, ok,
             logits if return_logits else None,
             model.chosen_logprob(logits, nxt) if return_logprobs else None)
 
@@ -413,6 +420,34 @@ class ImmuneAdmission:
         self._blown[:] = 0.0
         self._ok[:] = 0.0
 
+    # -- durability ----------------------------------------------------------
+    def export_state(self) -> dict:
+        """JSON-able snapshot of the learned immune state: the per-class
+        cost-memory EMA, the regulator populations, the anergy levels, and
+        the tick-local SLO counters. Configuration (decays, thresholds) is
+        NOT exported — it comes from the EngineConfig at restore."""
+        def ls(tree):
+            return [np.asarray(x).tolist() for x in jax.tree.leaves(tree)]
+        return {"memory": np.asarray(self.memory.value).tolist(),
+                "regulator": ls(self.reg_state),
+                "anergy": ls(self.anergy),
+                "blown": self._blown.tolist(), "ok": self._ok.tolist()}
+
+    def import_state(self, d: dict) -> None:
+        """Restore :meth:`export_state` output into this controller — the
+        memory resumes warm instead of re-learning every class from zero."""
+        def put(tree, vals):
+            leaves, treedef = jax.tree.flatten(tree)
+            return jax.tree.unflatten(treedef, [
+                jnp.asarray(np.asarray(v, np.asarray(l).dtype).reshape(
+                    np.shape(l))) for l, v in zip(leaves, vals)])
+        self.memory = self.memory._replace(
+            value=jnp.asarray(d["memory"], self.memory.value.dtype))
+        self.reg_state = put(self.reg_state, d["regulator"])
+        self.anergy = put(self.anergy, d["anergy"])
+        self._blown = np.asarray(d["blown"], np.float32)
+        self._ok = np.asarray(d["ok"], np.float32)
+
 
 # ---------------------------------------------------------------------------
 # the engine
@@ -491,11 +526,13 @@ class Engine:
         self.completed: list[ServeRequest] = []
         self.shed: list[ServeRequest] = []    # admission-refused (anergic class)
         self.rejected: list[ServeRequest] = []  # can never fit a slot (submit)
+        self.corrupted: list[ServeRequest] = []  # non-finite decode logits
         # refusal high-water marks for stream(): persistent, so refusals that
         # predate the stream are still reported (once) and a second stream()
         # call does not re-report earlier ones
         self._reported_rejected = 0
         self._reported_shed = 0
+        self._reported_corrupted = 0
         self.admission = ImmuneAdmission(ecfg) if ecfg.policy == "immune" \
             else None
         self.mid_stream_admissions = 0     # admissions while other slots decode
@@ -531,8 +568,9 @@ class Engine:
         need = len(req.tokens) + self.cfg.frontend_tokens + req.max_new_tokens
         if need > self.ecfg.max_cache \
                 or self._need_pages(req) > self.alloc.usable_pages:
-            self.rejected.append(req)       # could never be admitted: don't
-            return                          # let it camp in the queue forever
+            req.finish_reason = "rejected"  # terminal on the request itself,
+            self.rejected.append(req)       # so a journal scan sees the same
+            return                          # reason the stream reports
         self.queue.append(req)
 
     # -- sampling lanes ------------------------------------------------------
@@ -844,6 +882,7 @@ class Engine:
         # and block the IL-2 revival it is waiting for)
         for req in [r for r in self.queue if not adm.admissible(r.rclass)]:
             self.queue.remove(req)
+            req.finish_reason = "shed"
             self.shed.append(req)
         if adm.throttled():                             # delayed suppression
             return
@@ -1043,6 +1082,31 @@ class Engine:
                     cost=float(len(req.out_tokens) + req.replayed_tokens),
                     latency=lat, budget=bar)
 
+    def _retire_corrupted(self, slot: int) -> None:
+        """Retire a lane whose decode logits came back non-finite: the
+        request terminates with ``finish_reason="corrupted"`` (surfaced via
+        the stream, counted against goodput) and the slot's pages return to
+        the pool — streaming the garbage token, or letting the poisoned KV
+        keep feeding the shared sampling step, would be worse than losing
+        the lane. No cost observation: the corruption is a hardware/kernel
+        event, not a workload signal the immune memory should learn."""
+        req = self.slots[slot]
+        req.finish_reason = "corrupted"
+        req.finish_tick = self.tick
+        req.finish_time = time.perf_counter()
+        self.corrupted.append(req)
+        self.slots[slot] = None
+        self.pool, self.active = _release(self.pool, self.active,
+                                          jnp.asarray(slot), self.cfg)
+        self.alloc.release(slot)
+        self.active_host[slot] = False
+        self.pos_host[slot] = 0
+        self.emitted[slot] = 0
+        self.samp_temp[slot] = 0.0
+        self.samp_topk[slot] = 0
+        self.samp_topp[slot] = 1.0
+        self._spec_cache = None
+
     # -- one tick ------------------------------------------------------------
     def step(self):
         """One engine tick: admit into free slots, land a prefill chunk, decode
@@ -1074,7 +1138,7 @@ class Engine:
             want_lp = any(r is not None and r.params.logprobs
                           for r in self.slots)
             spec = self._pool_spec() if do_sample else self._null_spec
-            nxt, self.last, self.pool, logits, lps = _decode_tick(
+            nxt, self.last, self.pool, ok, logits, lps = _decode_tick(
                 self.params, self.cfg_decode, self.pool, self.last, self.active,
                 jnp.asarray(self.alloc.table()), self.router_bias, self.frames,
                 spec, counts, attn_backend=self.ecfg.attn_backend,
@@ -1082,11 +1146,16 @@ class Engine:
                 return_logits=self.ecfg.capture_logits,
                 return_logprobs=want_lp)
             nxt_host = np.asarray(nxt[:, 0])
+            ok_host = np.asarray(ok)
             lg_host = np.asarray(logits[:, -1]) if logits is not None else None
             lp_host = np.asarray(lps[:, 0]) if lps is not None else None
+            bad: list[int] = []
             for slot, req in enumerate(self.slots):
                 if req is None or not self.active_host[slot] \
                         or self._finished(req):
+                    continue
+                if not ok_host[slot]:
+                    bad.append(slot)    # poisoned lane: token is garbage
                     continue
                 if self.emitted[slot] >= len(req.out_tokens):
                     req.out_tokens.append(int(nxt_host[slot]))
@@ -1099,6 +1168,8 @@ class Engine:
                     req.replayed_tokens += 1
                 self.emitted[slot] += 1
             self.pos_host[self.active_host] += 1
+            for slot in bad:
+                self._retire_corrupted(slot)
         self._retire()
         if self.admission is not None:
             demand = np.zeros(self.ecfg.num_classes, np.float64)
@@ -1177,6 +1248,9 @@ class Engine:
             for req in self.shed[self._reported_shed:]:  # anergy refusals
                 yield self._output_for(req, t, [], True, reason="shed")
             self._reported_shed = len(self.shed)
+            for req in self.corrupted[self._reported_corrupted:]:
+                yield self._output_for(req, t, [], True, reason="corrupted")
+            self._reported_corrupted = len(self.corrupted)
             live = [r for r in self.slots if r is not None]
             for req in live + self.completed[ndone:]:
                 n = len(req.out_tokens)
@@ -1210,7 +1284,8 @@ class Engine:
         # (requests still queued, in-flight, or never submitted) cannot
         # flatter itself by under-counting demand
         demand = (len(self.completed) + len(self.shed) + len(self.rejected)
-                  + len(self.queue) + in_flight + self.unsubmitted)
+                  + len(self.corrupted) + len(self.queue) + in_flight
+                  + self.unsubmitted)
         # no completions -> the tail is unbounded, not "best ever"
         empty = float("inf")
         return {
@@ -1219,6 +1294,7 @@ class Engine:
             "completed": len(self.completed),
             "shed": len(self.shed),
             "rejected": len(self.rejected),
+            "corrupted": len(self.corrupted),
             "unserved": len(self.queue) + in_flight + self.unsubmitted,
             "tokens": toks,
             "throughput": toks / max(self.tick, 1),
@@ -1333,3 +1409,79 @@ class Engine:
         for slot in range(self.ecfg.num_slots):
             self.alloc.release(slot)      # keep the (dead) books consistent
         return lost
+
+    # -- durability: warm-state snapshot export / import ---------------------
+    def export_warm_state(self) -> tuple[dict, list]:
+        """Snapshot this engine's *learned* state: the indexed prefix forest
+        (pinned cache entries and live prompt chains alike — immutable once
+        registered; token keys + the pages' actual K/V, gathered from the
+        device pool) and the immune memories (per-class cost EMAs, anergy,
+        regulator, pin-value EMAs). Returns ``(meta, kv)`` — a JSON-able dict plus the
+        host K/V arrays, page-major then leaf-major, ``meta["kv_per_page"]``
+        arrays per page. In-flight request state is deliberately NOT here:
+        the write-ahead journal owns requests; the snapshot owns what was
+        *learned* from them. Reads device state but never mutates it, so a
+        snapshot cadence never stalls decode."""
+        forest = self.alloc.export_pinned()
+        kv: list[np.ndarray] = []
+        per = 0
+        for e in forest:
+            page = e.pop("page")
+            arrs = self._gather_page_kv(page)
+            per = len(arrs)
+            kv.extend(arrs)
+        meta = {
+            "forest": forest,
+            "kv_per_page": per,
+            "pin_memory": self.alloc.pin_memory_state().tolist(),
+            "admission": (self.admission.export_state()
+                          if self.admission is not None else None),
+        }
+        return meta, kv
+
+    def import_warm_state(self, meta: dict, kv: list) -> int:
+        """Rebuild the warm state exported by :meth:`export_warm_state` into
+        this (fresh) engine: pinned chains re-index under newly allocated
+        pages, their saved K/V scatters back into the device pool (zero
+        recompute — a returning tenant adopts them exactly as before the
+        power loss), and the immune memories resume their EMAs. Returns the
+        number of pinned pages restored."""
+        if meta.get("pin_memory") is not None:
+            self.alloc.set_pin_memory_state(meta["pin_memory"])
+        if self.admission is not None and meta.get("admission"):
+            self.admission.import_state(meta["admission"])
+        placed = self.alloc.import_pinned(meta.get("forest") or [])
+        per = int(meta.get("kv_per_page") or 0)
+        if not placed or not per:
+            return len(placed)
+        pages = jnp.asarray([p for _, p in placed])
+        stacks = [jnp.asarray(np.stack([kv[i * per + j] for i, _ in placed],
+                                       axis=1))
+                  for j in range(per)]           # (reps, n, page, Hkv, D)
+        lane = iter(range(per))
+
+        def scatter(kind, leaf):
+            if kind in ("attn", "moe"):
+                jk, jv = next(lane), next(lane)
+                return {"k": leaf["k"].at[:, pages].set(stacks[jk]),
+                        "v": leaf["v"].at[:, pages].set(stacks[jv])}
+            return leaf
+
+        self.pool = {"layers": transformer.map_block_caches(
+            self.cfg, scatter, self.pool["layers"]), "pos": self.pool["pos"]}
+        return len(placed)
+
+    def _gather_page_kv(self, page: int) -> list:
+        """Host copies of one physical page's K/V across every paged layer
+        (k then v per layer, segment order) — the snapshot payload for one
+        pinned page."""
+        out: list[np.ndarray] = []
+
+        def gather(kind, leaf):
+            if kind in ("attn", "moe"):
+                out.append(np.asarray(leaf["k"][:, page]))
+                out.append(np.asarray(leaf["v"][:, page]))
+            return leaf
+
+        transformer.map_block_caches(self.cfg, gather, self.pool["layers"])
+        return out

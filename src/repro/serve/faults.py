@@ -36,13 +36,35 @@ Fault kinds (``FaultEvent.kind``):
     immune state, built by the injector's ``engine_factory``. The router
     re-admits it at full health; prefix-affinity traffic rewarms its cache.
 
+Beyond the per-replica kinds, two *fleet-wide* kinds script a full power
+loss (``FLEET_FAULT_KINDS``):
+
+  * ``"poweroff"`` — fail-stop of the ENTIRE fleet, router included: every
+    replica, every in-flight request, every byte of device state is gone at
+    once. The injector signals it by raising :class:`PowerLoss`; nothing
+    in-process survives to "handle" it — recovery happens out-of-band from
+    the write-ahead journal + warm snapshot (``serve.durability.run_durable``
+    catches the exception, truncates the journal to its last fsync'd byte,
+    and rebuilds a fresh fleet via ``Router.recover``).
+  * ``"restart"`` — the tick at which the rebuilt fleet resumes serving.
+    Optional (a plan may power off forever); when present it must follow a
+    ``poweroff``, validated exactly like crash/rejoin pairing. On the
+    post-recovery injector the event is a no-op marker: the recovery it
+    names has already happened by the time the tick is reached.
+
+Fleet-wide events take no ``:rN`` field (``replica`` is the ``-1``
+sentinel). Window state for per-replica faults (slow/stall/pressure) is
+in-RAM and dies with the process: a window straddling a poweroff does not
+resume after recovery — real machines forget their throttling too.
+
 Plan spec grammar (the ``launch/serve --faults`` format), whitespace- or
 comma-separated events::
 
     kind@tick[+duration]:rREPLICA[:xFACTOR][:pPAGES]
+    poweroff@tick  restart@tick
 
     crash@40:r1  rejoin@90:r1  slow@10+30:r0:x3  stall@15+4:r2
-    pressure@20+10:r0:p4
+    pressure@20+10:r0:p4  poweroff@30 restart@34
 """
 from __future__ import annotations
 
@@ -50,6 +72,23 @@ from dataclasses import dataclass
 from typing import Callable, List, Optional
 
 FAULT_KINDS = ("crash", "slow", "stall", "pressure", "rejoin")
+FLEET_FAULT_KINDS = ("poweroff", "restart")
+_ALL_KINDS = FAULT_KINDS + FLEET_FAULT_KINDS
+
+
+class PowerLoss(Exception):
+    """Raised by :meth:`FaultInjector.begin_tick` when a ``poweroff`` event
+    fires: the whole fleet fail-stops at ``tick``. ``restart_tick`` is the
+    plan's next scheduled ``restart`` (None = off forever). In-process
+    state must be treated as lost; only the journal's fsync'd prefix and
+    the last completed snapshot survive."""
+
+    def __init__(self, tick: int, restart_tick: Optional[int] = None):
+        super().__init__(f"fleet power loss at tick {tick}"
+                         + (f", restart at {restart_tick}"
+                            if restart_tick is not None else ""))
+        self.tick = tick
+        self.restart_tick = restart_tick
 
 
 @dataclass(frozen=True)
@@ -61,15 +100,22 @@ class FaultEvent:
 
     tick: int
     kind: str
-    replica: int
+    replica: int = -1          # -1 = fleet-wide (poweroff / restart)
     duration: int = 0
     factor: int = 2
     pages: int = 0
 
     def __post_init__(self):
-        if self.kind not in FAULT_KINDS:
+        if self.kind not in _ALL_KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}; "
-                             f"expected one of {FAULT_KINDS}")
+                             f"expected one of {_ALL_KINDS}")
+        if self.kind in FLEET_FAULT_KINDS:
+            if self.tick < 0:
+                raise ValueError(f"fault tick must be >= 0: {self}")
+            if self.replica != -1:
+                raise ValueError(f"{self.kind} is fleet-wide and takes no "
+                                 f"replica: {self}")
+            return
         if self.tick < 0 or self.replica < 0:
             raise ValueError(f"fault tick/replica must be >= 0: {self}")
         if self.kind in ("slow", "stall", "pressure") and self.duration < 1:
@@ -87,8 +133,9 @@ class FaultPlan:
 
     def __init__(self, events: List[FaultEvent]):
         self.events = sorted(events, key=lambda e: (e.tick, e.replica,
-                                                    FAULT_KINDS.index(e.kind)))
+                                                    _ALL_KINDS.index(e.kind)))
         down: set = set()
+        fleet_down = False
         for e in self.events:
             if e.kind == "crash":
                 if e.replica in down:
@@ -100,6 +147,16 @@ class FaultPlan:
                     raise ValueError(f"rejoin of r{e.replica} at tick "
                                      f"{e.tick} without a prior crash")
                 down.discard(e.replica)
+            elif e.kind == "poweroff":
+                if fleet_down:
+                    raise ValueError(f"fleet powered off twice without a "
+                                     f"restart (tick {e.tick})")
+                fleet_down = True
+            elif e.kind == "restart":
+                if not fleet_down:
+                    raise ValueError(f"restart at tick {e.tick} without a "
+                                     f"prior poweroff")
+                fleet_down = False
 
     def __iter__(self):
         return iter(self.events)
@@ -123,6 +180,12 @@ class FaultPlan:
                 head, _, rest = tok.partition(":")
                 kind, _, when = head.partition("@")
                 tick, _, dur = when.partition("+")
+                if kind in FLEET_FAULT_KINDS:
+                    if rest or dur:
+                        raise ValueError(f"{kind} is fleet-wide: bare "
+                                         f"{kind}@tick only")
+                    events.append(FaultEvent(tick=int(tick), kind=kind))
+                    continue
                 fields = rest.split(":")
                 if not fields or not fields[0].startswith("r"):
                     raise ValueError("missing :rN replica field")
@@ -154,6 +217,25 @@ class FaultPlan:
                                      replica=replica))
         return cls(events)
 
+    @classmethod
+    def poweroff_at(cls, at: int,
+                    restart_at: Optional[int] = None) -> "FaultPlan":
+        """The durability benchmark's canonical plan: the whole fleet
+        fail-stops at ``at``, optionally resuming (post-recovery) at
+        ``restart_at``."""
+        events = [FaultEvent(tick=at, kind="poweroff")]
+        if restart_at is not None:
+            events.append(FaultEvent(tick=restart_at, kind="restart"))
+        return cls(events)
+
+    def restart_after(self, tick: int) -> Optional[int]:
+        """Tick of the first ``restart`` event strictly after ``tick``
+        (None if the plan stays dark)."""
+        for e in self.events:
+            if e.kind == "restart" and e.tick > tick:
+                return e.tick
+        return None
+
 
 class FaultInjector:
     """Applies a :class:`FaultPlan` to a router fleet, one call per fleet
@@ -181,6 +263,7 @@ class FaultInjector:
         self.slowdowns = 0
         self.pressure_shocks = 0
         self.pages_seized = 0
+        self.poweroffs = 0
 
     def begin_tick(self, router) -> None:
         """Fire this tick's events and expire elapsed windows. Called by
@@ -198,6 +281,14 @@ class FaultInjector:
             if t >= until:
                 del self._slow[i]
         for e in self.plan.events_at(t):
+            if e.kind == "poweroff":
+                # the lights go out mid-tick: no cleanup, no goodbye — the
+                # caller's process state is dead and recovery is out-of-band
+                # (journal + snapshot via serve.durability)
+                self.poweroffs += 1
+                raise PowerLoss(t, self.plan.restart_after(t))
+            if e.kind == "restart":
+                continue       # recovery already happened before this tick
             if e.replica >= len(router.engines):
                 raise ValueError(f"fault targets replica r{e.replica} but "
                                  f"the fleet has {len(router.engines)}")
@@ -240,4 +331,5 @@ class FaultInjector:
             "slowdowns": self.slowdowns,
             "pressure_shocks": self.pressure_shocks,
             "pages_seized": self.pages_seized,
+            "poweroffs": self.poweroffs,
         }

@@ -219,6 +219,97 @@ class PageAllocator:
         tenant's prompt chains warm."""
         return sorted(self._page_key[p][1] for p in self._pinned)
 
+    # -- durability: pinned-forest export / import ---------------------------
+    def export_pinned(self) -> list[dict]:
+        """Serialize the indexed prefix forest — pinned cache entries *and*
+        live (refcounted) chains — as a parent-first list.
+
+        Each entry carries the page's token key, the index of its parent
+        *within the returned list* (-1 = chain root), its class tag and LRU
+        stamp, and the physical ``page`` id so the caller can gather the
+        page's K/V from the device pool. Live chains are exportable because
+        indexed pages are immutable: a registered prompt page is never
+        written again (decode writes land in later pages; a CoW fork
+        replaces the page in the *owner's* chain, never the shared page), so
+        its K/V is as stable as a pinned page's. On import the whole forest
+        lands as pinned cache entries — replayed requests adopt them instead
+        of re-prefilling, which is what makes a warm restart cheaper than a
+        cold one even when the crash hit mid-burst with every chain
+        refcounted."""
+        out: list[dict] = []
+        pos: dict[int, int] = {}
+        node_of = {p: self._index[k][0] for p, k in self._page_key.items()}
+
+        def visit(p: int, parent_idx: int) -> None:
+            pos[p] = len(out)
+            out.append({"tokens": list(self._page_key[p][1]),
+                        "parent": parent_idx,
+                        "rclass": int(self._page_class[p]),
+                        "last_use": int(self._last_use[p]),
+                        "page": int(p)})
+            for kid in sorted(self._node_kids.get(node_of[p], ())):
+                visit(kid, pos[p])
+
+        for root in sorted(p for p in self._page_key
+                           if self._page_key[p][0] == 0):
+            visit(root, -1)
+        return out
+
+    def import_pinned(self, entries: list) -> list[tuple[int, int]]:
+        """Rebuild pinned chains from :meth:`export_pinned` output into this
+        (typically fresh) allocator: pages come off the free list, are
+        indexed, and pinned with their saved class tags and LRU stamps.
+        Returns ``(entry_index, new_page)`` pairs so the caller can scatter
+        each entry's saved K/V into its new physical page. An entry whose
+        parent was not placed (budget/pool exhausted) is skipped with its
+        whole subtree — imported chains are always reachable from the root."""
+        placed: list[tuple[int, int]] = []
+        if not self.share_prefix or self.pin_pages <= 0:
+            return placed
+        node_of: dict[int, int] = {}
+        page_of: dict[int, int] = {}
+        for i, e in enumerate(entries):
+            if len(self._pinned) >= self.pin_pages or not self._free:
+                break
+            parent_idx = int(e["parent"])
+            if parent_idx >= 0 and parent_idx not in page_of:
+                continue                 # orphaned subtree: skip
+            parent = 0 if parent_idx < 0 else node_of[parent_idx]
+            pt = tuple(int(t) for t in e["tokens"])
+            hit = self._index.get((parent, pt))
+            if hit is not None:          # already resident (warm import)
+                node_of[i], page_of[i] = hit
+                continue
+            page = self._free.pop()
+            node = self._next_node
+            self._next_node += 1
+            self._index[(parent, pt)] = (node, page)
+            self._children.setdefault((parent, pt[0]), set()).add(page)
+            self._node_kids.setdefault(parent, set()).add(page)
+            self._page_key[page] = (parent, pt)
+            self._page_class[page] = self._rc(int(e.get("rclass", 0)))
+            self._last_use[page] = int(e.get("last_use", 0))
+            self._clock = max(self._clock, int(e.get("last_use", 0)))
+            self._pinned.add(page)
+            self.pins += 1
+            node_of[i], page_of[i] = node, page
+            placed.append((i, page))
+        self.high_water = max(self.high_water, self.pages_in_use)
+        return placed
+
+    def pin_memory_state(self) -> np.ndarray:
+        """Host copy of the per-class remembered-prefix-value EMA (the
+        immune-memory weights in the eviction score) — snapshot payload."""
+        return np.asarray(self.pin_memory.value)
+
+    def set_pin_memory_state(self, values) -> None:
+        """Restore the per-class prefix-value EMA saved by
+        :meth:`pin_memory_state` (decay stays as configured)."""
+        import jax.numpy as jnp
+        self.pin_memory = self.pin_memory._replace(
+            value=jnp.asarray(values, self.pin_memory.value.dtype))
+        self._class_w = np.asarray(self.pin_memory.value)
+
     # -- prefix index --------------------------------------------------------
     @staticmethod
     def _page_tokens(tokens, i: int, page_size: int) -> tuple:

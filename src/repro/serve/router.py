@@ -86,6 +86,20 @@ per-request tokens are bitwise identical across policies, replica counts
 *and fault plans* (the engine-vs-oneshot parity oracle lifted one level;
 pinned by the placement-invariance tests and the ``routing_parity_exact`` /
 ``failover_parity_exact`` benchmark bits).
+
+**Durability** (``attach_durability`` / ``recover``): with a
+``serve.durability.RequestJournal`` attached, ``submit`` write-ahead-logs
+every accepted request (fsync'd before placement — an acknowledged rid is
+never lost) and the end of each ``step`` journals the tick's emitted tokens
+and terminal outcomes under one group commit, plus a warm snapshot of the
+fleet's *learned* state (pinned prefix forests + K/V, immune memories,
+health/retry books) every ``snapshot_every`` ticks. After a full-fleet power
+loss, :meth:`Router.recover` on a fresh fleet replays the journal's durable
+prefix — finished rids are reconstructed, deduplicated and **not** re-run;
+unfinished rids re-enter through the prefill-recompute + token-replay path,
+bitwise identical to an uninterrupted run — and imports the snapshot so the
+caches and memories resume warm. See ``serve.durability`` for the formats
+and ``run_durable`` for the crash-restart driver.
 """
 from __future__ import annotations
 
@@ -95,7 +109,8 @@ from typing import List, NamedTuple, Optional
 
 import numpy as np
 
-from .api import ServeRequest
+from . import durability as _dur
+from .api import SamplingParams, ServeRequest
 from .engine import Engine
 
 POLICIES = ("immune", "rr", "jsq")
@@ -171,6 +186,19 @@ class Router:
         self.death_ticks: list = []      # when each death was declared
         self.replaced_rids: set = set()  # requests ever evacuated by failover
         self.total_retries = 0           # re-placements actually performed
+        # durability (attach_durability / recover)
+        self.journal = None              # serve.durability.RequestJournal
+        self.snapshot_dir: Optional[str] = None
+        self.snapshot_every = 0
+        self._journal_counts: dict = {}  # rid -> out_tokens already journaled
+        self._fin_logged: set = set()    # rids with a terminal record journaled
+        self.recovered: list = []        # finished requests reconstructed from
+        #                                  the journal at recover() — replayed
+        #                                  into the books, never re-run
+        self.recovered_open = 0          # unfinished rids re-entered for replay
+        self.recovered_pages = 0         # pinned pages restored warm
+        self.dedup_drops = 0             # submits dropped: rid already terminal
+        self.snapshots = 0               # warm snapshots written this run
 
     # -- placement -----------------------------------------------------------
     def _load(self, eng: Engine) -> float:
@@ -318,7 +346,18 @@ class Router:
     # -- driving -------------------------------------------------------------
     def submit(self, req: ServeRequest):
         """Queue a request with the router; it is placed on a replica at the
-        next :meth:`step`."""
+        next :meth:`step`. With a journal attached the request is
+        write-ahead-logged (and fsync'd) before it can be placed, and a rid
+        the journal already holds a terminal record for is dropped — the
+        exactly-once half of the recovery contract (a re-driven trace can
+        never duplicate a completion)."""
+        if self.journal is not None:
+            if req.rid in self._fin_logged:
+                self.dedup_drops += 1
+                return
+            if req.rid not in self._journal_counts:
+                self.journal.log_submit(req)
+                self._journal_counts[req.rid] = len(req.out_tokens)
         self.queue.append(req)
         self.submitted += 1
 
@@ -351,6 +390,8 @@ class Router:
                 self.last_step[i] = self.tick
         self._check_health()
         self._degrade()
+        if self.journal is not None:
+            self._journal_tick()
         self.tick += 1
 
     def _drained(self) -> bool:
@@ -375,14 +416,161 @@ class Router:
             self.step()
         return self.stats()
 
+    # -- durability ----------------------------------------------------------
+    def attach_durability(self, journal, snapshot_dir: Optional[str] = None,
+                          snapshot_every: int = 0) -> None:
+        """Arm the write-ahead journal (and, optionally, a warm-snapshot
+        cadence) on this router. Call before driving; ``run_durable`` does."""
+        self.journal = journal
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = int(snapshot_every)
+
+    def _terminal_requests(self):
+        """Every request the fleet has retired with a terminal reason —
+        completions, sheds, rejections, corruptions across live + fallen
+        replicas, plus the router's own retry-exhausted failures."""
+        for eng in self.engines + self.fallen:
+            yield from eng.completed
+            yield from eng.shed
+            yield from eng.rejected
+            yield from eng.corrupted
+        yield from self.failed
+
+    def _journal_emits(self, req: ServeRequest) -> None:
+        n = self._journal_counts.get(req.rid, 0)
+        for tok in req.out_tokens[n:]:
+            self.journal.log_emit(req.rid, int(tok))
+        if len(req.out_tokens) > n:
+            self._journal_counts[req.rid] = len(req.out_tokens)
+
+    def _journal_tick(self) -> None:
+        """End-of-tick journal pass: append this tick's emitted tokens (the
+        delta past each rid's journaled count) and any new terminal records,
+        then group-commit; every ``snapshot_every`` ticks, also write the
+        warm snapshot. Losing an unsynced emit costs replay recompute, never
+        correctness — decode re-derives the identical token."""
+        for eng in self.engines:
+            for req in eng.slots:
+                if req is not None and req.rid in self._journal_counts:
+                    self._journal_emits(req)
+        for req in self._terminal_requests():
+            if req.rid in self._fin_logged \
+                    or req.rid not in self._journal_counts:
+                continue
+            self._journal_emits(req)
+            self.journal.log_finish(req.rid, req.finish_reason or "stop",
+                                    req.finish_tick)
+            self._fin_logged.add(req.rid)
+        self.journal.commit(self.tick)
+        if (self.snapshot_dir and self.snapshot_every
+                and self.tick and self.tick % self.snapshot_every == 0):
+            self._save_snapshot()
+
+    def _save_snapshot(self) -> None:
+        """Snapshot the fleet's learned state + the router's failover books.
+        Request state is deliberately absent (the journal owns it); the
+        per-rid retry counts ride along so a recovered request keeps its
+        spent budget. Export only reads device state — no decode stall."""
+        metas, kv = [], []
+        for eng in self.engines:
+            m, k = eng.export_warm_state()
+            metas.append(m)
+            kv.extend(k)
+        open_reqs = [r for eng in self.engines
+                     for r in list(eng.queue)
+                     + [j.req for j in eng.jobs]
+                     + [s for s in eng.slots if s is not None]] \
+            + list(self.queue) + [r for _, _, r in self._retry]
+        blob = {
+            "tick": self.tick,
+            "policy": self.rcfg.policy,
+            "replicas": metas,
+            "router": {
+                "deaths": self.deaths,
+                "rejoins": self.rejoins,
+                "death_ticks": list(self.death_ticks),
+                "replaced_rids": sorted(self.replaced_rids),
+                "total_retries": self.total_retries,
+                "retries": {str(r.rid): r.retries
+                            for r in open_reqs if r.retries},
+            },
+        }
+        _dur.save_snapshot(self.snapshot_dir, self.tick, blob, kv)
+        self.snapshots += 1
+
+    def recover(self, journal, snapshot: Optional[str] = None) -> dict:
+        """Rebuild this (fresh) fleet from a recovered journal plus the
+        newest warm snapshot. Journal-finished rids become reconstructed
+        request objects in :attr:`recovered` — in the books, never re-run
+        (exactly-once). Unfinished rids are rebuilt with their journaled
+        token prefix and re-enqueued in ``(arrival, rid)`` order; admission
+        re-prefills their proven prompt and replays the recorded tokens
+        through decode, so their eventual streams are bitwise identical to a
+        run that never lost power. The snapshot re-pins the prefix forest
+        (K/V scattered straight back — zero recompute), resumes the immune
+        EMAs, and restores the failover books. ``submit_time`` is NOT
+        restored: ``perf_counter`` is process-relative, so a pre-loss wall
+        clock would be meaningless here."""
+        if self.journal is None:
+            self.attach_durability(journal)
+        sdir = snapshot if snapshot is not None else self.snapshot_dir
+        blob, kv, _ = _dur.load_snapshot(sdir) if sdir else (None, [], 0)
+        retries: dict = {}
+        if blob is not None:
+            rb = blob.get("router") or {}
+            self.deaths = int(rb.get("deaths") or 0)
+            self.rejoins = int(rb.get("rejoins") or 0)
+            self.death_ticks = list(rb.get("death_ticks") or [])
+            self.replaced_rids = set(rb.get("replaced_rids") or [])
+            self.total_retries = int(rb.get("total_retries") or 0)
+            retries = {int(k): int(v)
+                       for k, v in (rb.get("retries") or {}).items()}
+            off = 0
+            for i, m in enumerate(blob.get("replicas") or []):
+                n = len(m.get("forest") or []) * int(m.get("kv_per_page") or 0)
+                if i < len(self.engines):
+                    self.recovered_pages += \
+                        self.engines[i].import_warm_state(m, kv[off:off + n])
+                off += n
+            self.tick = max(self.tick, int(blob.get("tick") or 0))
+        reopen = []
+        for rid, rec in sorted(journal.state.items()):
+            req = ServeRequest(
+                rid=rid, tokens=np.asarray(rec["tokens"], np.int32),
+                params=SamplingParams(**rec["params"]),
+                rclass=int(rec.get("rclass") or 0),
+                arrival=int(rec.get("arrival") or 0),
+                deadline=rec.get("deadline"))
+            req.out_tokens = list(rec["out"])
+            self._journal_counts[rid] = len(req.out_tokens)
+            if rec["fin"] is not None:
+                req.finish_reason = rec["fin"]
+                req.finish_tick = int(rec.get("fin_tick", -1))
+                self._fin_logged.add(rid)
+                self.recovered.append(req)
+            else:
+                req.retries = retries.get(rid, 0)
+                reopen.append(req)
+        for req in sorted(reopen, key=lambda r: (r.arrival, r.rid)):
+            self.queue.append(req)
+            self.submitted += 1
+        self.recovered_open += len(reopen)
+        return {"recovered_open": len(reopen),
+                "recovered_finished": len(self.recovered),
+                "recovered_pages": self.recovered_pages}
+
     # -- accounting ----------------------------------------------------------
     @property
     def completed(self) -> list:
         """All completed requests across the fleet — replaced (fallen)
-        replicas included, their pre-crash completions are real — rid
+        replicas included, their pre-crash completions are real, as are
+        journal-recovered completions from before a power loss — rid
         order."""
-        return sorted((r for e in self.engines + self.fallen
-                       for r in e.completed), key=lambda r: r.rid)
+        rec = [r for r in self.recovered
+               if r.finish_reason in ("stop", "length")]
+        return sorted((r for src in ([e.completed for e in
+                                      self.engines + self.fallen] + [rec])
+                       for r in src), key=lambda r: r.rid)
 
     def stats(self) -> dict:
         fleet = self.engines + self.fallen
@@ -390,14 +578,25 @@ class Router:
         done = self.completed
         lat = np.asarray([r.latency for r in done], np.float64)
         toks = int(sum(len(r.out_tokens) for r in done))
+        # journal-recovered completions are judged against the live fleet's
+        # (uniform) tick budget; their wall clock did not survive the restart
         in_budget = sum(1 for eng in fleet for r in eng.completed
-                        if eng._met_budget(r))
-        shed = sum(len(eng.shed) for eng in fleet)
-        rejected = sum(len(eng.rejected) for eng in fleet)
+                        if eng._met_budget(r)) \
+            + sum(1 for r in self.recovered
+                  if r.finish_reason in ("stop", "length")
+                  and self.engines[0]._met_budget(r))
+        rec_by = {}
+        for r in self.recovered:
+            rec_by[r.finish_reason] = rec_by.get(r.finish_reason, 0) + 1
+        shed = sum(len(eng.shed) for eng in fleet) + rec_by.get("shed", 0)
+        rejected = sum(len(eng.rejected) for eng in fleet) \
+            + rec_by.get("rejected", 0)
+        corrupted = sum(len(eng.corrupted) for eng in fleet) \
+            + rec_by.get("corrupted", 0)
         unserved = int(len(self.queue) + len(self._retry) + self.unsubmitted
                        + sum(p["unserved"] for p in per))
-        failed = len(self.failed)
-        demand = len(done) + shed + rejected + unserved + failed
+        failed = len(self.failed) + rec_by.get("failed", 0)
+        demand = len(done) + shed + rejected + corrupted + unserved + failed
         # recovery: from the first declared death to the last re-placed
         # request's completion — how long the failover took to fully absorb
         redone = [r for r in done if r.rid in self.replaced_rids]
@@ -413,6 +612,7 @@ class Router:
             "completed": len(done),
             "shed": shed,
             "rejected": rejected,
+            "corrupted": corrupted,
             "unserved": unserved,
             "failed": failed,
             "tokens": toks,
@@ -441,6 +641,16 @@ class Router:
             "recovery_ticks": int(recovery),
             "faults": self.injector.stats()
             if self.injector is not None else None,
+            # durability telemetry (None journal -> all-zero block)
+            "durability": {
+                "journal": self.journal.stats()
+                if self.journal is not None else None,
+                "recovered_finished": len(self.recovered),
+                "recovered_open": self.recovered_open,
+                "recovered_pinned_pages": self.recovered_pages,
+                "dedup_drops": self.dedup_drops,
+                "snapshots": self.snapshots,
+            },
             # fleet-aggregated engine telemetry
             "prefill_tokens": sum(p["prefill_tokens"] for p in per),
             "preemptions": sum(p["preemptions"] for p in per),

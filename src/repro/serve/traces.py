@@ -214,6 +214,27 @@ def failover_fleet_trace(cfg: ModelConfig, replicas: int = 3,
     return reqs, spec
 
 
+def poweroff_fleet_trace(cfg: ModelConfig, seed: int = 0,
+                         restart: bool = True, **kw) -> tuple:
+    """The fleet trace, power-loss-laced: ``fleet_trace`` traffic plus a
+    matched ``poweroff`` fault-plan spec (``serve.faults.FaultPlan.parse``
+    grammar) sized to the trace — the lights go out about halfway through
+    the arrival window (in-flight decodes, queued work and pending arrivals
+    all straddle the loss, the hard case for the journal), and with
+    ``restart`` the rebuilt fleet resumes a few ticks later, before the tail
+    of arrivals. Returns ``(requests, plan_spec)`` — drive with
+    ``serve.durability.run_durable`` (a plain ``Router.run`` would just die
+    at the poweroff tick); the manual-run variant behind
+    ``launch/serve --trace fleet-poweroff``."""
+    reqs = fleet_trace(cfg, seed=seed, **kw)
+    horizon = max(r.arrival for r in reqs) if reqs else 0
+    off_at = max(1, horizon // 2)
+    spec = f"poweroff@{off_at}"
+    if restart:
+        spec += f" restart@{off_at + 4}"
+    return reqs, spec
+
+
 def shared_prefix_trace(cfg: ModelConfig, num_requests: int = 32,
                         num_prefixes: int = 2, prefix_len: int = 32,
                         suffix_lens: tuple = (4, 8),

@@ -10,11 +10,12 @@ BASELINE = {
     "preemption": {"summary": {"preempt_concurrency_hw": 4.0}},
     "routing": {"summary": {"affinity_hit_rate": 0.6}},
     "failover": {"summary": {"immune_goodput": 0.9}},
+    "durability": {"summary": {"poweroff_goodput": 0.9}},
 }
 
 
 def _new(hit=0.5, depth=4.0, parity=True, check=True, affinity=0.6,
-         goodput=0.9):
+         goodput=0.9, off_goodput=0.9):
     return {
         "pinning": {"summary": {
             "pinned_hit_rate": hit,
@@ -32,6 +33,10 @@ def _new(hit=0.5, depth=4.0, parity=True, check=True, affinity=0.6,
         "failover": {"summary": {
             "immune_goodput": goodput,
             "failover_parity_exact": True,
+        }},
+        "durability": {"summary": {
+            "poweroff_goodput": off_goodput,
+            "durability_parity_exact": True,
         }},
     }
 
@@ -68,6 +73,10 @@ class TestGate:
     def test_failover_goodput_regression_fails(self):
         assert any("immune_goodput" in f
                    for f in gate(_new(goodput=0.5), BASELINE))
+
+    def test_poweroff_goodput_regression_fails(self):
+        assert any("poweroff_goodput" in f
+                   for f in gate(_new(off_goodput=0.5), BASELINE))
 
     def test_missing_baseline_section_skips(self):
         assert gate(_new(), {}) == []
