@@ -14,8 +14,10 @@ Two kinds of rules, deliberately asymmetric:
     (``pinning.summary.pinned_hit_rate``), the placement router's
     prefix-affinity hit rate (``routing.summary.affinity_hit_rate``), immune
     goodput under crash-of-one failover
-    (``failover.summary.immune_goodput``), and goodput across a full-fleet
-    power loss (``durability.summary.poweroff_goodput``) must each be at
+    (``failover.summary.immune_goodput``), goodput across a full-fleet
+    power loss (``durability.summary.poweroff_goodput``), and the
+    speculative-decoding draft accept rate
+    (``spec_decode.summary.spec_accept_rate``) must each be at
     least the baseline's value minus a small epsilon.
     Improvements pass silently; update the baseline when they should become
     the new floor.
@@ -50,6 +52,7 @@ NO_REGRESS = (
     (("routing", "summary", "affinity_hit_rate"), 0.01),
     (("failover", "summary", "immune_goodput"), 0.01),
     (("durability", "summary", "poweroff_goodput"), 0.01),
+    (("spec_decode", "summary", "spec_accept_rate"), 0.01),
 )
 
 

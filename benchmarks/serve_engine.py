@@ -46,6 +46,15 @@ page budget — preemption must admit strictly deeper with a no-worse p99, with
 bitwise parity on preempted-then-resumed completions. ``benchmarks/
 regression_gate.py`` diffs these sections against a committed baseline in CI.
 
+**Speculative-decoding comparison** — ``run_spec_decode`` serves the agentic
+multi-turn trace (grown prompt prefixes, long decodes) with self-speculative
+decoding on vs off at an equal page budget: the spec engine drafts ``k``
+tokens per tick through a truncated-depth pass of the same weights and scores
+all of them in one batched paged verify step. Accept rate, tick and warm
+wall-clock speedup go to the JSON; ``spec_parity_exact`` pins the bitwise
+accept oracle — the spec run's streams must equal the plain run's token for
+token (see benchmarks/README.md for the cost model).
+
 **Routing comparison** — ``run_routing`` drives the multi-replica placement
 router (``serve/router.py``) over the multi-tenant fleet trace: immune
 placement (prefix affinity -> anergy draining -> least remembered cost) vs
@@ -371,6 +380,109 @@ def run_sampling(arch: str = "smollm-360m", num_requests: int = 20,
         == summary["greedy_concurrency_hw"],
         "tick_throughput_equal": abs(summary["sampled_throughput"]
                                      - summary["greedy_throughput"]) < 1e-9,
+    }
+    return {"rows": rows, "summary": summary}
+
+
+def run_spec_decode(arch: str = "smollm-360m", sessions: int = 4,
+                    turns: int = 3, spec_k: int = 6, draft_layers: int = 1,
+                    num_slots: int = 4, max_cache: int = 96,
+                    page_size: int = 16, seeds: tuple = (0, 1)) -> dict:
+    """Self-speculative decoding vs plain greedy decode on the agentic
+    multi-turn trace at an **equal page budget**: the same engine config twice
+    (same slots, pages, chunked prefill), the spec run drafting ``spec_k``
+    tokens per tick through the first ``draft_layers`` layer reps and
+    verifying them in one batched paged step. Parameters are made
+    draft-friendly (``serve.spec.make_draft_friendly``) so a random init
+    stands in for the trained-model property that late layers refine rather
+    than rewrite — the *accept rate* depends on it, the parity bit does not.
+
+    The JSON records the accept rate (accepted drafts / proposed drafts —
+    the bonus token is free either way, so this is the draft head's hit
+    rate), tick and wall-clock speedup over non-speculative serving, and
+    ``spec_parity_exact``: every completion's token stream must be **bitwise
+    identical** between the two runs (greedy accept is an oracle on the
+    verify logits, which row-for-row equal sequential decode's). Wall clock
+    is measured *warm*: each mode first drives a warm-up trace through a
+    throwaway engine (same config, same shape buckets) so compile time —
+    identical work either way, but huge relative to the smoke model — does
+    not wash the decode-path difference out of the ratio."""
+    import time
+
+    from repro.serve import spec as spec_mod
+
+    cfg = configs.get_config(arch).smoke()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    params = spec_mod.make_draft_friendly(params, cfg, depth=draft_layers)
+
+    def mk_trace(seed):
+        # decode-heavy on purpose: speculative ticks compress decode, not
+        # prefill, and the agentic trace's grown prefixes keep prompts cheap
+        return traces.agentic_trace(
+            cfg, sessions=sessions, turns=turns, base_prompt=16,
+            grow_lens=(4, 6), decode_lens=(32, 48), seed=seed)
+
+    rows = []
+    parity_exact = True
+    num_requests = sessions * turns
+    for seed in seeds:
+        toks_by = {}
+        for mode in ("nonspec", "spec"):
+            ecfg = eng_mod.EngineConfig(
+                num_slots=num_slots, max_cache=max_cache, policy="fifo",
+                page_size=page_size,
+                num_pages=num_slots * max_cache // page_size + 1,
+                prefill_chunk=page_size,
+                spec_decode=spec_k if mode == "spec" else 0,
+                spec_draft_layers=draft_layers if mode == "spec" else 0)
+            warm = eng_mod.Engine(params, cfg, ecfg)     # compile, discard
+            warm.run(mk_trace(seed + 7919), max_ticks=50 * num_requests)
+            eng = eng_mod.Engine(params, cfg, ecfg)
+            t0 = time.perf_counter()
+            s = eng.run(mk_trace(seed), max_ticks=50 * num_requests)
+            dt = time.perf_counter() - t0
+            s.update(seed=seed, engine=mode, wall_s=dt,
+                     wall_tok_s=s["tokens"] / max(dt, 1e-9))
+            rows.append(s)
+            toks_by[mode] = {r.rid: list(r.out_tokens)
+                             for r in eng.completed}
+        if toks_by["spec"] != toks_by["nonspec"]:
+            parity_exact = False
+        by = {r["engine"]: r for r in rows if r["seed"] == seed}
+        ns, sp = by["nonspec"], by["spec"]
+        print(f"seed {seed}: spec {sp['ticks']} ticks "
+              f"({sp['wall_tok_s']:.0f} tok/s) vs nonspec {ns['ticks']} "
+              f"({ns['wall_tok_s']:.0f} tok/s) | accept rate "
+              f"{sp['spec_accept_rate']:.2f} | "
+              f"{sp['spec_emitted']} tokens emitted speculatively")
+
+    def mean(engine, key):
+        return float(np.mean([r[key] for r in rows if r["engine"] == engine]))
+
+    summary = {
+        "spec_k": spec_k,
+        "draft_layers": draft_layers,
+        "spec_accept_rate": mean("spec", "spec_accept_rate"),
+        "spec_ticks": mean("spec", "ticks"),
+        "nonspec_ticks": mean("nonspec", "ticks"),
+        "tick_speedup": mean("nonspec", "ticks")
+        / max(mean("spec", "ticks"), 1e-9),
+        "spec_wall_tok_s": mean("spec", "wall_tok_s"),
+        "nonspec_wall_tok_s": mean("nonspec", "wall_tok_s"),
+        "wall_speedup": mean("spec", "wall_tok_s")
+        / max(mean("nonspec", "wall_tok_s"), 1e-9),
+        "spec_parity_exact": parity_exact,
+    }
+    summary["checks"] = {
+        # spec-engine tokens == plain-engine tokens, bit for bit
+        "spec_parity_exact": parity_exact,
+        "all_completed": all(r["completed"] == num_requests for r in rows),
+        # the draft head must actually land drafts (draft-friendly params)
+        "accept_rate_positive": summary["spec_accept_rate"] > 0.25,
+        # deterministic speedup bar: fewer engine ticks for the same tokens
+        "tick_speedup_ok": summary["tick_speedup"] >= 1.2,
+        # wall-clock bar on the agentic trace at equal page budget
+        "wall_speedup_ok": summary["wall_speedup"] >= 1.2,
     }
     return {"rows": rows, "summary": summary}
 
@@ -952,6 +1064,9 @@ def main():
     res["sampling"] = run_sampling(
         arch=args.arch, num_requests=12 if args.smoke else 20,
         seeds=tuple(args.seeds)[:2])
+    res["spec_decode"] = run_spec_decode(
+        arch=args.arch, sessions=3 if args.smoke else 4,
+        seeds=tuple(args.seeds)[:1 if args.smoke else 2])
     res["pinning"] = run_pinning(
         arch=args.arch, bursts=2 if args.smoke else 3,
         seeds=tuple(args.seeds)[:1 if args.smoke else 2])
@@ -995,6 +1110,16 @@ def main():
           f"tok/s wall | engine-vs-oneshot parity "
           f"{'exact' if sm['sampling_parity_exact'] else 'BROKEN'} | checks "
           f"{'OK' if sok else 'REGRESSION'}: {json.dumps(sm['checks'])}")
+    sd = res["spec_decode"]["summary"]
+    sdok = all(sd["checks"].values())
+    print(f"spec decode: k={sd['spec_k']} depth={sd['draft_layers']} | "
+          f"accept rate {sd['spec_accept_rate']:.2f} | "
+          f"{sd['spec_ticks']:.0f} vs {sd['nonspec_ticks']:.0f} ticks "
+          f"({sd['tick_speedup']:.2f}x) | {sd['spec_wall_tok_s']:.0f} vs "
+          f"{sd['nonspec_wall_tok_s']:.0f} tok/s wall "
+          f"({sd['wall_speedup']:.2f}x) | parity "
+          f"{'exact' if sd['spec_parity_exact'] else 'BROKEN'} | checks "
+          f"{'OK' if sdok else 'REGRESSION'}: {json.dumps(sd['checks'])}")
     pn = res["pinning"]["summary"]
     pnok = all(pn["checks"].values())
     print(f"pinning: later-burst prefill "

@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 
 from .kernel import paged_attention as _kernel_call
-from .ref import paged_attention_ref
+from .kernel import paged_attention_verify as _verify_call
+from .ref import paged_attention_ref, paged_attention_verify_ref
 
 
 def paged_attention(q, k_pages, v_pages, table, lengths, *,
@@ -20,4 +21,28 @@ def paged_attention(q, k_pages, v_pages, table, lengths, *,
     return out.reshape(b, h, d)
 
 
-__all__ = ["paged_attention", "paged_attention_ref"]
+def paged_attention_verify(q, k_pages, v_pages, table, pos, *,
+                           interpret: bool | None = None):
+    """Batched k-position verify step (self-speculative decoding).
+
+    q: (B, Sq, H, D) — query row ``r`` sits at cache position ``pos + r`` and
+    attends causally up to it; k_pages, v_pages: (P, page, Hkv, D); table:
+    (B, maxp) i32; pos: (B,) i32. Returns (B, Sq, H, D).
+    interpret=None -> auto (True off-TPU)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, sq, h, d = q.shape
+    hk = k_pages.shape[2]
+    g = h // hk
+    # (B, Sq, Hkv, G, D) -> (B, Hkv, Sq, G, D) -> (B, Hkv, Sq*G, D): rows of
+    # one kv head are (query, group) row-major, matching the kernel's r // G
+    qk = q.reshape(b, sq, hk, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, hk, sq * g, d)
+    out = _verify_call(qk, k_pages, v_pages, table, pos, sq=sq,
+                       interpret=interpret)
+    return out.reshape(b, hk, sq, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, sq, h, d)
+
+
+__all__ = ["paged_attention", "paged_attention_ref",
+           "paged_attention_verify", "paged_attention_verify_ref"]

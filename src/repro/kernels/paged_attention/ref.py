@@ -28,3 +28,32 @@ def paged_attention_ref(q, k_pages, v_pages, table, lengths):
     probs = probs / probs.sum(-1, keepdims=True)
     out = jnp.einsum("bkgt,btkd->bkgd", probs, v)
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+def paged_attention_verify_ref(q, k_pages, v_pages, table, pos):
+    """q: (B, Sq, H, D); k_pages, v_pages: (P, page, Hkv, D); table:
+    (B, maxp) i32; pos: (B,) i32 -> (B, Sq, H, D), fp32 math.
+
+    The k-position verify oracle: query row ``r`` sits at cache position
+    ``pos + r`` and attends causally up to it (``kpos <= pos + r``) — the
+    same contract ``models.layers.attention_verify_paged``'s XLA gather path
+    implements, and row 0 degenerates to ``paged_attention_ref`` at
+    ``lengths = pos + 1``."""
+    b, sq, h, d = q.shape
+    page = k_pages.shape[1]
+    maxp = table.shape[1]
+    hk = k_pages.shape[2]
+    g = h // hk
+
+    k = k_pages[table].reshape(b, maxp * page, hk, d).astype(jnp.float32)
+    v = v_pages[table].reshape(b, maxp * page, hk, d).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(b, sq, hk, g, d)
+
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, k) / (d ** 0.5)
+    kpos = jnp.arange(maxp * page)[None, None, None, None, :]
+    bound = (pos[:, None] + jnp.arange(sq)[None, :])[:, None, None, :, None]
+    scores = jnp.where(kpos <= bound, scores, -1e30)
+    probs = jnp.exp(scores - scores.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, sq, h, d).astype(q.dtype)

@@ -107,19 +107,22 @@ def main():
                          "compiled on TPU, pallas_interpret = runs anywhere)")
     ap.add_argument("--trace", default="bursty",
                     choices=("bursty", "shared-prefix", "returning-tenant",
-                             "contention", "fleet", "fleet-faults",
+                             "contention", "agentic", "fleet", "fleet-faults",
                              "fleet-poweroff"),
                     help="synthetic arrival trace: bursty heterogeneous, "
                          "system-prompt traffic (exercises prefix sharing), "
                          "returning-tenant bursts with drain gaps (exercises "
                          "the pinned prefix cache), page-pool contention "
-                         "(exercises preemptive admission), multi-tenant "
-                         "fleet traffic with hot-replica skew (exercises the "
-                         "placement router), the fleet trace fault-laced "
-                         "with an auto-sized crash+rejoin plan (exercises "
-                         "failover; needs --replicas > 1), or the fleet "
-                         "trace with an auto-sized full-fleet poweroff + "
-                         "restart (exercises journal + snapshot recovery)")
+                         "(exercises preemptive admission), agentic "
+                         "multi-turn re-submission with grown prompt "
+                         "prefixes (exercises prefix sharing + speculative "
+                         "decoding), multi-tenant fleet traffic with "
+                         "hot-replica skew (exercises the placement router), "
+                         "the fleet trace fault-laced with an auto-sized "
+                         "crash+rejoin plan (exercises failover; needs "
+                         "--replicas > 1), or the fleet trace with an "
+                         "auto-sized full-fleet poweroff + restart "
+                         "(exercises journal + snapshot recovery)")
     ap.add_argument("--replicas", type=int, default=1,
                     help=">1: serve through the multi-replica placement "
                          "router (serve.router) — N engine replicas, one "
@@ -160,6 +163,15 @@ def main():
                     help="page admission discipline: admit on current pages "
                          "and preempt the lowest-priority slot on decode "
                          "exhaustion, or legacy worst-case reservation")
+    ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                    help="self-speculative decoding: draft K tokens per tick "
+                         "through the first --spec-draft-layers layer reps "
+                         "and verify them in one batched paged step; greedy "
+                         "accept is bitwise-identical to non-speculative "
+                         "decode (0 = off; sampled/logprobs ticks fall back)")
+    ap.add_argument("--spec-draft-layers", type=int, default=0,
+                    help="truncated draft depth in layer repetitions "
+                         "(required > 0 and < num_layers with --spec-decode)")
     ap.add_argument("--logprobs", action="store_true",
                     help="record each chosen token's logprob (raw model "
                          "distribution) in the streamed outputs")
@@ -215,7 +227,9 @@ def main():
             attn_backend=args.attn_backend,
             prefill_streams=args.prefill_streams,
             pin_pages=args.pin_pages,
-            admission_mode=args.admission)
+            admission_mode=args.admission,
+            spec_decode=args.spec_decode,
+            spec_draft_layers=args.spec_draft_layers)
         sampling = dict(temperature=args.temperature, top_p=args.top_p,
                         top_k=args.top_k, sample_seed=args.sample_seed)
         if args.trace == "shared-prefix":
@@ -233,6 +247,11 @@ def main():
                 cfg, num_requests=args.requests,
                 hog_prompt=2 * args.page_size,
                 hog_tokens=args.steps, **sampling)
+        elif args.trace == "agentic":
+            trace = traces.agentic_trace(
+                cfg, sessions=max(1, args.requests // 4), turns=4,
+                base_prompt=max(args.prompt_len, 2 * args.page_size),
+                decode_lens=(args.steps // 2, args.steps), **sampling)
         elif args.trace in ("fleet", "fleet-faults", "fleet-poweroff"):
             fleet_kw = dict(
                 num_requests=args.requests,
@@ -386,6 +405,12 @@ def main():
         print(f"  sampling: {stats['sampled_requests']} sampled requests "
               f"(temperature {args.temperature}, top-p {args.top_p}, "
               f"top-k {args.top_k}, seed {args.sample_seed})")
+        if args.spec_decode:
+            print(f"  spec decode: k={stats['spec_decode']} | "
+                  f"{stats['spec_ticks']} spec ticks | accept rate "
+                  f"{stats['spec_accept_rate']:.2f} "
+                  f"({stats['spec_accepted']}/{stats['spec_drafted']} drafts) "
+                  f"| {stats['spec_emitted']} tokens emitted speculatively")
         print(f"  paged KV: {stats['pages_hw']}/{stats['pages_budget']} pages "
               f"high-water x {stats['page_size']} tokens | up to "
               f"{stats['concurrency_hw']} concurrent | "

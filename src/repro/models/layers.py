@@ -431,6 +431,55 @@ def attention_decode_paged(params, x: Array, cfg: ModelConfig, cache: dict,
     return out @ params["wo"], {"k": ck, "v": cv}
 
 
+def attention_verify_paged(params, x: Array, cfg: ModelConfig, cache: dict,
+                           pos: Array, table: Array, active: Array,
+                           backend: str = "xla"):
+    """Batched k-position verify step against the paged KV cache
+    (self-speculative decoding).
+
+    x: (B, Sq, D) — row 0 is the slot's last emitted token at cache position
+    ``pos`` (exactly what the next decode tick would feed), rows 1..Sq-1 the
+    draft tokens at ``pos+1..pos+Sq-1``. Every row writes its K/V at its own
+    position (inactive slots and positions past the block table route to the
+    null page) and attends causally up to itself — per-row this is bitwise
+    the computation ``attention_decode_paged`` would run at that position
+    with that K/V prefix resident, which is the whole accept-oracle argument.
+    Positions the accept loop rejects hold draft K/V afterwards; they are
+    only ever read masked and are overwritten by the next tick's writes
+    before becoming visible.
+    """
+    b, sq, _ = x.shape
+    pos = jnp.asarray(pos)
+    lpos = pos[:, None] + jnp.arange(sq)[None, :]       # (B, Sq) absolute
+    q, k, v = _qkv(params, x, cfg, lpos)
+    page = cache["k"].shape[1]
+    maxp = table.shape[1]
+    # writes: each row lands at its own position; inactive lanes and rows
+    # past the table's capacity go to the null/trash page
+    writable = active[:, None] & (lpos < maxp * page)
+    pidx = jnp.take_along_axis(table, jnp.clip(lpos // page, 0, maxp - 1),
+                               axis=1)
+    pidx = jnp.where(writable, pidx, 0)
+    off = lpos % page
+    ck = cache["k"].at[pidx, off].set(k)
+    cv = cache["v"].at[pidx, off].set(v)
+    if backend != "xla":
+        # deferred import: layers must stay importable without the kernel pkg
+        from ..kernels.paged_attention import paged_attention_verify
+        interpret = True if backend == "pallas_interpret" else None
+        out = paged_attention_verify(q, ck, cv, table,
+                                     pos.astype(jnp.int32),
+                                     interpret=interpret)
+        out = out.reshape(b, sq, -1).astype(v.dtype)
+    else:
+        gk = _gather_pages(ck, table)                  # (B, maxp*page, Hk, D)
+        gv = _gather_pages(cv, table)
+        kpos = jnp.arange(gk.shape[1])[None, None, :]
+        mask = kpos <= lpos[:, :, None]                # (B, Sq, S)
+        out = _sdpa(q, gk, gv, mask, cfg)
+    return out @ params["wo"], {"k": ck, "v": cv}
+
+
 def attention_prefill_paged(params, x: Array, cfg: ModelConfig, cache: dict,
                             table_row: Array, p0: Array):
     """One prefill *chunk* (batch-of-1) written straight into the slot's pages.

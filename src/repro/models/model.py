@@ -41,6 +41,9 @@ class SamplingSpec(NamedTuple):
     temperature: Array  # (B,) f32; 0 => exact argmax (the greedy lane)
     top_k: Array        # (B,) i32; 0 => disabled
     top_p: Array        # (B,) f32; 1.0 => disabled
+    rep_penalty: Array  # (B,) f32; 1.0 => disabled (repetition penalty)
+    pres_penalty: Array  # (B,) f32; 0.0 => disabled (presence penalty)
+    freq_penalty: Array  # (B,) f32; 0.0 => disabled (frequency penalty)
 
 
 def init_params(key, cfg: ModelConfig) -> dict:
@@ -114,7 +117,28 @@ def train_loss(params, cfg: ModelConfig, batch: dict,
                     logits_mean_abs=jnp.mean(jnp.abs(lg)))
 
 
-def sample_tokens(logits: Array, spec: SamplingSpec, step) -> Array:
+def penalize_logits(lg: Array, spec: SamplingSpec, counts: Array) -> Array:
+    """Apply per-lane repetition / presence / frequency penalties to (B, V)
+    logits given ``counts`` (B, V) — how often each vocab id has been
+    *generated* by the lane's request so far (prompt tokens are not counted;
+    the seed token is, once emitted). Lanes with all three penalties at their
+    neutral values (1.0 / 0.0 / 0.0) are returned **bitwise unchanged** via a
+    per-lane ``where`` — the penalty-free path cannot drift by construction,
+    which is what keeps the parity oracle's greedy claims intact."""
+    cnt = counts.astype(jnp.float32)
+    counted = cnt > 0
+    rep = spec.rep_penalty[:, None]
+    scaled = jnp.where(lg > 0, lg / rep, lg * rep)
+    pen = jnp.where(counted, scaled, lg) \
+        - spec.freq_penalty[:, None] * cnt \
+        - spec.pres_penalty[:, None] * counted.astype(jnp.float32)
+    neutral = ((spec.rep_penalty == 1.0) & (spec.pres_penalty == 0.0)
+               & (spec.freq_penalty == 0.0))
+    return jnp.where(neutral[:, None], lg, pen)
+
+
+def sample_tokens(logits: Array, spec: SamplingSpec, step,
+                  counts: Optional[Array] = None) -> Array:
     """Sample one token per lane from last-position ``logits`` ((B, V) or
     (B, T, V), last position used) under per-lane ``SamplingSpec`` rows.
 
@@ -126,8 +150,14 @@ def sample_tokens(logits: Array, spec: SamplingSpec, step) -> Array:
     temperature, full descending sort, top-k rank mask, top-p cumulative-mass
     mask (the top token always survives), Gumbel draw over the survivors — so
     a lane's token is bitwise independent of batch composition; temperature-0
-    lanes short out to the exact ``argmax`` the greedy path takes."""
+    lanes short out to the exact ``argmax`` the greedy path takes.
+
+    ``counts`` (B, V) switches on the repetition/presence/frequency penalty
+    lane (:func:`penalize_logits`) ahead of both the greedy argmax and the
+    sampled draw; penalty-free lanes stay bitwise on the unpenalized path."""
     lg = logits[:, -1] if logits.ndim == 3 else logits          # (B, V) fp32
+    if counts is not None:
+        lg = penalize_logits(lg, spec, counts)
     b, v = lg.shape
     greedy_tok = jnp.argmax(lg, axis=-1)
     keys = jax.vmap(jax.random.fold_in)(
@@ -215,6 +245,31 @@ def decode_step(params, cfg: ModelConfig, batch: dict, cache: dict,
                                                     cache["layers"])
     logits = _head(params, cfg, x)
     return logits, {"layers": layer_caches, "pos": cache["pos"] + 1}
+
+
+def verify_step(params, cfg: ModelConfig, batch: dict, pool: dict,
+                table: Array, active: Optional[Array] = None,
+                attn_backend: str = "xla",
+                router_bias: Optional[Array] = None):
+    """Batched k-position verify step for self-speculative decoding.
+
+    ``batch["tokens"]`` is (B, K+1): each slot's last emitted token followed by
+    its K draft proposals. Row ``j`` is scored at cache position
+    ``pool["pos"] + j`` with causal access up to itself — one forward pass
+    whose per-row logits are bitwise what ``decode_step`` would produce row by
+    row (same gather + ``_sdpa`` contraction per query row, dropless MoE).
+    K/V for every row is written into the paged pool as a side effect, so an
+    accepted prefix's cache is exactly what sequential decode would have left.
+
+    Returns ``(logits (B, K+1, V), new_pool)``; ``pos`` is left untouched —
+    the engine owns position advancement from its host-side accept loop."""
+    x = _embed(params, cfg, batch["tokens"])
+    x, layer_caches = transformer.apply_stack_verify(
+        params["stack"], x, cfg, pool["layers"], pool["pos"],
+        bias=router_bias, table=table, active=active,
+        attn_backend=attn_backend)
+    logits = _head(params, cfg, x)
+    return logits, {"layers": layer_caches, "pos": pool["pos"]}
 
 
 # ---------------------------------------------------------------------------

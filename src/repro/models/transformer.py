@@ -132,6 +132,33 @@ def apply_block_decode(p, x: Array, cfg: ModelConfig, kind: str, cache, pos,
     return x, cache, stats
 
 
+def apply_block_verify(p, x: Array, cfg: ModelConfig, kind: str, cache,
+                       pos, bias: Optional[Array] = None,
+                       table: Optional[Array] = None,
+                       active: Optional[Array] = None,
+                       attn_backend: str = "xla"):
+    """Sq-position verify block step (self-speculative decoding) against the
+    paged pool. Attention-stack kinds only: attn/moe carry no slot-row state,
+    so every (lane, position) row is independent — per row this is bitwise the
+    ``apply_block_decode`` computation at that position. Recurrent kinds have
+    cross-position state and are not verifiable in one batched step; the
+    engine gates speculative decoding to attention stacks."""
+    if kind not in ("attn", "moe"):
+        raise NotImplementedError(f"verify step unsupported for {kind!r}")
+    stats = None
+    h = rmsnorm(p["norm1"], x, cfg)
+    y, cache = layers.attention_verify_paged(p["mixer"], h, cfg, cache, pos,
+                                             table, active,
+                                             backend=attn_backend)
+    x = x + y
+    if kind == "moe":
+        y, stats = moe.moe_ffn(p["moe"], rmsnorm(p["norm2"], x, cfg), cfg, bias)
+        x = x + y
+    else:
+        x = x + layers.mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg), cfg)
+    return x, cache, stats
+
+
 def apply_block_prefill(p, x: Array, cfg: ModelConfig, kind: str, cache,
                         bias: Optional[Array] = None,
                         prefix_len: Optional[Array] = None):
@@ -373,7 +400,9 @@ def apply_stack_decode(stack_params: list, x: Array, cfg: ModelConfig, caches: l
                        attn_backend: str = "xla"):
     """One-token pass. Returns (x, new_caches). ``table``/``active`` select the
     paged KV path for full-attention layers (closed over, same for every layer);
-    ``attn_backend`` picks its compute (XLA gather vs Pallas kernel)."""
+    ``attn_backend`` picks its compute (XLA gather vs Pallas kernel). The bias
+    rows scanned follow the *params'* repetition depth, not the config's, so a
+    ``truncate_stack`` draft slice takes the leading layers' bias rows."""
     li = 0
     new_caches = []
     for (pattern, reps), seg_params, seg_cache in zip(segments(cfg), stack_params,
@@ -381,7 +410,8 @@ def apply_stack_decode(stack_params: list, x: Array, cfg: ModelConfig, caches: l
         npos = len(pattern)
         seg_bias = None
         if bias is not None:
-            seg_bias = bias[li:li + reps * npos].reshape(reps, npos, -1)
+            reps_p = jax.tree_util.tree_leaves(seg_params)[0].shape[0]
+            seg_bias = bias[li:li + reps_p * npos].reshape(reps_p, npos, -1)
         li += reps * npos
 
         def body(carry, inp, pattern=pattern):
@@ -400,6 +430,55 @@ def apply_stack_decode(stack_params: list, x: Array, cfg: ModelConfig, caches: l
         x, nc = jax.lax.scan(body, x, (seg_params, seg_cache, seg_bias))
         new_caches.append(nc)
     return x, new_caches
+
+
+def apply_stack_verify(stack_params: list, x: Array, cfg: ModelConfig,
+                       caches: list, pos: Array,
+                       bias: Optional[Array] = None,
+                       table: Optional[Array] = None,
+                       active: Optional[Array] = None,
+                       attn_backend: str = "xla"):
+    """Sq-position verify pass (self-speculative decoding): every lane scores
+    ``Sq`` consecutive positions starting at its ``pos`` in one batched step.
+    Attention stacks only. Returns (x, new_caches)."""
+    li = 0
+    new_caches = []
+    for (pattern, reps), seg_params, seg_cache in zip(segments(cfg), stack_params,
+                                                      caches):
+        npos = len(pattern)
+        seg_bias = None
+        if bias is not None:
+            seg_bias = bias[li:li + reps * npos].reshape(reps, npos, -1)
+        li += reps * npos
+
+        def body(carry, inp, pattern=pattern):
+            xc = carry
+            lp, cs, b = inp
+            new_cs = []
+            for pi, kind in enumerate(pattern):
+                bi = None if b is None else b[pi]
+                xc, c2, _ = apply_block_verify(lp[pi], xc, cfg, kind, cs[pi],
+                                               pos, bias=bi, table=table,
+                                               active=active,
+                                               attn_backend=attn_backend)
+                new_cs.append(c2)
+            return xc, new_cs
+
+        x, nc = jax.lax.scan(body, x, (seg_params, seg_cache, seg_bias))
+        new_caches.append(nc)
+    return x, new_caches
+
+
+def truncate_stack(stack: list, depth: int) -> list:
+    """First-``depth``-layer slice of a stacked param/cache tree (single-
+    segment attention stacks — the self-speculative draft's weight reuse).
+    The slice shares the leading-axis layout, so ``apply_stack_decode`` runs
+    it unchanged: ``lax.scan`` infers the shorter depth from the sliced
+    leading axis. Layer d's input depends only on layers < d, so the sliced
+    pool's K/V *is* the truncated-depth model's cache — no separate draft
+    weights or draft cache exist."""
+    return [[jax.tree.map(lambda a: a[:depth], pos_params)
+             for pos_params in seg] for seg in stack]
 
 
 def apply_stack_prefill_chunk(stack_params: list, x: Array, cfg: ModelConfig,

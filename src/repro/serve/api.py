@@ -60,8 +60,17 @@ class SamplingParams:
     seed: int = 0
     max_new_tokens: int = 16
     stop: tuple = ()
-    logprobs: bool = False     # record each chosen token's logprob (under the
-    #                            raw model distribution, before temperature)
+    logprobs: int = 0          # k: record each chosen token's logprob (under
+    #                            the raw model distribution, before
+    #                            temperature) plus the top-k alternative
+    #                            logprobs per position; 0 disables. Accepts
+    #                            the legacy bool spelling (True == 1).
+    repetition_penalty: float = 1.0   # >1 discourages reuse; 1.0 disabled
+    presence_penalty: float = 0.0     # flat once-seen penalty; 0.0 disabled
+    frequency_penalty: float = 0.0    # per-occurrence penalty; 0.0 disabled
+    n: int = 1                 # completions to return (slot-group lanes)
+    best_of: int = 0           # 0: off; >= n: sample best_of lanes, keep the
+    #                            n best by cumulative chosen-token logprob
 
     def __post_init__(self):
         if self.temperature < 0:
@@ -73,11 +82,32 @@ class SamplingParams:
         if self.max_new_tokens < 1:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+        if self.repetition_penalty <= 0:
+            raise ValueError(
+                f"repetition_penalty must be > 0, got {self.repetition_penalty}")
+        if self.n < 1:
+            raise ValueError(f"n must be >= 1, got {self.n}")
+        if self.best_of and self.best_of < self.n:
+            raise ValueError(
+                f"best_of must be 0 or >= n, got {self.best_of} < {self.n}")
+        object.__setattr__(self, "logprobs", int(self.logprobs))
+        if self.logprobs < 0:
+            raise ValueError(f"logprobs must be >= 0, got {self.logprobs}")
         object.__setattr__(self, "stop", tuple(int(t) for t in self.stop))
 
     @property
     def is_greedy(self) -> bool:
         return self.temperature == GREEDY_TEMPERATURE
+
+    @property
+    def has_penalties(self) -> bool:
+        return (self.repetition_penalty != 1.0 or self.presence_penalty != 0.0
+                or self.frequency_penalty != 0.0)
+
+    @property
+    def group_size(self) -> int:
+        """Engine lanes this request owns (``best_of`` supersedes ``n``)."""
+        return max(self.n, self.best_of, 1)
 
     def key(self) -> np.ndarray:
         """Host copy of the request's base PRNG key (2,) uint32."""
@@ -92,7 +122,13 @@ def spec_for(params_list: Sequence[SamplingParams]) -> model.SamplingSpec:
         temperature=jnp.asarray([p.temperature for p in params_list],
                                 jnp.float32),
         top_k=jnp.asarray([p.top_k for p in params_list], jnp.int32),
-        top_p=jnp.asarray([p.top_p for p in params_list], jnp.float32))
+        top_p=jnp.asarray([p.top_p for p in params_list], jnp.float32),
+        rep_penalty=jnp.asarray([p.repetition_penalty for p in params_list],
+                                jnp.float32),
+        pres_penalty=jnp.asarray([p.presence_penalty for p in params_list],
+                                 jnp.float32),
+        freq_penalty=jnp.asarray([p.frequency_penalty for p in params_list],
+                                 jnp.float32))
 
 
 @dataclass
@@ -116,12 +152,23 @@ class ServeRequest:
     patches: Optional[np.ndarray] = None   # vlm prefix embeddings (P, Fd)
     frames: Optional[np.ndarray] = None    # audio frame embeddings (L, Fd)
 
+    # slot-group membership (serve.groups): a parent with params.n/best_of > 1
+    # is expanded into group_size member lanes sharing its prompt pages.
+    # group == -1: standalone request. Members carry the parent rid in
+    # ``group`` and their lane index in ``lane``.
+    group: int = -1
+    lane: int = 0
+    group_size: int = 1
+
     # filled in by the serving backend
     out_tokens: list = field(default_factory=list)
     out_logits: list = field(default_factory=list)  # per-token (V,) fp32 rows
     #                                                 (capture_logits only)
     out_logprobs: list = field(default_factory=list)  # per-token chosen-token
     #                                                   logprob (params.logprobs)
+    out_topk: list = field(default_factory=list)  # per-token (ids, logprobs)
+    #                                               top-k alternative pairs
+    #                                               (params.logprobs == k)
     finish_reason: Optional[str] = None    # "stop" | "length" | "rejected" |
     #                                        "shed" | "failed" | "corrupted"
     admit_tick: int = -1
@@ -205,6 +252,14 @@ class RequestOutput:
     # aligned 1:1 with new_tokens, and the full stream aligned with tokens
     new_logprobs: Optional[list] = None
     logprobs: Optional[list] = None
+    # top-k alternative logprobs (None unless SamplingParams.logprobs == k):
+    # per emitted position an (ids, logprobs) pair of the k highest-probability
+    # vocab entries under the raw model distribution, aligned with tokens
+    top_logprobs: Optional[list] = None
+    # slot-group assembly (None unless the request had params.n/best_of > 1):
+    # the parent's view of its member lanes — finished member outputs in rank
+    # order (cumulative chosen-token logprob when best_of, lane order for n)
+    group_outputs: Optional[list] = None
     # preemption accounting: how often this request was evicted mid-flight
     # and how many ticks it spent re-queued waiting for re-admission
     preemptions: int = 0
@@ -245,28 +300,56 @@ def generate(params, cfg: ModelConfig,
     the same request (greedy bitwise; seeded sampling token-identical), and
     with ``capture_logits`` each request's per-token logits rows land in
     ``req.out_logits`` for the bitwise logits-parity comparison."""
+    from . import groups
     single = isinstance(requests, ServeRequest)
     reqs = [requests] if single else list(requests)
     outs = []
     for req in reqs:
-        t0 = time.perf_counter()
-        sp = req.params
-        sampling = None if sp.is_greedy else spec_for([sp])
-        res = decode.generate(params, cfg, req.prompts(), max_cache=max_cache,
-                              steps=sp.max_new_tokens, router_bias=router_bias,
-                              sampling=sampling, return_logits=capture_logits,
-                              return_logprobs=sp.logprobs)
-        stream = [int(t) for t in np.asarray(res[0][0])]
-        out = _finish_oneshot(req, stream, t0)
-        if capture_logits:
-            lg = np.asarray(res[2][0])                     # (steps, V) fp32
-            req.out_logits = [lg[i].copy()
-                              for i in range(len(req.out_tokens))]
-        if sp.logprobs:
-            lp = np.asarray(res[-1][0])                    # (steps,) fp32
-            req.out_logprobs = [float(lp[i])
-                                for i in range(len(req.out_tokens))]
-            out.new_logprobs = list(req.out_logprobs)
-            out.logprobs = list(req.out_logprobs)
-        outs.append(out)
+        if req.params.group_size > 1:
+            t0 = time.perf_counter()
+            members = groups.expand(req)
+            member_outs = [_oneshot_one(params, cfg, m, max_cache,
+                                        router_bias, capture_logits)
+                           for m in members]
+            outs.append(groups.assemble(req, members, member_outs, t0))
+        else:
+            outs.append(_oneshot_one(params, cfg, req, max_cache,
+                                     router_bias, capture_logits))
     return outs[0] if single else outs
+
+
+def _oneshot_one(params, cfg: ModelConfig, req: ServeRequest, max_cache: int,
+                 router_bias: Optional[Array], capture_logits: bool
+                 ) -> RequestOutput:
+    """Run one request batch-of-1 through the one-shot decode loop."""
+    t0 = time.perf_counter()
+    sp = req.params
+    sampling = None if (sp.is_greedy and not sp.has_penalties) \
+        else spec_for([sp])
+    res = decode.generate(params, cfg, req.prompts(), max_cache=max_cache,
+                          steps=sp.max_new_tokens, router_bias=router_bias,
+                          sampling=sampling, return_logits=capture_logits,
+                          return_logprobs=bool(sp.logprobs),
+                          use_penalties=sp.has_penalties,
+                          return_topk=sp.logprobs)
+    stream = [int(t) for t in np.asarray(res[0][0])]
+    out = _finish_oneshot(req, stream, t0)
+    idx = 2
+    if capture_logits:
+        lg = np.asarray(res[idx][0])                       # (steps, V) fp32
+        idx += 1
+        req.out_logits = [lg[i].copy()
+                          for i in range(len(req.out_tokens))]
+    if sp.logprobs:
+        lp = np.asarray(res[idx][0])                       # (steps,) fp32
+        idx += 1
+        req.out_logprobs = [float(lp[i])
+                            for i in range(len(req.out_tokens))]
+        out.new_logprobs = list(req.out_logprobs)
+        out.logprobs = list(req.out_logprobs)
+        tv, ti = res[idx]
+        tv, ti = np.asarray(tv[0]), np.asarray(ti[0])      # (steps, k)
+        req.out_topk = [([int(t) for t in ti[i]], [float(v) for v in tv[i]])
+                        for i in range(len(req.out_tokens))]
+        out.top_logprobs = list(req.out_topk)
+    return out

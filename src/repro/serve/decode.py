@@ -48,7 +48,10 @@ def null_spec(batch: int) -> model.SamplingSpec:
         keys=jnp.zeros((batch, 2), jnp.uint32),
         temperature=jnp.zeros((batch,), jnp.float32),
         top_k=jnp.zeros((batch,), jnp.int32),
-        top_p=jnp.ones((batch,), jnp.float32))
+        top_p=jnp.ones((batch,), jnp.float32),
+        rep_penalty=jnp.ones((batch,), jnp.float32),
+        pres_penalty=jnp.zeros((batch,), jnp.float32),
+        freq_penalty=jnp.zeros((batch,), jnp.float32))
 
 
 @jax.jit
@@ -60,13 +63,22 @@ def _sample_first(logits, spec):
 
 @partial(jax.jit,
          static_argnames=("cfg", "steps", "do_sample", "return_logits",
-                          "return_logprobs"))
+                          "return_logprobs", "use_penalties", "return_topk"))
 def _decode_loop(params, cfg: ModelConfig, first_token: Array, cache: dict,
                  steps: int, spec: model.SamplingSpec, router_bias=None,
                  frames=None, do_sample: bool = False,
-                 return_logits: bool = False, return_logprobs: bool = False):
+                 return_logits: bool = False, return_logprobs: bool = False,
+                 use_penalties: bool = False, return_topk: int = 0):
+    b = first_token.shape[0]
+    rows = jnp.arange(b)
+    counts0 = jnp.zeros((b, cfg.vocab_size), jnp.int32)
+    if use_penalties:
+        # the prefill-seeded first token is already emitted when the loop's
+        # first draw happens — count it (the seed draw itself saw zero counts)
+        counts0 = counts0.at[rows, first_token[:, 0]].add(1)
+
     def body(carry, t):
-        tok, cache = carry
+        tok, cache, counts = carry
         batch = {"token": tok}
         if cfg.family == "audio":
             batch["frame"] = frames[:, t][:, None]
@@ -74,32 +86,46 @@ def _decode_loop(params, cfg: ModelConfig, first_token: Array, cache: dict,
                                    router_bias=router_bias)
         # token t of the loop is emitted token t+1 overall (the prefill-seeded
         # first token is index 0) — the fold_in index both backends agree on
-        nxt = model.sample_tokens(logits, spec, t + 1) if do_sample \
-            else greedy(logits)
+        nxt = model.sample_tokens(logits, spec, t + 1,
+                                  counts=counts if use_penalties else None) \
+            if do_sample else greedy(logits)
+        if use_penalties:
+            counts = counts.at[rows, nxt[:, 0]].add(1)
         out = {"tok": nxt[:, 0]}
         if return_logits:
             out["logits"] = logits[:, -1]
         if return_logprobs:
             out["lp"] = model.chosen_logprob(logits, nxt)[:, 0]
-        return (nxt, cache), out
+        if return_topk:
+            lp_full = jax.nn.log_softmax(logits[:, -1].astype(jnp.float32))
+            out["tl_v"], out["tl_i"] = jax.lax.top_k(lp_full, return_topk)
+        return (nxt, cache, counts), out
 
-    (_, cache), outs = jax.lax.scan(body, (first_token, cache),
-                                    jnp.arange(steps))
+    (_, cache, _), outs = jax.lax.scan(body, (first_token, cache, counts0),
+                                       jnp.arange(steps))
     toks = jnp.moveaxis(outs["tok"], 0, 1)               # (B, steps)
     lseq = jnp.moveaxis(outs["logits"], 0, 1) if return_logits else None
     lpseq = jnp.moveaxis(outs["lp"], 0, 1) if return_logprobs else None
-    return toks, cache, lseq, lpseq
+    tkseq = (jnp.moveaxis(outs["tl_v"], 0, 1),
+             jnp.moveaxis(outs["tl_i"], 0, 1)) if return_topk else None
+    return toks, cache, lseq, lpseq, tkseq
 
 
 def generate(params, cfg: ModelConfig, prompts: dict, max_cache: int, steps: int,
              router_bias: Optional[Array] = None,
              sampling: Optional[model.SamplingSpec] = None,
-             return_logits: bool = False, return_logprobs: bool = False):
+             return_logits: bool = False, return_logprobs: bool = False,
+             use_penalties: bool = False, return_topk: int = 0):
     """Prefill the prompt batch, then decode ``steps`` tokens — argmax by
     default, per-lane sampled under ``sampling``. Returns ``(tokens, cache)``,
     plus the per-token logits rows ``(B, steps, V)`` when ``return_logits``,
     plus each chosen token's raw-distribution logprob ``(B, steps)`` when
-    ``return_logprobs`` (always the last element when requested)."""
+    ``return_logprobs``, plus ``(values, ids)`` top-``return_topk``
+    alternative logprobs ``(B, steps, k)`` when requested (always last).
+
+    ``use_penalties`` threads a per-lane emitted-token count table through the
+    loop so ``sampling``'s repetition/presence/frequency rows bite; requires
+    ``sampling`` (greedy-with-penalties is a temperature-0 spec lane)."""
     b = prompts["tokens"].shape[0]
     cache = model.init_cache(cfg, b, max_cache)
     logits0, cache = model.prefill(params, cfg, prompts, cache,
@@ -110,16 +136,24 @@ def generate(params, cfg: ModelConfig, prompts: dict, max_cache: int, steps: int
     if cfg.family == "audio":
         frames = jnp.zeros((b, steps, cfg.frontend_dim),
                            prompts["frames"].dtype)
-    toks, cache, lseq, lpseq = _decode_loop(
+    toks, cache, lseq, lpseq, tkseq = _decode_loop(
         params, cfg, first, cache, steps,
         sampling if sampling is not None else null_spec(b),
         router_bias=router_bias, frames=frames,
         do_sample=sampling is not None, return_logits=return_logits,
-        return_logprobs=return_logprobs)
+        return_logprobs=return_logprobs,
+        use_penalties=use_penalties and sampling is not None,
+        return_topk=return_topk)
     out = (jnp.concatenate([first, toks[:, :-1]], axis=1), cache)
     if return_logits:
         out = out + (jnp.concatenate([logits0, lseq[:, :-1]], axis=1),)
     if return_logprobs:
         lp0 = model.chosen_logprob(logits0, first)[:, 0:1]    # (B, 1)
         out = out + (jnp.concatenate([lp0, lpseq[:, :-1]], axis=1),)
+    if return_topk:
+        lp0_full = jax.nn.log_softmax(logits0[:, -1].astype(jnp.float32))
+        tv0, ti0 = jax.lax.top_k(lp0_full, return_topk)
+        tv = jnp.concatenate([tv0[:, None], tkseq[0][:, :-1]], axis=1)
+        ti = jnp.concatenate([ti0[:, None], tkseq[1][:, :-1]], axis=1)
+        out = out + ((tv, ti),)
     return out

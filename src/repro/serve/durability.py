@@ -55,6 +55,11 @@ Payloads are compact JSON, one of::
      "arrival":A,"deadline":D}                      # submitted
     {"t":"e","rid":R,"tok":T}                       # emitted
     {"t":"f","rid":R,"reason":"stop","tick":K}      # finished
+
+Slot-group member records additionally carry ``"group"``/``"lane"``/
+``"group_size"`` plus the parent's ``"gn"``/``"gbest"`` (n / best_of), which
+is everything ``Router.recover`` needs to re-register the parent and restore
+joint-finish assembly across a power loss.
 """
 from __future__ import annotations
 
@@ -147,6 +152,10 @@ class RequestJournal:
                 "rclass": rec.get("rclass", 0),
                 "arrival": rec.get("arrival", 0),
                 "deadline": rec.get("deadline"),
+                "group": rec.get("group", -1),
+                "lane": rec.get("lane", 0),
+                "group_size": rec.get("group_size", 1),
+                "gn": rec.get("gn", 1), "gbest": rec.get("gbest", 0),
                 "out": [], "fin": None, "fin_tick": -1})
         elif rec["t"] == "e":
             if rid in self.state:
@@ -166,20 +175,34 @@ class RequestJournal:
         self._dirty = True
         self.appends += 1
 
-    def log_submit(self, req: ServeRequest) -> None:
+    def log_submit(self, req: ServeRequest,
+                   parent: Optional[ServeRequest] = None) -> None:
         """Journal an accepted request; fsync'd before returning, so an
         acknowledged rid can never be lost (the 'zero lost rids' half of the
-        recovery contract)."""
+        recovery contract). A slot-group member (``req.group >= 0``) is
+        journaled with its group coordinates and the parent's n/best_of, so
+        recovery can re-register the parent for joint-finish assembly."""
         p = req.params
-        self._append({
+        rec = {
             "t": "s", "rid": req.rid,
             "tokens": [int(t) for t in np.asarray(req.tokens).ravel()],
             "params": {"temperature": p.temperature, "top_p": p.top_p,
                        "top_k": p.top_k, "seed": p.seed,
                        "max_new_tokens": p.max_new_tokens,
-                       "stop": list(p.stop), "logprobs": p.logprobs},
+                       "stop": list(p.stop), "logprobs": p.logprobs,
+                       "repetition_penalty": p.repetition_penalty,
+                       "presence_penalty": p.presence_penalty,
+                       "frequency_penalty": p.frequency_penalty},
             "rclass": req.rclass, "arrival": req.arrival,
-            "deadline": req.deadline})
+            "deadline": req.deadline}
+        if req.group >= 0:
+            rec["group"] = req.group
+            rec["lane"] = req.lane
+            rec["group_size"] = req.group_size
+            gp = parent.params if parent is not None else p
+            rec["gn"] = gp.n
+            rec["gbest"] = gp.best_of
+        self._append(rec)
         self.sync()
 
     def log_emit(self, rid: int, tok: int) -> None:

@@ -137,6 +137,8 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core import immune
 from ..models import model, transformer
+from . import groups
+from . import spec as specdec
 from .api import (RequestOutput, SamplingParams, ServeRequest,  # noqa: F401
                   spec_for)
 from .decode import greedy, null_spec
@@ -181,6 +183,16 @@ class EngineConfig(NamedTuple):
     pin_pages: int = 0                # persistent prefix-cache budget: full
     #                                   prompt-page chains survive refcount
     #                                   zero as pinned entries (0 = off)
+    # -- self-speculative decoding -------------------------------------------
+    spec_decode: int = 0              # k: draft tokens proposed per spec tick
+    #                                   (0 = off). Spec ticks run only on
+    #                                   all-greedy resident batches with no
+    #                                   penalties/logprobs; emitted tokens are
+    #                                   bitwise the non-speculative stream's.
+    spec_draft_layers: int = 0        # draft depth: leading layer repetitions
+    #                                   of the SAME weights the draft pass
+    #                                   runs (truncated-depth early exit);
+    #                                   must be in (0, num_layers)
 
 
 @dataclass
@@ -287,11 +299,13 @@ def _release(pool, active, slot, cfg: ModelConfig):
 # whole pooled KV cache (the scan carry in decode._decode_loop gets this free)
 @partial(jax.jit,
          static_argnames=("cfg", "attn_backend", "do_sample", "return_logits",
-                          "return_logprobs"),
+                          "return_logprobs", "use_penalties", "return_topk"),
          donate_argnums=(2, 3))
 def _decode_tick(params, cfg: ModelConfig, pool, last, active, table,
-                 router_bias, frames, spec, steps_done, attn_backend="xla",
-                 do_sample=False, return_logits=False, return_logprobs=False):
+                 router_bias, frames, spec, steps_done, pen_counts=None,
+                 attn_backend="xla", do_sample=False, return_logits=False,
+                 return_logprobs=False, use_penalties=False,
+                 return_topk: int = 0):
     """One token for every slot (occupied or not) — the single compiled decode
     step. Inactive slots advance neither position nor state; their lane
     computes a garbage token that the host discards (paged K/V writes of
@@ -312,8 +326,13 @@ def _decode_tick(params, cfg: ModelConfig, pool, last, active, table,
                                          router_bias=router_bias,
                                          table=table, active=active,
                                          attn_backend=attn_backend)
-    nxt = model.sample_tokens(logits, spec, steps_done) if do_sample \
-        else greedy(logits)                          # (S, 1)
+    # repetition/presence/frequency penalties ride the sampling lane: a
+    # per-lane where in model.penalize_logits keeps penalty-free lanes bitwise
+    # on the unpenalized path, and greedy-with-penalties is the temperature-0
+    # sampling lane (argmax of the penalized logits)
+    nxt = model.sample_tokens(logits, spec, steps_done,
+                              counts=pen_counts if use_penalties else None) \
+        if do_sample else greedy(logits)             # (S, 1)
     pos = jnp.where(active, new_pool["pos"], pool["pos"])
     last = jnp.where(active[:, None], nxt, last)
     # silent-corruption guard: a NaN/Inf anywhere in a lane's logits means its
@@ -328,9 +347,25 @@ def _decode_tick(params, cfg: ModelConfig, pool, last, active, table,
     # per decoded token just for the host to drop. Chosen-token logprobs ride
     # in-step on the logits lane already resident (no extra vocab pass on the
     # host side) when any resident request asked for them.
+    # top-k alternative logprobs ride in-step too (partial sort of the raw
+    # log-softmax lane — the host slices each request's own k out of the
+    # batch-wide max-k rows; a shorter prefix of a longer top_k is identical)
+    topk = None
+    if return_topk:
+        lpf = jax.nn.log_softmax(logits[:, -1].astype(jnp.float32))
+        topk = jax.lax.top_k(lpf, return_topk)       # ((S, k) vals, (S, k) ids)
     return (nxt, last, {"layers": new_pool["layers"], "pos": pos}, ok,
             logits if return_logits else None,
-            model.chosen_logprob(logits, nxt) if return_logprobs else None)
+            model.chosen_logprob(logits, nxt) if return_logprobs else None,
+            topk)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _topk_lp(logits, k: int):
+    """Top-k alternative logprobs of a prefill's last-position logits (the
+    seed token's row — decoded rows get theirs inside the compiled tick)."""
+    lp = jax.nn.log_softmax(logits[:, -1].astype(jnp.float32))
+    return jax.lax.top_k(lp, k)
 
 
 # ---------------------------------------------------------------------------
@@ -467,6 +502,12 @@ class Engine:
             raise ValueError(f"unknown attn_backend {ecfg.attn_backend!r}")
         if ecfg.admission_mode not in ("preempt", "reserve"):
             raise ValueError(f"unknown admission_mode {ecfg.admission_mode!r}")
+        if ecfg.spec_decode < 0:
+            raise ValueError(f"spec_decode must be >= 0, got {ecfg.spec_decode}")
+        if ecfg.spec_decode and not 0 < ecfg.spec_draft_layers < cfg.num_layers:
+            raise ValueError(
+                f"spec_draft_layers must be in (0, {cfg.num_layers}), got "
+                f"{ecfg.spec_draft_layers}")
         self.params, self.cfg, self.ecfg = params, cfg, ecfg
         self.router_bias = router_bias
         # MoE: the decode tick runs every slot, occupied or not, and expert
@@ -499,6 +540,20 @@ class Engine:
         self._multi_prefill = (ecfg.prefill_streams > 1
                                and kinds <= {"attn", "moe"}
                                and cfg.family not in ("audio", "vlm"))
+        # self-speculative decoding: needs the k-position verify path (pure
+        # attention/dropless-MoE stacks, no frontend inputs, no slot-row
+        # state) and a single scan segment for the truncated-depth draft
+        # slice. A router bias rides along (verify routes with exactly the
+        # plain tick's bias). The per-tick gate additionally requires every
+        # resident greedy with no penalties/logprobs — fold_in key and
+        # penalty-count discipline are per-emitted-token, which a multi-token
+        # tick cannot honor.
+        self._spec_ok = (ecfg.spec_decode > 0
+                         and 0 < ecfg.spec_draft_layers < cfg.num_layers
+                         and kinds <= {"attn", "moe"}
+                         and len(transformer.segments(cfg)) == 1
+                         and not cfg.frontend_dim and not cfg.frontend_tokens
+                         and cfg.family not in ("audio", "vlm"))
         self.pool = model.init_slot_cache_paged(cfg, s, ecfg.max_cache,
                                                 num_pages, ecfg.page_size)
         self.last = jnp.zeros((s, 1), jnp.int32)
@@ -519,6 +574,14 @@ class Engine:
         self.samp_temp = np.zeros((s,), np.float32)
         self.samp_topk = np.zeros((s,), np.int32)
         self.samp_topp = np.ones((s,), np.float32)
+        self.samp_rep = np.ones((s,), np.float32)   # 1.0 = penalty off
+        self.samp_pres = np.zeros((s,), np.float32)
+        self.samp_freq = np.zeros((s,), np.float32)
+        # per-slot emitted-token counts over the vocab — the penalty state.
+        # Rebuilt from zero at (re-)admission and advanced token by token on
+        # the host (replay re-walks the identical sequence, so a resumed
+        # request's counts at each fold index equal its first run's)
+        self.tok_counts = np.zeros((s, cfg.vocab_size), np.int32)
         self._spec_cache = None            # device copy of the samp_* rows
         self._null_spec = null_spec(s)     # all-greedy lanes, built once
         self.queue: deque[ServeRequest] = deque()
@@ -548,6 +611,23 @@ class Engine:
         self.replayed_tokens = 0           # recorded tokens re-derived by decode
         self.nowrite_adoptions = 0         # full-last-page adoptions (no fork)
         self.prefill_tokens = 0            # prompt positions actually computed
+        # self-speculative decode telemetry
+        self.spec_ticks = 0                # fused draft+verify ticks run
+        self.spec_drafted = 0              # draft tokens proposed (k per lane)
+        self.spec_accepted = 0             # draft tokens accepted and emitted
+        self.spec_emitted = 0              # tokens emitted by spec ticks
+        #                                    (accepted prefix + bonus)
+        # slot groups: parents submitted directly to this engine assemble
+        # their joint output here; member requests of router-held parents
+        # pass through unregistered (the router owns their book)
+        self.group_book = groups.GroupBook()
+        self.groups_submitted = 0
+        self._group_ready: set = set()     # group ids whose shared prompt
+        #                                    pages are registered (lane-0
+        #                                    prefill landed) — sibling lanes
+        #                                    defer admission until then, so
+        #                                    the prompt's pages are charged
+        #                                    once and adopted n-1 times
         self._admitted_this_tick = 0
         self._decoding_before_admit = False
 
@@ -565,6 +645,27 @@ class Engine:
             # replica crash keeps its original clock, so wall latency (and a
             # wall-clock deadline) spans crash + replay, not just the last leg
             req.submit_time = time.perf_counter()
+        if req.params.group_size > 1 and req.group < 0:
+            # slot-group parent: expand into member lanes (identical prompt,
+            # per-lane seeds) and queue them; the parent itself never holds a
+            # slot. Fit checks are per-member and members are identical, so
+            # one probe decides the whole group jointly — a group is admitted
+            # whole or rejected whole, never half-scheduled.
+            members = groups.expand(req)
+            probe = members[0]
+            need = len(probe.tokens) + self.cfg.frontend_tokens \
+                + probe.max_new_tokens
+            if need > self.ecfg.max_cache \
+                    or self._need_pages(probe) > self.alloc.usable_pages:
+                req.finish_reason = "rejected"
+                self.rejected.append(req)
+                return
+            self.groups_submitted += 1
+            self.group_book.register(req)
+            for m in members:
+                m.submit_time = req.submit_time
+                self.queue.append(m)
+            return
         need = len(req.tokens) + self.cfg.frontend_tokens + req.max_new_tokens
         if need > self.ecfg.max_cache \
                 or self._need_pages(req) > self.alloc.usable_pages:
@@ -584,7 +685,10 @@ class Engine:
                 keys=jnp.asarray(self.samp_keys),
                 temperature=jnp.asarray(self.samp_temp),
                 top_k=jnp.asarray(self.samp_topk),
-                top_p=jnp.asarray(self.samp_topp))
+                top_p=jnp.asarray(self.samp_topp),
+                rep_penalty=jnp.asarray(self.samp_rep),
+                pres_penalty=jnp.asarray(self.samp_pres),
+                freq_penalty=jnp.asarray(self.samp_freq))
         return self._spec_cache
 
     def _seed_slot(self, req: ServeRequest, logits) -> Array:
@@ -596,6 +700,11 @@ class Engine:
         self.samp_temp[req.slot] = req.params.temperature
         self.samp_topk[req.slot] = req.params.top_k
         self.samp_topp[req.slot] = req.params.top_p
+        self.samp_rep[req.slot] = req.params.repetition_penalty
+        self.samp_pres[req.slot] = req.params.presence_penalty
+        self.samp_freq[req.slot] = req.params.frequency_penalty
+        self.tok_counts[req.slot] = 0      # penalty counts rebuild from zero
+        #                                    (replay re-walks the same tokens)
         self._spec_cache = None
         if self.ecfg.capture_logits and not req.out_tokens:
             req.out_logits.append(np.asarray(logits)[0, -1].copy())
@@ -606,6 +715,11 @@ class Engine:
         """Record the prefill-seeded first token. A request resuming from
         preemption already holds its history — the seed (bitwise identical by
         the fold-index discipline) is re-derived, not re-recorded."""
+        if req.params.has_penalties:
+            # the seed draw itself saw zero counts (both backends agree); the
+            # seed token is counted from the next draw on — replay included,
+            # since the re-derived seed is bitwise the recorded one
+            self.tok_counts[req.slot, int(first[0, 0])] += 1
         if req.out_tokens:
             self.replayed_tokens += 1
             req.replayed_tokens += 1
@@ -614,6 +728,9 @@ class Engine:
         if req.params.logprobs:
             req.out_logprobs.append(
                 float(np.asarray(_chosen_lp(logits, first))[0, 0]))
+            tv, ti = _topk_lp(logits, req.params.logprobs)
+            req.out_topk.append(([int(x) for x in np.asarray(ti)[0]],
+                                 [float(x) for x in np.asarray(tv)[0]]))
 
     # -- paging --------------------------------------------------------------
     def _chunkable(self, req: ServeRequest) -> bool:
@@ -797,8 +914,15 @@ class Engine:
             cost = self.admission.remembered_cost(req.rclass)
         else:
             anergy = cost = 0.0
-        return (anergy, over, cost, req.arrival,
-                -len(req.out_tokens), req.rid)
+        # group-aware: evicting one member cascades to its resident siblings
+        # (_preempt), so a member's progress stake is the whole group's —
+        # scoring a lane alone would let page pressure evict an n-lane group
+        # to reclaim one lane's pages while destroying n lanes of work
+        progress = len(req.out_tokens)
+        if req.group >= 0:
+            progress = sum(len(r.out_tokens) for r in self.slots
+                           if r is not None and r.group == req.group)
+        return (anergy, over, cost, req.arrival, -progress, req.rid)
 
     def _pick_victim(self) -> Optional[int]:
         """The occupied slot preemption should evict first (the stalling slot
@@ -813,31 +937,65 @@ class Engine:
                 best, best_score = slot, score
         return best
 
-    def _preempt(self, slot: int) -> None:
-        """Evict ``slot``'s request: drop its pages (refcount--; shared and
-        pinnable chains stay resident) and any in-flight prefill job, and
-        re-queue it at the front for exact re-entry — re-admission re-prefills
-        the original prompt and replays its recorded tokens through decode,
-        reproducing them bitwise."""
-        req = self.slots[slot]
-        self.jobs = deque(j for j in self.jobs if j.slot != slot)
+    def _free_slot(self, slot: int) -> None:
+        """Return ``slot`` to the pool: drop its request binding, release its
+        pages (refcount--; shared and pinnable chains stay resident), zero its
+        host-side decode state, and reset its sampling lane to the free-slot
+        argmax row."""
+        self.slots[slot] = None
         self.pool, self.active = _release(self.pool, self.active,
                                           jnp.asarray(slot), self.cfg)
         self.alloc.release(slot)
-        self.slots[slot] = None
         self.active_host[slot] = False
         self.pos_host[slot] = 0
         self.emitted[slot] = 0
         self.samp_temp[slot] = 0.0
         self.samp_topk[slot] = 0
         self.samp_topp[slot] = 1.0
+        self.samp_rep[slot] = 1.0
+        self.samp_pres[slot] = 0.0
+        self.samp_freq[slot] = 0.0
+        self.tok_counts[slot] = 0
         self._spec_cache = None
+
+    def _preempt_one(self, slot: int) -> None:
+        """Evict ``slot``'s request: drop its pages and any in-flight prefill
+        job, and re-queue it at the front for exact re-entry — re-admission
+        re-prefills the original prompt and replays its recorded tokens
+        through decode, reproducing them bitwise."""
+        req = self.slots[slot]
+        self.jobs = deque(j for j in self.jobs if j.slot != slot)
+        self._free_slot(slot)
         req.slot = -1
         req.preemptions += 1
         req.preempt_tick = self.tick
         self.preemptions += 1
         self.preempted_rids.add(req.rid)
+        if req.group >= 0:
+            # eviction may drop the shared chain's last refcount — the ready
+            # bit is stale until some lane's re-prefill re-registers it.
+            # Leaving it set lets every lane re-admit at once, each paying a
+            # full un-shared prefill: the group's footprint nearly doubles,
+            # runs the pool dry again, and the cascade livelocks.
+            self._group_ready.discard(req.group)
         self.queue.appendleft(req)
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot``'s request — and, for a slot-group member, its
+        resident sibling lanes with it (joint preemption: the group moves
+        through the queue as a unit and its shared prefix refcounts drop
+        together). Eviction order is descending lane, so the appendleft
+        sequence leaves lane 0 at the queue front and the group re-admits in
+        lane order — lane 0 re-registers the shared prefix before its
+        siblings re-adopt it."""
+        req = self.slots[slot]
+        targets = [slot]
+        if req.group >= 0:
+            targets = [s for _, s in sorted(
+                ((r.lane, s) for s, r in enumerate(self.slots)
+                 if r is not None and r.group == req.group), reverse=True)]
+        for s in targets:
+            self._preempt_one(s)
 
     def _acquire(self, slot: int, npages: int) -> bool:
         """Grow ``slot`` to ``npages``, resolving page exhaustion by
@@ -850,7 +1008,13 @@ class Engine:
         if self.ecfg.admission_mode == "reserve":
             self.alloc.ensure(slot, npages)       # covered by the reservation
             return True
+        req = self.slots[slot]
         while True:
+            # a victim's group cascade may have evicted this slot's own
+            # request as a sibling — growing the (now free) slot would charge
+            # pages to nobody; the caller must stop driving it
+            if req is not None and self.slots[slot] is not req:
+                return False
             try:
                 self.alloc.ensure(slot, npages)
                 return True
@@ -871,7 +1035,8 @@ class Engine:
             return
         if self.admission is None:                      # FIFO baseline
             while free and self.queue:
-                if not self._admit_into(self.queue[0], free[0]):
+                if self._deferred_member(self.queue[0]) \
+                        or not self._admit_into(self.queue[0], free[0]):
                     break     # strict FIFO: an unfit head blocks the line
                 self.queue.popleft()
                 free.pop(0)
@@ -879,11 +1044,18 @@ class Engine:
         adm = self.admission
         # tolerance turned shedding: requests of anergic classes are rejected
         # outright (not parked — a parked convoy would hold queue pressure high
-        # and block the IL-2 revival it is waiting for)
+        # and block the IL-2 revival it is waiting for). Shedding one group
+        # member sheds the group: a half-shed group can never finish jointly.
         for req in [r for r in self.queue if not adm.admissible(r.rclass)]:
+            if req not in self.queue:
+                continue                  # already cancelled with its group
             self.queue.remove(req)
             req.finish_reason = "shed"
             self.shed.append(req)
+            req.finish_tick = self.tick
+            req.finish_time = time.perf_counter()
+            if req.group >= 0:
+                self._cancel_group(req.group, "shed")
         if adm.throttled():                             # delayed suppression
             return
         # anticipation: order by *remembered* class cost, not queue position;
@@ -896,10 +1068,60 @@ class Engine:
         for req in candidates:
             if not free:
                 break
+            if self._deferred_member(req):
+                continue
             if not self._admit_into(req, free[0]):
                 continue
             self.queue.remove(req)
             free.pop(0)
+
+    def _deferred_member(self, req: ServeRequest) -> bool:
+        """Sibling lanes of a sharable group wait until some member's prompt
+        pages are registered in the prefix index (lane 0's prefill landing),
+        so they adopt the shared pages (refcount++) instead of each paying a
+        full prefill — the group's prompt is charged once. Non-sharable
+        configs never defer: there is nothing to adopt.
+
+        The wait is bounded by a *lower lane still pending*: if no sibling
+        ahead of this lane is queued or mid-prefill, nobody is ever going to
+        register the chain (lane 0 already retired, or its registration was
+        evicted with it), so the lane admits now — adopting the chain if it
+        survived, paying its own prefill if not. Deferring on the ready bit
+        alone would park such a lane forever."""
+        if req.group < 0 or req.lane == 0 or not self._sharable(req):
+            return False
+        if req.group in self._group_ready:
+            return False
+        return (any(q.group == req.group and q.lane < req.lane
+                    for q in self.queue)
+                or any(j.req.group == req.group and j.req.lane < req.lane
+                       for j in self.jobs))
+
+    def _cancel_group(self, gid: int, reason: str) -> None:
+        """Joint retirement on abnormal exit: one member shed or corrupted
+        takes its sibling lanes with it — resident lanes release their slots,
+        queued lanes leave the queue, all with the member's ``reason`` (the
+        stream reports each, and the group book folds them into one abnormal
+        parent output). A group either completes whole or fails whole."""
+        sink = {"shed": self.shed, "corrupted": self.corrupted,
+                "rejected": self.rejected}[reason]
+        for slot, r in enumerate(self.slots):
+            if r is None or r.group != gid:
+                continue
+            self.jobs = deque(j for j in self.jobs if j.slot != slot)
+            self._free_slot(slot)
+            r.slot = -1
+            r.finish_reason = reason
+            r.finish_tick = self.tick
+            r.finish_time = time.perf_counter()
+            sink.append(r)
+        for r in [q for q in self.queue if q.group == gid]:
+            self.queue.remove(r)
+            r.finish_reason = reason
+            r.finish_tick = self.tick
+            r.finish_time = time.perf_counter()
+            sink.append(r)
+        self._group_ready.discard(gid)
 
     def _predicted_costs(self) -> np.ndarray:
         """Per-class cost estimate: the EMA memory, floored by what currently
@@ -929,6 +1151,10 @@ class Engine:
         if job.share:
             self.alloc.register_prefix(job.slot, job.req.tokens,
                                        rclass=job.req.rclass)
+            if job.req.group >= 0:
+                # the group's shared prompt pages are now adoptable: sibling
+                # lanes deferred in _admit may enter and refcount++ them
+                self._group_ready.add(job.req.group)
 
     def _prefill_tick(self):
         """Land one chunk of up to ``prefill_streams`` front prefill jobs (one
@@ -1059,17 +1285,7 @@ class Engine:
             req.finish_tick = self.tick
             req.finish_time = time.perf_counter()
             self.completed.append(req)
-            self.slots[slot] = None
-            self.pool, self.active = _release(self.pool, self.active,
-                                              jnp.asarray(slot), self.cfg)
-            self.alloc.release(slot)          # incl. unused reservation (stop)
-            self.active_host[slot] = False
-            self.pos_host[slot] = 0
-            self.emitted[slot] = 0
-            self.samp_temp[slot] = 0.0        # free lane back to the argmax row
-            self.samp_topk[slot] = 0
-            self.samp_topp[slot] = 1.0
-            self._spec_cache = None
+            self._free_slot(slot)             # incl. unused reservation (stop)
             if self.admission is not None:
                 # cost = slot-ticks actually consumed: emitted tokens PLUS any
                 # recorded tokens re-derived after preemption — a replayed
@@ -1095,17 +1311,127 @@ class Engine:
         req.finish_tick = self.tick
         req.finish_time = time.perf_counter()
         self.corrupted.append(req)
-        self.slots[slot] = None
-        self.pool, self.active = _release(self.pool, self.active,
-                                          jnp.asarray(slot), self.cfg)
-        self.alloc.release(slot)
-        self.active_host[slot] = False
-        self.pos_host[slot] = 0
-        self.emitted[slot] = 0
-        self.samp_temp[slot] = 0.0
-        self.samp_topk[slot] = 0
-        self.samp_topp[slot] = 1.0
-        self._spec_cache = None
+        self._free_slot(slot)
+        if req.group >= 0:
+            # joint retirement: the group cannot finish whole anymore
+            self._cancel_group(req.group, "corrupted")
+
+    # -- decode ticks --------------------------------------------------------
+    def _plain_step(self, do_sample: bool, use_penalties: bool,
+                    want_lp: bool, want_k: int) -> None:
+        """One sequential decode tick: one token for every active slot."""
+        # each lane's fold_in index is its request's emitted-token count
+        # since admission (seed included) — identical to the one-shot
+        # loop's index, and during post-preemption replay it re-walks
+        # 0..n-1 so the re-derived tokens are bitwise the recorded ones
+        counts = jnp.asarray(self.emitted, jnp.int32)
+        spec = self._pool_spec() if do_sample else self._null_spec
+        pen = jnp.asarray(self.tok_counts) if use_penalties else None
+        nxt, self.last, self.pool, ok, logits, lps, topk = _decode_tick(
+            self.params, self.cfg_decode, self.pool, self.last, self.active,
+            jnp.asarray(self.alloc.table()), self.router_bias, self.frames,
+            spec, counts, pen, attn_backend=self.ecfg.attn_backend,
+            do_sample=do_sample,
+            return_logits=self.ecfg.capture_logits,
+            return_logprobs=want_lp, use_penalties=use_penalties,
+            return_topk=want_k)
+        nxt_host = np.asarray(nxt[:, 0])
+        ok_host = np.asarray(ok)
+        lg_host = np.asarray(logits[:, -1]) if logits is not None else None
+        lp_host = np.asarray(lps[:, 0]) if lps is not None else None
+        tv_host, ti_host = (np.asarray(topk[0]), np.asarray(topk[1])) \
+            if topk is not None else (None, None)
+        bad: list[int] = []
+        for slot, req in enumerate(self.slots):
+            if req is None or not self.active_host[slot] \
+                    or self._finished(req):
+                continue
+            if not ok_host[slot]:
+                bad.append(slot)    # poisoned lane: token is garbage
+                continue
+            if self.emitted[slot] >= len(req.out_tokens):
+                req.out_tokens.append(int(nxt_host[slot]))
+                if lg_host is not None:
+                    req.out_logits.append(lg_host[slot].copy())
+                if lp_host is not None and req.params.logprobs:
+                    req.out_logprobs.append(float(lp_host[slot]))
+                if tv_host is not None and req.params.logprobs:
+                    k = req.params.logprobs
+                    req.out_topk.append(
+                        ([int(x) for x in ti_host[slot][:k]],
+                         [float(x) for x in tv_host[slot][:k]]))
+            else:
+                self.replayed_tokens += 1   # replaying recorded history
+                req.replayed_tokens += 1
+            if req.params.has_penalties:
+                # the emitted (or bitwise re-derived) token joins the lane's
+                # penalty counts for every draw after this one
+                self.tok_counts[slot, int(nxt_host[slot])] += 1
+            self.emitted[slot] += 1
+        self.pos_host[self.active_host] += 1
+        for slot in bad:
+            self._retire_corrupted(slot)
+
+    def _spec_step(self) -> None:
+        """One self-speculative tick: fused draft+verify, then the host-side
+        greedy accept loop. Per lane: accept the longest draft prefix where
+        ``d_j == argmax(row j-1)`` plus the bonus token ``argmax(row a)``,
+        stopping early at the request's stop/budget boundary — every emitted
+        token is bitwise the sequential greedy tick's, so preemption replay
+        and the parity oracle hold across spec ticks unchanged."""
+        k = self.ecfg.spec_decode
+        drafts, am, ok, logits, new_pool = specdec.spec_tick(
+            self.params, self.cfg_decode, self.pool, self.last, self.active,
+            jnp.asarray(self.alloc.table()), k=k,
+            depth=self.ecfg.spec_draft_layers,
+            attn_backend=self.ecfg.attn_backend,
+            return_logits=self.ecfg.capture_logits,
+            router_bias=self.router_bias)
+        drafts_h = np.asarray(drafts)
+        am_h = np.asarray(am)
+        ok_h = np.asarray(ok)
+        lg_h = np.asarray(logits) if logits is not None else None
+        last_h = np.array(self.last)          # writable copy
+        self.spec_ticks += 1
+        bad: list[int] = []
+        for slot, req in enumerate(self.slots):
+            if req is None or not self.active_host[slot] \
+                    or self._finished(req):
+                continue
+            if not ok_h[slot]:
+                bad.append(slot)
+                continue
+            a = 0
+            while a < k and int(drafts_h[slot, a]) == int(am_h[slot, a]):
+                a += 1
+            self.spec_drafted += k
+            emitted_now = 0
+            for j in range(a + 1):
+                tok = int(drafts_h[slot, j]) if j < a else int(am_h[slot, a])
+                if self.emitted[slot] >= len(req.out_tokens):
+                    req.out_tokens.append(tok)
+                    if lg_h is not None:
+                        req.out_logits.append(lg_h[slot, j].copy())
+                else:
+                    self.replayed_tokens += 1
+                    req.replayed_tokens += 1
+                self.emitted[slot] += 1
+                emitted_now += 1
+                last_h[slot, 0] = tok
+                if self._finished(req):
+                    break               # stop/budget: the rest is never real
+            self.spec_accepted += min(emitted_now, a)
+            self.spec_emitted += emitted_now
+            # pos advances by exactly what was emitted: verify wrote K/V for
+            # positions pos..pos+k, of which pos..pos+emitted_now-1 hold
+            # precisely what sequential decode would have written; the stale
+            # tail is causally masked and overwritten before it is ever read
+            self.pos_host[slot] += emitted_now
+        self.last = jnp.asarray(last_h)
+        self.pool = {"layers": new_pool["layers"],
+                     "pos": jnp.asarray(self.pos_host, jnp.int32)}
+        for slot in bad:
+            self._retire_corrupted(slot)
 
     # -- one tick ------------------------------------------------------------
     def step(self):
@@ -1116,60 +1442,42 @@ class Engine:
         self._prefill_tick()
         self.concurrency_hw = max(self.concurrency_hw,
                                   sum(r is not None for r in self.slots))
+        # sample only when a resident request asks to: both do_sample variants
+        # of the compiled step stay in jit's cache, so all-greedy stretches
+        # run the pure argmax step even after sampled traffic. Penalties ride
+        # the sampling lane (greedy-with-penalties is its temperature-0 row).
+        use_penalties = any(r is not None and r.params.has_penalties
+                            for r in self.slots)
+        do_sample = use_penalties or any(
+            r is not None and not r.params.is_greedy for r in self.slots)
+        want_lp = any(r is not None and r.params.logprobs
+                      for r in self.slots)
+        want_k = max((r.params.logprobs for r in self.slots
+                      if r is not None), default=0)
+        # self-speculative tick: only when every resident is greedy with no
+        # penalty/logprob state to advance per emitted token — then one fused
+        # draft+verify step can emit up to spec_decode+1 tokens per lane,
+        # each bitwise what the sequential greedy tick would have emitted
+        use_spec = self._spec_ok and not do_sample and not want_lp
         page = self.ecfg.page_size
+        lookahead = self.ecfg.spec_decode if use_spec else 0
         for slot in np.flatnonzero(self.active_host):
             slot = int(slot)
             if not self.active_host[slot]:
                 continue              # preempted by an earlier slot's growth
-            # decode writes at pos: append the page lazily at the boundary,
-            # preempting the lowest-priority resident if the pool is dry
-            self._acquire(slot, pages_for(int(self.pos_host[slot]) + 1, page))
+            # decode writes at pos (a spec tick at pos..pos+k, clamped to the
+            # slot's logical capacity — writes past it route to the null page
+            # and belong to tokens the budget check never emits): append pages
+            # lazily at the boundary, preempting the lowest-priority resident
+            # if the pool is dry
+            cover = min(int(self.pos_host[slot]) + 1 + lookahead,
+                        self.ecfg.max_cache)
+            self._acquire(slot, pages_for(cover, page))
         if self.active_host.any():
-            # each lane's fold_in index is its request's emitted-token count
-            # since admission (seed included) — identical to the one-shot
-            # loop's index, and during post-preemption replay it re-walks
-            # 0..n-1 so the re-derived tokens are bitwise the recorded ones
-            counts = jnp.asarray(self.emitted, jnp.int32)
-            # sample only when a resident request asks to: both do_sample
-            # variants of the compiled step stay in jit's cache, so all-greedy
-            # stretches run the pure argmax step even after sampled traffic
-            do_sample = any(r is not None and not r.params.is_greedy
-                            for r in self.slots)
-            want_lp = any(r is not None and r.params.logprobs
-                          for r in self.slots)
-            spec = self._pool_spec() if do_sample else self._null_spec
-            nxt, self.last, self.pool, ok, logits, lps = _decode_tick(
-                self.params, self.cfg_decode, self.pool, self.last, self.active,
-                jnp.asarray(self.alloc.table()), self.router_bias, self.frames,
-                spec, counts, attn_backend=self.ecfg.attn_backend,
-                do_sample=do_sample,
-                return_logits=self.ecfg.capture_logits,
-                return_logprobs=want_lp)
-            nxt_host = np.asarray(nxt[:, 0])
-            ok_host = np.asarray(ok)
-            lg_host = np.asarray(logits[:, -1]) if logits is not None else None
-            lp_host = np.asarray(lps[:, 0]) if lps is not None else None
-            bad: list[int] = []
-            for slot, req in enumerate(self.slots):
-                if req is None or not self.active_host[slot] \
-                        or self._finished(req):
-                    continue
-                if not ok_host[slot]:
-                    bad.append(slot)    # poisoned lane: token is garbage
-                    continue
-                if self.emitted[slot] >= len(req.out_tokens):
-                    req.out_tokens.append(int(nxt_host[slot]))
-                    if lg_host is not None:
-                        req.out_logits.append(lg_host[slot].copy())
-                    if lp_host is not None and req.params.logprobs:
-                        req.out_logprobs.append(float(lp_host[slot]))
-                else:
-                    self.replayed_tokens += 1   # replaying recorded history
-                    req.replayed_tokens += 1
-                self.emitted[slot] += 1
-            self.pos_host[self.active_host] += 1
-            for slot in bad:
-                self._retire_corrupted(slot)
+            if use_spec:
+                self._spec_step()
+            else:
+                self._plain_step(do_sample, use_penalties, want_lp, want_k)
         self._retire()
         if self.admission is not None:
             demand = np.zeros(self.ecfg.num_classes, np.float64)
@@ -1184,11 +1492,12 @@ class Engine:
                     finished: bool,
                     reason: Optional[str] = None) -> RequestOutput:
         done = finished and reason is None
-        new_lp = full_lp = None
+        new_lp = full_lp = topk = None
         if req.params.logprobs:
             n = len(req.out_tokens)
             new_lp = list(req.out_logprobs[n - len(new_tokens):n])
             full_lp = list(req.out_logprobs)
+            topk = list(req.out_topk)
         return RequestOutput(
             rid=req.rid, new_tokens=new_tokens, tokens=list(req.out_tokens),
             finished=finished,
@@ -1199,7 +1508,7 @@ class Engine:
             latency_ticks=req.latency if done else None,
             wall_latency_s=req.wall_latency_s if done else None,
             deadline_met=self._met_budget(req) if done else None,
-            new_logprobs=new_lp, logprobs=full_lp,
+            new_logprobs=new_lp, logprobs=full_lp, top_logprobs=topk,
             preemptions=req.preemptions, requeue_ticks=req.requeue_ticks)
 
     def stream(self, requests: Optional[list] = None,
@@ -1230,7 +1539,11 @@ class Engine:
             self.unsubmitted = len(pending) - i
             t = self.tick
             for req in self.rejected[self._reported_rejected:]:
-                yield self._output_for(req, t, [], True, reason="rejected")
+                out = self._output_for(req, t, [], True, reason="rejected")
+                yield out
+                done = self.group_book.offer(req, out)
+                if done is not None:
+                    yield done
             self._reported_rejected = len(self.rejected)
             drained = (i == len(pending) and not self.queue
                        and all(r is None for r in self.slots))
@@ -1246,10 +1559,18 @@ class Engine:
             ndone = len(self.completed)
             self.step()
             for req in self.shed[self._reported_shed:]:  # anergy refusals
-                yield self._output_for(req, t, [], True, reason="shed")
+                out = self._output_for(req, t, [], True, reason="shed")
+                yield out
+                done = self.group_book.offer(req, out)
+                if done is not None:
+                    yield done
             self._reported_shed = len(self.shed)
             for req in self.corrupted[self._reported_corrupted:]:
-                yield self._output_for(req, t, [], True, reason="corrupted")
+                out = self._output_for(req, t, [], True, reason="corrupted")
+                yield out
+                done = self.group_book.offer(req, out)
+                if done is not None:
+                    yield done
             self._reported_corrupted = len(self.corrupted)
             live = [r for r in self.slots if r is not None]
             for req in live + self.completed[ndone:]:
@@ -1259,8 +1580,15 @@ class Engine:
                 if n == k and not finished:
                     continue
                 sent[req.rid] = n
-                yield self._output_for(req, t, list(req.out_tokens[k:n]),
+                out = self._output_for(req, t, list(req.out_tokens[k:n]),
                                        finished)
+                yield out
+                if finished:
+                    # group member landed: when it is the group's last lane,
+                    # the assembled parent output follows it in the stream
+                    done = self.group_book.offer(req, out)
+                    if done is not None:
+                        yield done
 
     def run(self, requests: list, max_ticks: int = 10_000) -> dict:
         """Open-loop drive: submit each request at its ``arrival`` tick, run
@@ -1348,6 +1676,20 @@ class Engine:
                                     if not r.params.is_greedy),
             "deadline_requests": sum(1 for r in self.completed
                                      if r.deadline is not None),
+            # self-speculative decoding: accept rate over proposed drafts and
+            # how much of the emitted stream came out of fused spec ticks
+            "spec_decode": self.ecfg.spec_decode,
+            "spec_ticks": self.spec_ticks,
+            "spec_drafted": self.spec_drafted,
+            "spec_accepted": self.spec_accepted,
+            "spec_emitted": self.spec_emitted,
+            "spec_accept_rate": self.spec_accepted / max(self.spec_drafted, 1),
+            # slot groups
+            "groups_submitted": self.groups_submitted,
+            "group_members_completed": sum(1 for r in self.completed
+                                           if r.group >= 0),
+            "penalized_requests": sum(1 for r in self.completed
+                                      if r.params.has_penalties),
         }
 
     # -- placement telemetry (read by serve.router for global placement) -----

@@ -109,8 +109,11 @@ from typing import List, NamedTuple, Optional
 
 import numpy as np
 
+import dataclasses
+
 from . import durability as _dur
-from .api import SamplingParams, ServeRequest
+from . import groups as _groups
+from .api import RequestOutput, SamplingParams, ServeRequest
 from .engine import Engine
 
 POLICIES = ("immune", "rr", "jsq")
@@ -199,6 +202,14 @@ class Router:
         self.recovered_pages = 0         # pinned pages restored warm
         self.dedup_drops = 0             # submits dropped: rid already terminal
         self.snapshots = 0               # warm snapshots written this run
+        # slot groups (serve.groups): parents expand at submit, members are
+        # pinned to one replica, parents assemble when every lane is terminal
+        self.group_book = _groups.GroupBook()
+        self.group_outputs: list = []    # assembled parent RequestOutputs
+        self._group_replica: dict = {}   # gid -> replica index (co-placement)
+        self._failed_groups: set = set()  # gids with a retry-exhausted member
+        self.groups_submitted = 0
+        self.group_coplacements = 0      # members routed by the group pin
 
     # -- placement -----------------------------------------------------------
     def _load(self, eng: Engine) -> float:
@@ -249,7 +260,27 @@ class Router:
     def _place(self, req: ServeRequest) -> int:
         """Pick the replica index for ``req`` under the configured policy
         (healthy replicas only; -1 when none is). With every replica healthy
-        each policy behaves exactly as it did without health tracking."""
+        each policy behaves exactly as it did without health tracking.
+
+        Slot-group members are pinned: the first member placed decides the
+        replica for the whole group (prefix sharing, cascade preemption and
+        joint cancellation are all per-engine machinery — splitting a group
+        across replicas would forfeit every one of them). A later member whose
+        pinned replica has gone suspect holds in the queue rather than defect;
+        a death clears the pin and the group re-places together."""
+        if req.group >= 0:
+            j = self._group_replica.get(req.group, -1)
+            if j >= 0:
+                if self.health[j] == HEALTHY:
+                    self.group_coplacements += 1
+                    return j
+                return -1
+        i = self._place_policy(req)
+        if req.group >= 0 and i >= 0:
+            self._group_replica[req.group] = i
+        return i
+
+    def _place_policy(self, req: ServeRequest) -> int:
         eligible = self._eligible()
         if not eligible:
             return -1
@@ -275,14 +306,21 @@ class Router:
         self.health[i] = DEAD
         self.deaths += 1
         self.death_ticks.append(self.tick)
-        for req in self.engines[i].evacuate():
+        for gid, rep in list(self._group_replica.items()):
+            if rep == i:               # the group re-places (together) on a
+                del self._group_replica[gid]   # survivor
+        evacuated = list(self.engines[i].evacuate())
+        for req in evacuated:
             self.replaced_rids.add(req.rid)
             req.retries += 1
             if req.retries > self.rcfg.max_retries:
-                req.finish_reason = "failed"
-                req.finish_tick = self.tick
-                self.failed.append(req)
+                self._fail(req)
+        for req in evacuated:
+            if req.finish_reason == "failed":
                 continue
+            if req.group >= 0 and req.group in self._failed_groups:
+                self._fail(req)        # joint retirement: a sibling exhausted
+                continue               # its budget, the group fails whole
             self.total_retries += 1
             if req.admit_tick >= 0 and req.preempt_tick < 0:
                 # held a slot: its re-queue wait is accounted like a
@@ -295,6 +333,16 @@ class Router:
                                (self.tick + 1 + delay, req.rid, req))
             else:
                 self.queue.append(req)
+
+    def _fail(self, req: ServeRequest) -> None:
+        """Terminal ``finish_reason="failed"``; a member's failure marks the
+        whole group so its siblings fail jointly wherever they currently are
+        (evacuation batch, retry backoff, or the router queue)."""
+        req.finish_reason = "failed"
+        req.finish_tick = self.tick
+        self.failed.append(req)
+        if req.group >= 0:
+            self._failed_groups.add(req.group)
 
     def _check_health(self) -> None:
         """End-of-tick health transitions from missed step deadlines. Death
@@ -350,14 +398,37 @@ class Router:
         write-ahead-logged (and fsync'd) before it can be placed, and a rid
         the journal already holds a terminal record for is dropped — the
         exactly-once half of the recovery contract (a re-driven trace can
-        never duplicate a completion)."""
+        never duplicate a completion).
+
+        A group parent (``n``/``best_of`` > 1) expands here: the *members*
+        are what the fleet journals, places and schedules; the parent is
+        registered with the router's :class:`serve.groups.GroupBook` and its
+        output assembles when the last lane lands. Expansion is deterministic
+        (member rids derive from the parent rid), so a re-driven trace's
+        members dedup against the journal exactly like plain rids."""
+        if req.params.group_size > 1 and req.group < 0:
+            members = _groups.expand(req)
+            if all(m.rid in self._fin_logged for m in members):
+                self.dedup_drops += 1
+                return
+            self.group_book.register(req)
+            self.groups_submitted += 1
+            for m in members:
+                self._submit_one(m, parent=req)
+            return
+        self._submit_one(req)
+
+    def _submit_one(self, req: ServeRequest,
+                    parent: Optional[ServeRequest] = None):
         if self.journal is not None:
             if req.rid in self._fin_logged:
                 self.dedup_drops += 1
                 return
-            if req.rid not in self._journal_counts:
-                self.journal.log_submit(req)
-                self._journal_counts[req.rid] = len(req.out_tokens)
+            if req.rid in self._journal_counts:
+                return                 # already recovered open — re-queued by
+                #                        recover(), not by re-submission
+            self.journal.log_submit(req, parent=parent)
+            self._journal_counts[req.rid] = len(req.out_tokens)
         self.queue.append(req)
         self.submitted += 1
 
@@ -372,6 +443,10 @@ class Router:
             self.queue.append(heapq.heappop(self._retry)[2])
         while self.queue:
             req = self.queue[0]
+            if req.group >= 0 and req.group in self._failed_groups:
+                self.queue.popleft()   # joint retirement: a sibling already
+                self._fail(req)        # failed, this lane never re-places
+                continue
             i = self._place(req)
             if i < 0:                  # no healthy replica: hold the queue
                 break
@@ -390,9 +465,43 @@ class Router:
                 self.last_step[i] = self.tick
         self._check_health()
         self._degrade()
+        self._assemble_groups()
         if self.journal is not None:
             self._journal_tick()
         self.tick += 1
+
+    # -- slot groups ---------------------------------------------------------
+    def _member_output(self, req: ServeRequest) -> RequestOutput:
+        """Terminal RequestOutput for a group member, for parent assembly.
+        The fleet drives engines with ``step()`` rather than ``stream()``, so
+        member outputs are built here from the retired request objects."""
+        done = req.finish_reason in ("stop", "length")
+        return RequestOutput(
+            rid=req.rid, new_tokens=[], tokens=list(req.out_tokens),
+            finished=True, finish_reason=req.finish_reason,
+            tick=req.finish_tick, arrival=req.arrival,
+            admit_tick=req.admit_tick, finish_tick=req.finish_tick,
+            latency_ticks=req.latency if done else None,
+            wall_latency_s=req.wall_latency_s if done else None,
+            logprobs=list(req.out_logprobs) if req.out_logprobs else None,
+            top_logprobs=list(req.out_topk) if req.out_topk else None,
+            preemptions=req.preemptions, requeue_ticks=req.requeue_ticks)
+
+    def _assemble_groups(self) -> None:
+        """Offer every terminal member the fleet knows about to the group
+        book; a parent whose last lane has landed assembles into
+        :attr:`group_outputs` (joint finish — an abnormal lane fails the
+        whole group). Idempotent: an assembled gid absorbs re-offers
+        silently, so scanning the terminal books each tick is safe."""
+        if not self.group_book.pending():
+            return
+        for req in list(self._terminal_requests()) + self.recovered:
+            if req.group < 0:
+                continue
+            done = self.group_book.offer(req, self._member_output(req))
+            if done is not None:
+                self.group_outputs.append(done)
+                self._group_replica.pop(req.group, None)
 
     def _drained(self) -> bool:
         return not self.queue and not self._retry and all(
@@ -540,7 +649,23 @@ class Router:
                 params=SamplingParams(**rec["params"]),
                 rclass=int(rec.get("rclass") or 0),
                 arrival=int(rec.get("arrival") or 0),
-                deadline=rec.get("deadline"))
+                deadline=rec.get("deadline"),
+                group=int(rec.get("group", -1)),
+                lane=int(rec.get("lane", 0)),
+                group_size=int(rec.get("group_size", 1)))
+            if req.group >= 0 and not self.group_book.has(req.group):
+                # rebuild the parent from the member record's group metadata
+                # and re-arm joint-finish assembly across the power loss
+                pparams = dataclasses.replace(
+                    req.params, n=int(rec.get("gn", 1)),
+                    best_of=int(rec.get("gbest", 0)),
+                    seed=req.params.seed - req.lane)
+                parent = ServeRequest(
+                    rid=req.group, tokens=req.tokens, params=pparams,
+                    rclass=req.rclass, arrival=req.arrival,
+                    deadline=req.deadline)
+                self.group_book.register(parent)
+                self.groups_submitted += 1
             req.out_tokens = list(rec["out"])
             self._journal_counts[rid] = len(req.out_tokens)
             if rec["fin"] is not None:
@@ -650,6 +775,14 @@ class Router:
                 "recovered_pinned_pages": self.recovered_pages,
                 "dedup_drops": self.dedup_drops,
                 "snapshots": self.snapshots,
+            },
+            # slot-group telemetry
+            "groups": {
+                "submitted": self.groups_submitted,
+                "assembled": len(self.group_outputs),
+                "pending": len(self.group_book.pending()),
+                "coplacements": self.group_coplacements,
+                "failed_groups": len(self._failed_groups),
             },
             # fleet-aggregated engine telemetry
             "prefill_tokens": sum(p["prefill_tokens"] for p in per),

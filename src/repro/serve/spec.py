@@ -1,0 +1,122 @@
+"""Self-speculative decoding: truncated-depth draft + batched paged verify.
+
+One spec tick replaces up to ``k + 1`` sequential decode ticks:
+
+  draft   — ``k`` greedy one-token steps through only the first
+            ``depth`` layer repetitions of the *same* weights
+            (``transformer.truncate_stack``: layer d's input depends only on
+            layers < d, so the paged pool's leading-``depth`` K/V slice *is*
+            the truncated model's cache — there are no draft weights and no
+            persistent draft cache). The draft writes K/V into a sliced
+            functional copy of the pool that is simply discarded, so nothing
+            it does is observable — it only has to be *cheap* and *often
+            right*, never correct.
+  verify  — one ``model.verify_step``: rows ``[last, d_1..d_k]`` scored at
+            positions ``pos..pos+k`` through the full stack. Row ``j``'s
+            logits are bitwise the logits sequential decode would produce
+            after emitting ``j`` of the drafted tokens (same per-row gather +
+            ``_sdpa`` contraction, dropless MoE ⇒ row-count invariance), which
+            is what makes greedy accept/reject a *bitwise* oracle rather than
+            a statistical one: the engine accepts the longest prefix with
+            ``d_j == argmax(row j-1)`` plus the bonus token ``argmax(row a)``,
+            and the emitted stream is exactly the non-speculative stream.
+
+The engine gates spec ticks to all-greedy resident batches (sampled lanes
+fold PRNG keys per emitted index — a multi-token tick has no single key),
+no penalties/logprobs capture, attention/MoE stacks. A MoE engine's router
+bias rides into both draft and verify — verify routes with exactly the
+plain tick's bias, so the bitwise contract is unaffected.
+
+``make_draft_friendly`` is the test/bench utility that makes a random init
+behave like a trained model for acceptance purposes: scaling the deep layers'
+residual write-back projections toward zero leaves ``x_depth ≈ x_L`` so the
+truncated head agrees with the full head often, without touching the
+verify-side bitwise contract (parity holds at any acceptance rate).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import model, transformer
+
+Array = jax.Array
+
+
+@partial(jax.jit,
+         static_argnames=("cfg", "k", "depth", "attn_backend", "return_logits"))
+def spec_tick(params, cfg: ModelConfig, pool: dict, last: Array, active: Array,
+              table: Array, k: int, depth: int, attn_backend: str = "xla",
+              return_logits: bool = False,
+              router_bias: Optional[Array] = None):
+    """One fused draft+verify tick over the whole slot batch.
+
+    ``last`` (B, 1) is each slot's newest emitted token (its K/V not yet
+    written — the engine's position invariant), ``pool["pos"]`` its cache
+    position. ``router_bias`` is the engine's MoE selection bias: the verify
+    pass routes with it exactly as the plain decode tick does (the bitwise
+    contract), and the truncated draft takes its leading layers' rows.
+    Returns ``(drafts (B, k), argmax (B, k+1), ok (B,),
+    logits (B, k+1, V) | None, new_pool)``; the host accept loop owns token
+    emission and position advancement."""
+    d_stack = transformer.truncate_stack(params["stack"], depth)
+    d_caches = transformer.truncate_stack(pool["layers"], depth)
+
+    def body(carry, _):
+        tok, caches, posv = carry
+        x = model._embed(params, cfg, tok)
+        x, caches = transformer.apply_stack_decode(
+            d_stack, x, cfg, caches, posv, bias=router_bias, table=table,
+            active=active, attn_backend=attn_backend)
+        lg = model._head(params, cfg, x)
+        nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return (nxt, caches, posv + 1), nxt[:, 0]
+
+    (_, _, _), drafts = jax.lax.scan(
+        body, (last, d_caches, pool["pos"]), None, length=k)
+    drafts = jnp.moveaxis(drafts, 0, 1)                       # (B, k)
+
+    seq = jnp.concatenate([last, drafts], axis=1)             # (B, k+1)
+    logits, new_pool = model.verify_step(
+        params, cfg, {"tokens": seq}, pool, table, active=active,
+        attn_backend=attn_backend, router_bias=router_bias)
+    am = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # (B, k+1)
+    ok = jnp.isfinite(logits).all(axis=(1, 2))                # (B,)
+    return drafts, am, ok, (logits if return_logits else None), new_pool
+
+
+def accept_length(drafts, argmaxes, k: int) -> int:
+    """Host-side greedy accept rule for one lane: the longest prefix of the
+    ``k`` drafts where ``d_j == argmax(row j-1)``. The lane then emits that
+    prefix plus the bonus token ``argmax(row a)`` — ``a + 1`` tokens total,
+    each bitwise what sequential greedy decode would have emitted."""
+    a = 0
+    while a < k and int(drafts[a]) == int(argmaxes[a]):
+        a += 1
+    return a
+
+
+def make_draft_friendly(params: dict, cfg: ModelConfig, depth: int,
+                        scale: float = 0.05) -> dict:
+    """Scale the residual write-back projections (``wo``, ``w_down``) of every
+    layer repetition >= ``depth`` toward zero, so the deep layers barely move
+    the residual stream and the truncated-depth draft's argmax usually agrees
+    with the full model's. Random inits have ~chance acceptance otherwise;
+    this stands in for the trained-model property that late layers refine
+    rather than rewrite. Sampling/verify semantics are untouched — it returns
+    an ordinary parameter tree."""
+    def rescale(path, leaf):
+        name = getattr(path[-1], "key", None) if path else None
+        if name in ("wo", "w_down") and getattr(leaf, "ndim", 0) >= 1:
+            reps = leaf.shape[0]
+            mask = (jnp.arange(reps) >= depth).reshape(
+                (reps,) + (1,) * (leaf.ndim - 1))
+            return jnp.where(mask, (leaf.astype(jnp.float32)
+                                    * scale).astype(leaf.dtype), leaf)
+        return leaf
+    stack = jax.tree_util.tree_map_with_path(rescale, params["stack"])
+    return {**params, "stack": stack}

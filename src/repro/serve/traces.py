@@ -235,6 +235,46 @@ def poweroff_fleet_trace(cfg: ModelConfig, seed: int = 0,
     return reqs, spec
 
 
+def agentic_trace(cfg: ModelConfig, sessions: int = 3, turns: int = 4,
+                  base_prompt: int = 24, grow_lens: tuple = (6, 10),
+                  decode_lens: tuple = (8, 12), turn_gap: int = 12,
+                  seed: int = 0, temperature: float = 0.0, top_p: float = 1.0,
+                  top_k: int = 0, sample_seed: int = 0) -> list:
+    """Agentic multi-turn traffic: each session re-submits its conversation
+    every turn with a *grown* prompt — turn ``t``'s prompt is turn ``t-1``'s
+    prompt plus a fresh extension (standing in for the appended model answer
+    and tool results an agent loop feeds back). Every turn's prompt therefore
+    has the previous turn's full prompt as an exact byte prefix, the workload
+    where the prefix index + CoW forks pay off hardest, and — decode runs
+    being short relative to prompts — the accept-rate-sensitive regime the
+    speculative-decoding benchmark drives. Request class = session (mod 3),
+    arrivals staggered so turns of different sessions interleave; rids are
+    sequential in submission order so seeded sampling replays exactly."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, size=base_prompt)
+               .astype(np.int32) for _ in range(sessions)]
+    reqs, rid = [], 0
+    for t in range(turns):
+        for s in range(sessions):
+            if t > 0:
+                ext = rng.integers(
+                    0, cfg.vocab_size,
+                    size=int(grow_lens[(t + s) % len(grow_lens)])
+                ).astype(np.int32)
+                prompts[s] = np.concatenate([prompts[s], ext])
+            req = ServeRequest(
+                rid=rid,
+                tokens=prompts[s].copy(),
+                params=_params(decode_lens[rid % len(decode_lens)],
+                               temperature, top_p, top_k, sample_seed, rid),
+                rclass=s % 3,
+                arrival=t * turn_gap + 2 * s,
+            )
+            reqs.append(attach_modality_inputs(req, cfg, rng))
+            rid += 1
+    return reqs
+
+
 def shared_prefix_trace(cfg: ModelConfig, num_requests: int = 32,
                         num_prefixes: int = 2, prefix_len: int = 32,
                         suffix_lens: tuple = (4, 8),

@@ -11,11 +11,12 @@ BASELINE = {
     "routing": {"summary": {"affinity_hit_rate": 0.6}},
     "failover": {"summary": {"immune_goodput": 0.9}},
     "durability": {"summary": {"poweroff_goodput": 0.9}},
+    "spec_decode": {"summary": {"spec_accept_rate": 0.5}},
 }
 
 
 def _new(hit=0.5, depth=4.0, parity=True, check=True, affinity=0.6,
-         goodput=0.9, off_goodput=0.9):
+         goodput=0.9, off_goodput=0.9, accept=0.5):
     return {
         "pinning": {"summary": {
             "pinned_hit_rate": hit,
@@ -37,6 +38,10 @@ def _new(hit=0.5, depth=4.0, parity=True, check=True, affinity=0.6,
         "durability": {"summary": {
             "poweroff_goodput": off_goodput,
             "durability_parity_exact": True,
+        }},
+        "spec_decode": {"summary": {
+            "spec_accept_rate": accept,
+            "spec_parity_exact": True,
         }},
     }
 
@@ -77,6 +82,10 @@ class TestGate:
     def test_poweroff_goodput_regression_fails(self):
         assert any("poweroff_goodput" in f
                    for f in gate(_new(off_goodput=0.5), BASELINE))
+
+    def test_accept_rate_regression_fails(self):
+        assert any("spec_accept_rate" in f
+                   for f in gate(_new(accept=0.3), BASELINE))
 
     def test_missing_baseline_section_skips(self):
         assert gate(_new(), {}) == []

@@ -1,0 +1,359 @@
+"""Slot groups (serve.groups): best-of-n lanes sharing prompt pages.
+
+A parent request with ``SamplingParams.n`` / ``best_of`` > 1 expands into
+member lanes that admit jointly (lane 0 prefills and registers the shared
+prefix, siblings defer and adopt its pages — the prompt is charged once),
+are preempted and cancelled as a unit, and retire into one assembled parent
+output (``best_of`` ranks lanes by cumulative chosen-token logprob). The
+joint-finish contract holds through every fleet layer grown so far: a group
+pins to one replica, survives that replica's crash by re-placing together
+(PR 8 failover), fails whole when a member exhausts its retry budget, and
+replays through journal recovery to the identical assembly (PR 9).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model
+from repro.serve import api, durability
+from repro.serve import engine as eng_mod
+from repro.serve import groups
+from repro.serve import router as rt_mod
+from repro.serve.api import SamplingParams, ServeRequest
+from repro.serve.faults import FaultInjector, FaultPlan
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = configs.get_config("smollm-360m").smoke()
+    return cfg, model.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _ecfg(**kw):
+    base = dict(num_slots=3, max_cache=64, page_size=16, prefill_chunk=8,
+                policy="fifo")
+    base.update(kw)
+    return eng_mod.EngineConfig(**base)
+
+
+def _parent(cfg, rid=0, plen=32, steps=6, seed=0, arrival=0, **pkw):
+    rng = np.random.default_rng(1000 + rid)
+    return ServeRequest(
+        rid=rid,
+        tokens=rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
+        params=SamplingParams(seed=seed + 10 * rid, max_new_tokens=steps,
+                              **pkw),
+        rclass=rid % 2, arrival=arrival)
+
+
+def _fresh(req):
+    """A fresh parent record with the same prompt/params, for oracle replay
+    (``api.generate`` mutates and assembles the record it is given)."""
+    return ServeRequest(rid=req.rid, tokens=req.tokens, params=req.params,
+                        rclass=req.rclass)
+
+
+def _stream_outputs(eng, reqs, max_ticks=400):
+    finals = {}
+    for out in eng.stream(reqs, max_ticks=max_ticks):
+        if out.finished:
+            finals[out.rid] = out
+    return finals
+
+
+# ---------------------------------------------------------------------------
+# group math (model-free)
+# ---------------------------------------------------------------------------
+class TestGroupMath:
+    def test_member_rid_round_trip(self):
+        rid = groups.member_rid(37, 5)
+        assert groups.is_member_rid(rid)
+        assert groups.parent_rid_of(rid) == 37
+        assert groups.lane_of(rid) == 5
+        assert not groups.is_member_rid(37)
+        with pytest.raises(ValueError):
+            groups.member_rid(0, groups.LANE_STRIDE)
+
+    def test_expand_member_params(self):
+        parent = ServeRequest(
+            rid=3, tokens=np.arange(8, dtype=np.int32),
+            params=SamplingParams(n=1, best_of=3, temperature=0.7, seed=50,
+                                  max_new_tokens=4))
+        members = groups.expand(parent)
+        assert [m.lane for m in members] == [0, 1, 2]
+        assert [m.params.seed for m in members] == [50, 51, 52]
+        assert all(m.params.n == 1 and m.params.best_of == 0 for m in members)
+        # best_of forces chosen-logprob recording so lanes are comparable
+        assert all(m.params.logprobs >= 1 for m in members)
+        # identical prompt array: byte-identical pages for the prefix index
+        assert all(m.tokens is parent.tokens for m in members)
+        assert all(m.group == 3 and m.group_size == 3 for m in members)
+        # idempotent on members and on standalone requests
+        assert groups.expand(members[1]) == [members[1]]
+        lone = ServeRequest(rid=9, tokens=np.arange(4, dtype=np.int32))
+        assert groups.expand(lone) == [lone]
+
+    def test_plain_n_keeps_lane_order_no_logprobs(self):
+        parent = ServeRequest(rid=0, tokens=np.arange(4, dtype=np.int32),
+                              params=SamplingParams(n=2, temperature=1.0))
+        members = groups.expand(parent)
+        assert all(m.params.logprobs == 0 for m in members)
+
+    def test_rank_by_cum_logprob_then_lane(self):
+        def m(lane, lps):
+            r = ServeRequest(rid=groups.member_rid(0, lane),
+                             tokens=np.arange(2, dtype=np.int32),
+                             group=0, lane=lane)
+            r.out_logprobs = lps
+            return r
+        members = [m(0, [-2.0, -2.0]), m(1, [-0.5, -0.5]), m(2, [-1.0, -2.0])]
+        assert groups.rank(members) == [1, 2, 0]
+        # no logprobs anywhere -> lane order
+        bare = [m(2, []), m(0, []), m(1, [])]
+        assert [bare[i].lane for i in groups.rank(bare)] == [0, 1, 2]
+
+    def test_assemble_abnormal_reason_wins(self):
+        parent = ServeRequest(rid=0, tokens=np.arange(4, dtype=np.int32),
+                              params=SamplingParams(n=2, temperature=1.0))
+        members = groups.expand(parent)
+        outs = []
+        for i, m in enumerate(members):
+            m.out_tokens = [i, i + 1]
+            m.finish_reason = "length" if i == 0 else "shed"
+            m.finish_tick = 5 + i
+            outs.append(api.RequestOutput(
+                rid=m.rid, new_tokens=m.out_tokens, tokens=m.out_tokens,
+                finished=True, finish_reason=m.finish_reason, tick=5 + i))
+        done = groups.assemble(parent, members, outs)
+        assert done.finish_reason == "shed"
+        assert done.finished and done.rid == 0
+        assert len(done.group_outputs) == 2
+
+
+# ---------------------------------------------------------------------------
+# engine: joint admission / shared prompt pages / assembly
+# ---------------------------------------------------------------------------
+class TestEngineGroups:
+    def test_n2_group_assembles_and_matches_oneshot(self, dense):
+        """One parent, two sampled lanes: exactly one assembled parent output
+        whose lanes match the one-shot facade bitwise, with the shared
+        prompt prefilled once and adopted by the sibling."""
+        cfg, params = dense
+        parent = _parent(cfg, plen=32, steps=6, n=2, temperature=0.8,
+                         top_p=0.9)
+        oracle = api.generate(params, cfg, _fresh(parent), max_cache=64)
+        eng = eng_mod.Engine(params, cfg, _ecfg())
+        finals = _stream_outputs(eng, [parent])
+        assert set(finals) == {parent.rid,
+                               groups.member_rid(parent.rid, 0),
+                               groups.member_rid(parent.rid, 1)}
+        done = finals[parent.rid]
+        assert done.finish_reason == "length"
+        assert len(done.group_outputs) == 2
+        assert done.tokens == oracle.tokens
+        assert [o.tokens for o in done.group_outputs] \
+            == [o.tokens for o in oracle.group_outputs]
+        stats = eng.stats()
+        assert stats["groups_submitted"] == 1
+        assert stats["group_members_completed"] == 2
+        # the 32-token prompt is charged once: lane 0 prefills 2 pages, the
+        # sibling adopts them and only recomputes the final prompt position
+        # (its seed logits) — 32 + 1 prefilled positions, not 64
+        members = [r for r in eng.completed if r.group >= 0]
+        assert sum(m.prefill_tokens for m in members) == 33
+        assert stats["shared_pages_adopted"] >= 2
+
+    def test_best_of_ranks_by_cum_logprob(self, dense):
+        cfg, params = dense
+        parent = _parent(cfg, plen=16, steps=5, n=1, best_of=3,
+                         temperature=1.0, top_p=0.9)
+        oracle = api.generate(params, cfg, _fresh(parent), max_cache=64)
+        eng = eng_mod.Engine(params, cfg, _ecfg())
+        finals = _stream_outputs(eng, [parent])
+        done = finals[parent.rid]
+        assert len(done.group_outputs) == 1       # best_of keeps n lanes
+        assert done.tokens == oracle.tokens
+        members = sorted((r for r in eng.completed if r.group >= 0),
+                         key=lambda r: r.lane)
+        cums = [sum(m.out_logprobs) for m in members]
+        assert done.tokens == members[int(np.argmax(cums))].out_tokens, \
+            "best_of winner is not the max-cum-logprob lane"
+
+    def test_greedy_group_lanes_are_identical(self, dense):
+        """Greedy lanes differ only in seed, which greedy never draws — the
+        degenerate-but-well-defined case."""
+        cfg, params = dense
+        parent = _parent(cfg, plen=16, steps=5, n=2)
+        eng = eng_mod.Engine(params, cfg, _ecfg())
+        finals = _stream_outputs(eng, [parent])
+        outs = finals[parent.rid].group_outputs
+        assert outs[0].tokens == outs[1].tokens
+
+    def test_oversized_group_rejected_whole(self, dense):
+        """One probe decides the whole group: a prompt+budget that cannot fit
+        rejects the parent before any member is queued — never
+        half-scheduled."""
+        cfg, params = dense
+        parent = _parent(cfg, plen=60, steps=20, n=2, temperature=1.0)
+        eng = eng_mod.Engine(params, cfg, _ecfg(max_cache=64))
+        finals = _stream_outputs(eng, [parent], max_ticks=30)
+        assert set(finals) == {parent.rid}
+        assert finals[parent.rid].finish_reason == "rejected"
+        assert eng.stats()["groups_submitted"] == 0
+        assert not eng.queue
+
+
+class TestGroupPreemption:
+    def test_member_preempted_mid_draft_cascades_and_replays(self, dense):
+        """Page pressure evicts one lane of a spec-decoding group: the
+        cascade preempts its resident sibling too (descending lane, lane 0
+        back at the queue front), and the re-admitted group still assembles
+        bitwise the one-shot facade's lanes."""
+        cfg, params = dense
+        ecfg = _ecfg(num_slots=3, max_cache=96, page_size=8, num_pages=11,
+                     admission_mode="preempt", spec_decode=3,
+                     spec_draft_layers=1)
+        hog = ServeRequest(rid=0, tokens=np.arange(16, dtype=np.int32),
+                           params=SamplingParams(max_new_tokens=40),
+                           arrival=0)
+        parent = _parent(cfg, rid=1, plen=32, steps=8, n=2, arrival=2)
+        oracle = api.generate(params, cfg, _fresh(parent), max_cache=96)
+        eng = eng_mod.Engine(params, cfg, ecfg)
+        finals = _stream_outputs(eng, [hog, parent], max_ticks=600)
+        stats = eng.stats()
+        assert stats["spec_ticks"] > 0
+        assert stats["preemptions"] > 0, "page pressure never preempted"
+        lanes = {groups.member_rid(parent.rid, ln) for ln in (0, 1)}
+        assert lanes <= eng.preempted_rids, \
+            "preempting one member did not cascade to its resident sibling"
+        done = finals[parent.rid]
+        assert done.finish_reason == "length"
+        assert done.tokens == oracle.tokens
+        assert [o.tokens for o in done.group_outputs] \
+            == [o.tokens for o in oracle.group_outputs]
+        assert finals[hog.rid].finish_reason == "length"
+
+
+# ---------------------------------------------------------------------------
+# router: co-placement, crash failover, retry exhaustion, journal recovery
+# ---------------------------------------------------------------------------
+def _rcfg(**kw):
+    base = dict(num_slots=2, max_cache=96, page_size=16, prefill_chunk=8,
+                policy="immune", num_classes=3, latency_budget=96.0)
+    base.update(kw)
+    return eng_mod.EngineConfig(**base)
+
+
+def _group_trace(cfg, parents=3, plen=32, steps=6, n=2, **pkw):
+    return [_parent(cfg, rid=rid, plen=plen, steps=steps, n=n,
+                    arrival=rid * 2, **pkw) for rid in range(parents)]
+
+
+class TestRouterGroups:
+    def test_groups_pin_to_one_replica_and_assemble(self, dense):
+        cfg, params = dense
+        trace = _group_trace(cfg, parents=3, temperature=0.8, top_p=0.9)
+        oracles = {r.rid: api.generate(params, cfg, _fresh(r), max_cache=96)
+                   for r in trace}
+        router = rt_mod.Router(
+            [eng_mod.Engine(params, cfg, _rcfg()) for _ in range(2)],
+            rt_mod.RouterConfig(policy="immune"))
+        stats = router.run(trace)
+        g = stats["groups"]
+        assert g["submitted"] == 3 and g["assembled"] == 3
+        assert g["pending"] == 0 and g["failed_groups"] == 0
+        # every non-lane-0 member was routed by its group's pin
+        assert g["coplacements"] >= 3
+        for done in router.group_outputs:
+            oracle = oracles[done.rid]
+            assert done.tokens == oracle.tokens
+            assert [o.tokens for o in done.group_outputs] \
+                == [o.tokens for o in oracle.group_outputs]
+
+    def test_group_straddles_replica_crash(self, dense):
+        """Crash the whole fleet's worth of pinned groups one replica at a
+        time is overkill — one crash suffices: a group living on the dead
+        replica clears its pin, re-places *together* on survivors, and
+        assembles bitwise the fault-free run's output."""
+        cfg, params = dense
+        ref_router = rt_mod.Router(
+            [eng_mod.Engine(params, cfg, _rcfg()) for _ in range(3)],
+            rt_mod.RouterConfig(policy="rr"))
+        ref_router.run(_group_trace(cfg, parents=3))
+        ref = {o.rid: o for o in ref_router.group_outputs}
+        assert len(ref) == 3
+
+        router = rt_mod.Router(
+            [eng_mod.Engine(params, cfg, _rcfg()) for _ in range(3)],
+            rt_mod.RouterConfig(policy="rr"),
+            injector=FaultInjector(FaultPlan.parse("crash@4:r0")))
+        stats = router.run(_group_trace(cfg, parents=3))
+        assert stats["deaths"] == 1
+        g = stats["groups"]
+        assert g["assembled"] == 3 and g["pending"] == 0
+        assert g["failed_groups"] == 0
+        assert stats["unserved"] == 0
+        for done in router.group_outputs:
+            assert done.finish_reason == ref[done.rid].finish_reason
+            assert done.tokens == ref[done.rid].tokens, \
+                f"group {done.rid} diverged across the crash"
+            assert [o.tokens for o in done.group_outputs] \
+                == [o.tokens for o in ref[done.rid].group_outputs]
+
+    def test_retry_exhausted_group_fails_whole(self, dense):
+        """With a zero retry budget, a member evacuated off the dead replica
+        terminates "failed" — and the joint-finish contract fails its whole
+        group, never leaving sibling lanes half-alive."""
+        cfg, params = dense
+        router = rt_mod.Router(
+            [eng_mod.Engine(params, cfg, _rcfg()) for _ in range(2)],
+            rt_mod.RouterConfig(policy="rr", max_retries=0),
+            injector=FaultInjector(FaultPlan.parse("crash@4:r0")))
+        stats = router.run(_group_trace(cfg, parents=2, steps=8))
+        assert stats["deaths"] == 1
+        g = stats["groups"]
+        assert g["failed_groups"] >= 1
+        assert g["assembled"] == 2 and g["pending"] == 0
+        failed = [o for o in router.group_outputs
+                  if o.finish_reason == "failed"]
+        assert failed, "no assembled group carries the failed reason"
+        assert stats["unserved"] == 0
+
+    def test_group_replays_through_journal_recovery(self, dense, tmp_path):
+        """A full-fleet power loss with groups in flight: recovery rebuilds
+        parents from journaled member records and every group assembles
+        exactly once, bitwise the uninterrupted fleet's output."""
+        cfg, params = dense
+        ref_router = rt_mod.Router(
+            [eng_mod.Engine(params, cfg, _rcfg()) for _ in range(2)],
+            rt_mod.RouterConfig(policy="immune"))
+        ref_stats = ref_router.run(_group_trace(cfg, parents=3))
+        ref = {o.rid: o for o in ref_router.group_outputs}
+        assert len(ref) == 3
+        off = max(2, ref_stats["ticks"] // 2)
+
+        def factory():
+            inj = FaultInjector(
+                FaultPlan.parse(f"poweroff@{off} restart@{off + 3}"))
+            fleet = [eng_mod.Engine(params, cfg, _rcfg()) for _ in range(2)]
+            return rt_mod.Router(fleet, rt_mod.RouterConfig(policy="immune"),
+                                 injector=inj)
+
+        rt, stats = durability.run_durable(factory, _group_trace(cfg, parents=3),
+                                           str(tmp_path / "wal"))
+        assert stats["restarts"] == 1
+        g = stats["groups"]
+        assert g["pending"] == 0
+        got = {o.rid: o for o in rt.group_outputs}
+        assert set(got) == set(ref), "a group assembled zero or twice"
+        for rid, done in got.items():
+            assert done.finish_reason == "length"
+            assert done.tokens == ref[rid].tokens, \
+                f"group {rid} diverged across the power loss"
+            assert [o.tokens for o in done.group_outputs] \
+                == [o.tokens for o in ref[rid].group_outputs]

@@ -1,0 +1,439 @@
+"""Self-speculative decoding (serve.spec) + the sampling-surface satellites.
+
+The accept oracle is *bitwise*, not statistical: a spec engine's verify step
+reads the paged KV through the same gather + SDPA contraction as the plain
+decode tick and accepts by the same argmax reduction, so every emitted token
+must equal the non-speculative engine's — dense and MoE, through preemption
+replay and journal recovery. Acceptance *rate* only moves throughput, never
+tokens (``make_draft_friendly`` raises it so the speedup machinery is
+actually exercised; parity would hold at any rate).
+
+Satellites pinned here alongside the tentpole:
+
+  * penalties (repetition/presence/frequency) — neutral values are bitwise
+    the unpenalized path even beside penalized neighbours in the same
+    compiled step; nonzero values change tokens and still replay exactly
+    engine-vs-oneshot;
+  * top-k alternative logprobs (``SamplingParams.logprobs == k``) — ids
+    exact, values to 1e-5, engine-vs-oneshot, per-request k in one batch;
+  * spec gating — sampled / penalized / logprob-recording residents force
+    plain ticks (their per-emitted-token key/count discipline cannot ride a
+    multi-token tick), with parity intact either way.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model
+from repro.serve import api, decode
+from repro.serve import durability
+from repro.serve import engine as eng_mod
+from repro.serve import router as rt_mod
+from repro.serve import spec as spec_mod
+from repro.serve import traces
+from repro.serve.api import SamplingParams, ServeRequest
+from repro.serve.faults import FaultInjector, FaultPlan
+
+jax.config.update("jax_platform_name", "cpu")
+
+DEPTH = 1                 # draft depth for the 2-layer smoke stacks
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = configs.get_config("smollm-360m").smoke()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    # draft-friendly so spec ticks actually accept (parity is rate-agnostic,
+    # but a ~zero accept rate would leave the speedup machinery untested)
+    return cfg, spec_mod.make_draft_friendly(params, cfg, DEPTH)
+
+
+@pytest.fixture(scope="module")
+def moe():
+    cfg = configs.get_config("granite-moe-3b-a800m").smoke()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, spec_mod.make_draft_friendly(params, cfg, DEPTH)
+
+
+def _ecfg(**kw):
+    base = dict(num_slots=2, max_cache=64, page_size=16, prefill_chunk=8,
+                policy="fifo", spec_decode=4, spec_draft_layers=DEPTH)
+    base.update(kw)
+    return eng_mod.EngineConfig(**base)
+
+
+def _reqs(cfg, n, seed=0, plens=(6, 10), steps=(8, 12), stagger=1, **pkw):
+    rng = np.random.default_rng(seed)
+    out = []
+    for rid in range(n):
+        out.append(ServeRequest(
+            rid=rid,
+            tokens=rng.integers(0, cfg.vocab_size,
+                                size=plens[rid % len(plens)]).astype(np.int32),
+            params=SamplingParams(max_new_tokens=steps[rid % len(steps)],
+                                  seed=100 + rid, **pkw),
+            rclass=rid % 2, arrival=rid * stagger))
+    return out
+
+
+def _tokens_by_rid(source) -> dict:
+    reqs = source.completed if hasattr(source, "completed") else source
+    return {r.rid: list(r.out_tokens) for r in reqs}
+
+
+def _replay(params, cfg, req, max_cache):
+    probe = ServeRequest(rid=req.rid, tokens=req.tokens, params=req.params)
+    out = api.generate(params, cfg, probe, max_cache=max_cache)
+    return probe, out
+
+
+# ---------------------------------------------------------------------------
+# accept rule + config validation (model-free)
+# ---------------------------------------------------------------------------
+class TestAcceptRule:
+    def test_accept_length_is_longest_matching_prefix(self):
+        assert spec_mod.accept_length([3, 5, 7], [3, 5, 9, 1], 3) == 2
+        assert spec_mod.accept_length([3, 5, 7], [3, 5, 7, 1], 3) == 3
+        assert spec_mod.accept_length([4, 5, 7], [3, 5, 7, 1], 3) == 0
+        assert spec_mod.accept_length([], [9], 0) == 0
+
+    def test_spec_config_validation(self):
+        cfg = configs.get_config("smollm-360m").smoke()
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        for depth in (0, cfg.num_layers):
+            with pytest.raises(ValueError, match="spec_draft_layers"):
+                eng_mod.Engine(params, cfg,
+                               _ecfg(spec_draft_layers=depth))
+        with pytest.raises(ValueError, match="spec_decode"):
+            eng_mod.Engine(params, cfg, _ecfg(spec_decode=-1))
+
+    def test_draft_friendly_returns_ordinary_params(self, dense):
+        cfg, params = dense
+        # same tree structure, only deep wo/w_down leaves rescaled
+        assert jax.tree_util.tree_structure(params) \
+            == jax.tree_util.tree_structure(
+                model.init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# the bitwise accept oracle: dense + MoE
+# ---------------------------------------------------------------------------
+class TestSpecParity:
+    def test_dense_spec_bitwise_matches_nonspec_and_oneshot(self, dense):
+        """The tentpole invariant: a greedy spec engine emits token-bitwise
+        the non-speculative engine's streams, and both match the one-shot
+        oracle — speculation changes when logits are computed, never what
+        they are. Spec ticks must actually fire and accept for the run to be
+        non-vacuous."""
+        cfg, params = dense
+        runs = {}
+        for spec_k in (0, 4):
+            eng = eng_mod.Engine(params, cfg, _ecfg(
+                spec_decode=spec_k,
+                spec_draft_layers=DEPTH if spec_k else 0))
+            stats = eng.run(_reqs(cfg, 5), max_ticks=300)
+            assert stats["completed"] == 5
+            runs[spec_k] = (eng, stats)
+        assert _tokens_by_rid(runs[4][0]) == _tokens_by_rid(runs[0][0])
+        spec_eng, spec_stats = runs[4]
+        assert spec_stats["spec_ticks"] > 0
+        assert spec_stats["spec_accepted"] > 0
+        assert spec_stats["spec_emitted"] > spec_stats["spec_ticks"], \
+            "spec ticks never emitted more than one token per lane"
+        assert spec_stats["ticks"] < runs[0][1]["ticks"], \
+            "speculation did not shorten the run in ticks"
+        for req in spec_eng.completed:
+            toks, _ = decode.generate(params, cfg, req.prompts(),
+                                      max_cache=64,
+                                      steps=req.max_new_tokens)
+            assert req.out_tokens == [int(t) for t in np.asarray(toks[0])], \
+                f"spec request {req.rid} diverged from the one-shot oracle"
+
+    def test_dense_spec_on_agentic_trace(self, dense):
+        """Spec over the workload it is built for: grown-prompt agentic turns
+        whose prefixes share pages — spec ticks decode over adopted/CoW
+        pages and every stream replays exactly through the facade."""
+        cfg, params = dense
+        reqs = traces.agentic_trace(cfg, sessions=2, turns=3, base_prompt=16,
+                                    grow_lens=(4, 6), decode_lens=(6, 8),
+                                    turn_gap=2)
+        eng = eng_mod.Engine(params, cfg, _ecfg(max_cache=96, pin_pages=4))
+        stats = eng.run(reqs, max_ticks=400)
+        assert stats["completed"] == 6
+        assert stats["spec_ticks"] > 0
+        assert stats["shared_pages_adopted"] \
+            + stats["pinned_pages_adopted"] > 0, \
+            "agentic trace never exercised the prefix index"
+        for req in eng.completed:
+            probe, out = _replay(params, cfg, req, 96)
+            assert req.out_tokens == out.tokens, \
+                f"agentic request {req.rid} diverged engine-vs-oneshot"
+
+    def test_moe_spec_bitwise_matches_nonspec(self, moe):
+        """MoE spec parity, router bias riding into draft + verify: the
+        verify pass routes with exactly the plain tick's bias, so dropless
+        row-count invariance keeps the accept oracle bitwise."""
+        cfg, params = moe
+        import jax.numpy as jnp
+        bias = jnp.zeros((cfg.num_layers, cfg.num_experts))
+        runs = {}
+        for spec_k in (0, 3):
+            eng = eng_mod.Engine(params, cfg, _ecfg(
+                spec_decode=spec_k,
+                spec_draft_layers=DEPTH if spec_k else 0),
+                router_bias=bias)
+            stats = eng.run(_reqs(cfg, 3, steps=(6, 8)), max_ticks=300)
+            assert stats["completed"] == 3
+            runs[spec_k] = (eng, stats)
+        assert runs[3][1]["spec_ticks"] > 0
+        assert _tokens_by_rid(runs[3][0]) == _tokens_by_rid(runs[0][0]), \
+            "MoE spec decode changed tokens (dropless row-count invariance broke)"
+
+    def test_spec_deterministic_across_runs(self, dense):
+        cfg, params = dense
+
+        def serve():
+            eng = eng_mod.Engine(params, cfg, _ecfg())
+            eng.run(_reqs(cfg, 4), max_ticks=300)
+            return _tokens_by_rid(eng)
+
+        assert serve() == serve()
+
+
+# ---------------------------------------------------------------------------
+# gating: residents that cannot ride a multi-token tick force plain ticks
+# ---------------------------------------------------------------------------
+class TestSpecGating:
+    def test_sampled_residents_disable_spec_ticks(self, dense):
+        cfg, params = dense
+        eng = eng_mod.Engine(params, cfg, _ecfg())
+        stats = eng.run(_reqs(cfg, 3, temperature=0.9, top_p=0.9),
+                        max_ticks=300)
+        assert stats["completed"] == 3
+        assert stats["spec_ticks"] == 0, \
+            "spec tick ran with sampled residents (per-token key fold broken)"
+        for req in eng.completed:
+            probe, out = _replay(params, cfg, req, 64)
+            assert req.out_tokens == out.tokens
+
+    def test_logprob_residents_disable_spec_ticks(self, dense):
+        cfg, params = dense
+        eng = eng_mod.Engine(params, cfg, _ecfg())
+        stats = eng.run(_reqs(cfg, 2, logprobs=1), max_ticks=300)
+        assert stats["completed"] == 2
+        assert stats["spec_ticks"] == 0
+        assert all(len(r.out_logprobs) == len(r.out_tokens)
+                   for r in eng.completed)
+
+    def test_penalized_residents_disable_spec_ticks(self, dense):
+        cfg, params = dense
+        eng = eng_mod.Engine(params, cfg, _ecfg())
+        stats = eng.run(_reqs(cfg, 2, repetition_penalty=1.3), max_ticks=300)
+        assert stats["completed"] == 2
+        assert stats["spec_ticks"] == 0
+        assert stats["penalized_requests"] == 2
+
+
+# ---------------------------------------------------------------------------
+# spec through preemption replay and journal recovery
+# ---------------------------------------------------------------------------
+class TestSpecRecovery:
+    def test_preempted_then_replayed_spec_is_bitwise(self, dense):
+        """Page pressure preempts a spec-decoding resident mid-flight; its
+        re-admission replays recorded tokens through spec ticks and the final
+        stream is still bitwise the one-shot oracle's."""
+        cfg, params = dense
+        ecfg = _ecfg(num_slots=2, max_cache=96, page_size=8, num_pages=10,
+                     admission_mode="preempt", prefill_chunk=8)
+        hog = ServeRequest(rid=0, tokens=np.arange(16, dtype=np.int32),
+                           params=SamplingParams(max_new_tokens=40),
+                           arrival=0)
+        late = _reqs(cfg, 2, seed=3, plens=(24,), steps=(10,))
+        for i, r in enumerate(late):
+            r.rid = i + 1
+            r.arrival = 2 + i
+        eng = eng_mod.Engine(params, cfg, ecfg)
+        stats = eng.run([hog] + late, max_ticks=500)
+        assert stats["completed"] == 3
+        assert stats["spec_ticks"] > 0
+        assert stats["preemptions"] > 0, "page pressure never preempted"
+        assert stats["replayed_tokens"] > 0
+        for req in eng.completed:
+            toks, _ = decode.generate(params, cfg, req.prompts(),
+                                      max_cache=ecfg.max_cache,
+                                      steps=req.max_new_tokens)
+            assert req.out_tokens == [int(t) for t in np.asarray(toks[0])], \
+                f"request {req.rid} diverged after preemption replay"
+
+    def test_journal_recovered_spec_is_bitwise(self, dense, tmp_path):
+        """A full-fleet power loss mid-trace, recovered from the journal onto
+        fresh spec-decoding replicas: every completion is bitwise the
+        uninterrupted non-speculative fleet's."""
+        cfg, params = dense
+
+        def ecfg():
+            return _ecfg(max_cache=96, policy="immune", num_classes=3,
+                         latency_budget=96.0)
+
+        def trace():
+            return traces.agentic_trace(cfg, sessions=2, turns=2,
+                                        base_prompt=16, grow_lens=(4, 6),
+                                        decode_lens=(6, 8), turn_gap=6)
+
+        ref_rt = rt_mod.Router(
+            [eng_mod.Engine(params, cfg,
+                            _ecfg(max_cache=96, policy="immune",
+                                  num_classes=3, latency_budget=96.0,
+                                  spec_decode=0, spec_draft_layers=0))
+             for _ in range(2)],
+            rt_mod.RouterConfig(policy="immune"))
+        ref = ref_rt.run(trace())
+        off = max(2, ref["ticks"] // 2)
+
+        def factory():
+            inj = FaultInjector(
+                FaultPlan.parse(f"poweroff@{off} restart@{off + 3}"))
+            fleet = [eng_mod.Engine(params, cfg, ecfg()) for _ in range(2)]
+            return rt_mod.Router(fleet, rt_mod.RouterConfig(policy="immune"),
+                                 injector=inj)
+
+        rt, stats = durability.run_durable(factory, trace(),
+                                           str(tmp_path / "wal"))
+        assert stats["restarts"] == 1
+        assert stats["completed"] == ref["completed"] == 4
+        assert _tokens_by_rid(rt) == _tokens_by_rid(ref_rt), \
+            "journal-recovered spec streams diverged from the clean fleet"
+        assert sum(e.spec_ticks for e in rt.engines) > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: repetition / presence / frequency penalties
+# ---------------------------------------------------------------------------
+class TestPenalties:
+    def test_neutral_penalties_bitwise_off(self, dense):
+        """A neutral lane beside a penalized neighbour in the same compiled
+        step emits bitwise the tokens of a run with no penalties anywhere —
+        the where-mask in ``penalize_logits`` returns neutral rows
+        untouched."""
+        cfg, params = dense
+
+        def serve(penalize_first):
+            reqs = _reqs(cfg, 3, plens=(8,), steps=(10,), stagger=0)
+            if penalize_first:
+                reqs[0].params = dataclasses.replace(
+                    reqs[0].params, repetition_penalty=1.4,
+                    presence_penalty=0.6)
+            eng = eng_mod.Engine(params, cfg, _ecfg(spec_decode=0,
+                                                    spec_draft_layers=0,
+                                                    num_slots=3))
+            assert eng.run(reqs, max_ticks=300)["completed"] == 3
+            return _tokens_by_rid(eng)
+
+        mixed, clean = serve(True), serve(False)
+        assert mixed[1] == clean[1] and mixed[2] == clean[2], \
+            "a penalized neighbour perturbed neutral lanes"
+
+    def test_nonzero_penalties_change_tokens_and_replay_exactly(self, dense):
+        cfg, params = dense
+        rng = np.random.default_rng(7)
+        toks = rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+
+        def one(**pkw):
+            req = ServeRequest(rid=0, tokens=toks.copy(),
+                               params=SamplingParams(max_new_tokens=24, **pkw))
+            return api.generate(params, cfg, req, max_cache=64).tokens
+
+        plain = one()
+        bent = one(repetition_penalty=1.8, presence_penalty=1.5,
+                   frequency_penalty=1.5)
+        assert plain != bent, "strong penalties left a greedy stream unchanged"
+
+        # engine-vs-oneshot parity with penalties active (greedy + sampled)
+        reqs = _reqs(cfg, 4, plens=(8,), steps=(10,),
+                     repetition_penalty=1.5, frequency_penalty=0.8)
+        for r in reqs[::2]:
+            r.params = dataclasses.replace(r.params, temperature=0.8,
+                                           top_p=0.9)
+        eng = eng_mod.Engine(params, cfg, _ecfg(spec_decode=0,
+                                                spec_draft_layers=0))
+        stats = eng.run(reqs, max_ticks=300)
+        assert stats["completed"] == 4 and stats["penalized_requests"] == 4
+        for req in eng.completed:
+            probe, out = _replay(params, cfg, req, 64)
+            assert req.out_tokens == out.tokens, \
+                f"penalized request {req.rid} diverged engine-vs-oneshot"
+
+    def test_penalty_counts_survive_preemption_replay(self, dense):
+        """The on-device count table is rebuilt at re-admission from recorded
+        tokens, so a preempted penalized request still replays bitwise."""
+        cfg, params = dense
+        ecfg = _ecfg(spec_decode=0, spec_draft_layers=0, num_slots=2,
+                     max_cache=96, page_size=8, num_pages=8,
+                     admission_mode="preempt")
+        reqs = _reqs(cfg, 3, plens=(16, 24), steps=(20, 10),
+                     repetition_penalty=1.4)
+        eng = eng_mod.Engine(params, cfg, ecfg)
+        stats = eng.run(reqs, max_ticks=500)
+        assert stats["completed"] == 3
+        assert stats["preemptions"] > 0
+        for req in eng.completed:
+            probe, out = _replay(params, cfg, req, ecfg.max_cache)
+            assert req.out_tokens == out.tokens
+
+    def test_param_validation(self):
+        with pytest.raises(ValueError):
+            SamplingParams(repetition_penalty=0.0)
+        assert not SamplingParams().has_penalties
+        assert SamplingParams(presence_penalty=0.1).has_penalties
+
+
+# ---------------------------------------------------------------------------
+# satellite: top-k alternative logprobs
+# ---------------------------------------------------------------------------
+class TestTopKLogprobs:
+    def test_engine_topk_matches_oneshot(self, dense):
+        """ids exact, values to 1e-5, engine-vs-oneshot — the top-k rows come
+        off the raw (pre-penalty, pre-temperature) distribution on both
+        backends."""
+        cfg, params = dense
+        reqs = _reqs(cfg, 4, plens=(8,), steps=(6,), logprobs=3)
+        for r in reqs[1::2]:
+            r.params = dataclasses.replace(r.params, temperature=0.8)
+        eng = eng_mod.Engine(params, cfg, _ecfg(spec_decode=0,
+                                                spec_draft_layers=0))
+        assert eng.run(reqs, max_ticks=300)["completed"] == 4
+        for req in eng.completed:
+            assert len(req.out_topk) == len(req.out_tokens) > 0
+            probe, out = _replay(params, cfg, req, 64)
+            assert req.out_tokens == out.tokens
+            assert out.top_logprobs is not None
+            for i, ((ids_e, vals_e), (ids_o, vals_o)) in enumerate(
+                    zip(req.out_topk, probe.out_topk)):
+                assert len(ids_e) == 3
+                assert ids_e == ids_o, \
+                    f"request {req.rid} pos {i}: top-k ids differ"
+                np.testing.assert_allclose(vals_e, vals_o, atol=1e-5)
+            # rows are sorted descending and bound the chosen logprob
+            for (ids_e, vals_e), lp in zip(req.out_topk, req.out_logprobs):
+                assert vals_e == sorted(vals_e, reverse=True)
+                assert vals_e[0] >= lp - 1e-5
+
+    def test_per_request_k_in_one_batch(self, dense):
+        """The compiled step computes the batch-max k; the host slices each
+        request back to its own k."""
+        cfg, params = dense
+        reqs = _reqs(cfg, 2, plens=(8,), steps=(5,), stagger=0)
+        reqs[0].params = dataclasses.replace(reqs[0].params, logprobs=2)
+        reqs[1].params = dataclasses.replace(reqs[1].params, logprobs=5)
+        eng = eng_mod.Engine(params, cfg, _ecfg(spec_decode=0,
+                                                spec_draft_layers=0))
+        assert eng.run(reqs, max_ticks=100)["completed"] == 2
+        by_rid = {r.rid: r for r in eng.completed}
+        assert all(len(ids) == 2 for ids, _ in by_rid[0].out_topk)
+        assert all(len(ids) == 5 for ids, _ in by_rid[1].out_topk)
+        for req in eng.completed:
+            probe, _ = _replay(params, cfg, req, 64)
+            assert req.out_topk[0][0] == probe.out_topk[0][0]
